@@ -1,0 +1,58 @@
+"""Fig. 1 analog: signSGD / SIGNUM / majority vote on the paper's toy
+quadratic (1000-dim, N(0,1) per-coordinate gradient noise), including the
+adversarial variants (27 workers, sign-flippers)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import theory
+
+
+def run(dim=1000, noise=1.0, steps=300, m_workers=27, lr=2e-2, alpha=0.0,
+        momentum=0.0, seed=0):
+    f, grad_oracle, x0 = theory.quadratic_problem(dim, noise, seed)
+    rng = np.random.default_rng(seed + 1)
+    x = x0.copy()
+    n_adv = int(round(alpha * m_workers))
+    mom = np.zeros((m_workers, dim))
+    traj = [f(x)]
+    for _ in range(steps):
+        votes = np.zeros(dim)
+        for m in range(m_workers):
+            g = grad_oracle(x, rng)
+            mom[m] = momentum * mom[m] + (1 - momentum) * g
+            s = np.sign(mom[m])
+            votes += (-s if m < n_adv else s)
+        x = x - lr * np.sign(votes)
+        traj.append(f(x))
+    return np.asarray(traj)
+
+
+def run_sgd(dim=1000, noise=1.0, steps=300, m_workers=27, lr=2e-2, seed=0):
+    f, grad_oracle, x0 = theory.quadratic_problem(dim, noise, seed)
+    rng = np.random.default_rng(seed + 1)
+    x = x0.copy()
+    traj = [f(x)]
+    for _ in range(steps):
+        g = np.mean([grad_oracle(x, rng) for _ in range(m_workers)], axis=0)
+        x = x - lr * g
+        traj.append(f(x))
+    return np.asarray(traj)
+
+
+def rows():
+    out = []
+    sgd = run_sgd()
+    out.append(("fig1/sgd_27workers_final_f", sgd[-1],
+                f"f0={sgd[0]:.1f}"))
+    for name, kw in [
+        ("signsgd_1worker", dict(m_workers=1)),
+        ("majority_27workers", dict(m_workers=27)),
+        ("signum_27workers_beta0.9", dict(m_workers=27, momentum=0.9)),
+        ("majority_27w_33pct_adversarial", dict(m_workers=27, alpha=1 / 3)),
+        ("majority_27w_44pct_adversarial", dict(m_workers=27, alpha=12 / 27)),
+    ]:
+        t = run(**kw)
+        out.append((f"fig1/{name}_final_f", t[-1],
+                    f"f0={t[0]:.1f};reduction={t[0] / max(t[-1], 1e-12):.1f}x"))
+    return out

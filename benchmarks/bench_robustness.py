@@ -1,0 +1,68 @@
+"""Fig. 4 analog: training a real (reduced) LM with majority vote while a
+fraction of the vote replicas behaves adversarially (sign inversion — the
+strongest non-cooperating adversary). Runs the actual distributed train
+step on 8 fake devices in a subprocess (the bench process keeps 1 device).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+_WORKER = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, sys
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from repro.configs.base import (ByzantineConfig, OptimizerConfig,
+                                    TrainConfig, get_config, reduced_config)
+    from repro.models import model as M
+    from repro.train import train_step as TS
+
+    mesh = jax.make_mesh((8, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    out = {}
+    for n_adv in [0, 1, 2, 3]:
+        cfg = reduced_config(get_config("glm4-9b"), num_layers=2)
+        tcfg = TrainConfig(
+            global_batch=8, seq_len=32,
+            optimizer=OptimizerConfig(kind="signum_vote", learning_rate=3e-3),
+            byzantine=ByzantineConfig(mode="sign_flip",
+                                      num_adversaries=n_adv))
+        art = TS.make_train_step(cfg, tcfg, mesh=mesh)
+        params, opt = TS.materialize_state(cfg, tcfg, art,
+                                           jax.random.PRNGKey(0), mesh)
+        batch = M.make_batch(cfg, 8, 32, jax.random.PRNGKey(1))
+        batch = jax.tree.map(lambda a: jax.device_put(
+            np.asarray(a), NamedSharding(mesh, P("data"))), batch)
+        losses = []
+        for i in range(40):
+            params, opt, met = art.step_fn(params, opt, batch, jnp.int32(i))
+            losses.append(float(met["loss"]))
+        out[str(n_adv)] = [losses[0], losses[-1]]
+    print("RESULT " + json.dumps(out))
+""")
+
+
+def rows():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    proc = subprocess.run([sys.executable, "-c", _WORKER], env=env,
+                          capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        return [("fig4/error", -1.0, proc.stderr[-200:])]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    res = json.loads(line[len("RESULT "):])
+    out = []
+    for n_adv, (first, last) in sorted(res.items()):
+        pct = int(n_adv) / 8 * 100
+        out.append((f"fig4/loss_drop_{pct:.0f}pct_adversarial",
+                    first - last,
+                    f"loss {first:.2f}->{last:.2f} (8 voters, "
+                    f"{n_adv} sign-flippers)"))
+    return out

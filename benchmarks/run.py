@@ -1,0 +1,55 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows:
+  fig1  toy-quadratic convergence incl. adversaries   (bench_convergence)
+  fig2  gradient-noise unimodality/symmetry on an LM  (bench_noise)
+  fig3  SNR vs the critical line                      (bench_noise)
+  fig4  Byzantine training robustness sweep           (bench_robustness)
+  fig5  communication volume/time vs dense all-reduce (bench_comm)
+  fig6  end-to-end step-time speedup model            (bench_speedup)
+  roofline  per-cell terms from the dry-run artifacts (roofline)
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--only fig1,fig5]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module keys (fig1..fig6,roofline)")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_comm, bench_convergence, bench_noise,
+                            bench_robustness, bench_speedup, roofline)
+    suites = {
+        "fig1": bench_convergence, "fig2": bench_noise, "fig3": bench_noise,
+        "fig4": bench_robustness, "fig5": bench_comm, "fig6": bench_speedup,
+        "roofline": roofline,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    seen_mods = set()
+    print("name,value,derived")
+    failures = 0
+    for key, mod in suites.items():
+        if only and key not in only:
+            continue
+        if id(mod) in seen_mods:
+            continue
+        seen_mods.add(id(mod))
+        try:
+            for name, value, derived in mod.rows():
+                print(f"{name},{value:.6g},{derived}", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{key}/ERROR,-1,see stderr", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""Atomic, async, mesh-reshardable checkpointing.
+
+Layout:  <dir>/step_<k>/
+            meta.json            (step, config fingerprint, tree structure)
+            arrays.npz           (flat param/opt-state arrays)
+            data_state.json      (pipeline cursor)
+         <dir>/LATEST            (atomic pointer file)
+
+Guarantees:
+* atomicity — writes go to ``step_<k>.tmp`` then ``os.rename``; a crash
+  mid-save never corrupts the restore path (rename is atomic on POSIX);
+* async — ``AsyncCheckpointer`` snapshots device arrays to host then
+  writes on a worker thread, so the train loop never blocks on disk;
+* elastic reshard — arrays are saved *unsharded* (gathered to host);
+  ``restore`` re-places them under any mesh/sharding, so a checkpoint from
+  the (16,16) mesh restores onto (8,16) or (2,16,16) survivor meshes
+  (DESIGN.md §6). Per-worker (Mode A) momentum with a leading vote-axis is
+  re-fit by truncate-or-zero-pad along axis 0 when the replica count
+  changes — joining replicas start with zero momentum, which Theorem 2
+  treats as a transiently-honest-but-stale voter.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> Any:
+    tree: Dict[str, Any] = {}
+    for k, v in flat.items():
+        parts = k.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def _encode_dtypes(flat: Dict[str, np.ndarray]
+                   ) -> Tuple[Dict[str, np.ndarray], Dict[str, str]]:
+    """npz cannot round-trip ml_dtypes (bfloat16 loads back as void);
+    view such arrays as uint16/uint8 and record the true dtype."""
+    native = {"float64", "float32", "float16", "int64", "int32", "int16",
+              "int8", "uint64", "uint32", "uint16", "uint8", "bool"}
+    out, dtypes = {}, {}
+    for k, v in flat.items():
+        if str(v.dtype) not in native:
+            dtypes[k] = str(v.dtype)
+            v = v.view(np.uint16 if v.dtype.itemsize == 2 else np.uint8)
+        out[k] = v
+    return out, dtypes
+
+
+def _decode_dtypes(flat: Dict[str, np.ndarray], dtypes: Dict[str, str]
+                   ) -> Dict[str, np.ndarray]:
+    import ml_dtypes
+    out = {}
+    for k, v in flat.items():
+        if k in dtypes:
+            name = dtypes[k]
+            dt = (np.dtype(getattr(ml_dtypes, name))
+                  if hasattr(ml_dtypes, name) else np.dtype(name))
+            v = v.view(dt)
+        out[k] = v
+    return out
+
+
+def save(ckpt_dir: str, step: int, params: Any, opt_state: Any,
+         data_state: Optional[Dict] = None, meta: Optional[Dict] = None
+         ) -> str:
+    """Blocking atomic save. Returns the final step directory."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat = {}
+    flat.update({f"params/{k}": v for k, v in _flatten(params).items()})
+    flat.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    flat, dtypes = _encode_dtypes(flat)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "dtypes": dtypes, **(meta or {})}, f)
+    with open(os.path.join(tmp, "data_state.json"), "w") as f:
+        json.dump(data_state or {}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # atomic LATEST pointer
+    ptr_tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(ptr_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def latest_step_dir(ckpt_dir: str) -> Optional[str]:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    path = os.path.join(ckpt_dir, name)
+    return path if os.path.isdir(path) else None
+
+
+def _refit_leading_axis(saved: np.ndarray, want_shape: Tuple[int, ...]
+                        ) -> np.ndarray:
+    """Elastic reshard of per-worker state: truncate or zero-pad axis 0."""
+    if saved.shape == tuple(want_shape):
+        return saved
+    if saved.shape[1:] == tuple(want_shape)[1:]:
+        n_want, n_have = want_shape[0], saved.shape[0]
+        if n_want <= n_have:
+            return saved[:n_want]
+        pad = np.zeros((n_want - n_have,) + saved.shape[1:], saved.dtype)
+        return np.concatenate([saved, pad], axis=0)
+    raise ValueError(
+        f"cannot reshard saved {saved.shape} -> wanted {want_shape}")
+
+
+def restore(ckpt_dir: str, like_params: Any = None, like_opt: Any = None,
+            shardings: Optional[Any] = None
+            ) -> Tuple[Any, Any, Dict, Dict]:
+    """Restore (params, opt_state, data_state, meta) from the LATEST step.
+
+    `like_*`: abstract trees (e.g. from eval_shape) — used to re-fit
+    per-worker leading axes under a different replica count and to verify
+    structure. `shardings`: matching tree of NamedShardings to device_put
+    under the (possibly different) restore mesh.
+    """
+    path = latest_step_dir(ckpt_dir)
+    if path is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta_all = json.load(f)
+    z = np.load(os.path.join(path, "arrays.npz"))
+    flat = _decode_dtypes({k: z[k] for k in z.files},
+                          meta_all.get("dtypes", {}))
+    params = _unflatten({k[len("params/"):]: v for k, v in flat.items()
+                         if k.startswith("params/")})
+    opt = _unflatten({k[len("opt/"):]: v for k, v in flat.items()
+                      if k.startswith("opt/")})
+
+    def fit(saved_tree, like_tree):
+        if like_tree is None:
+            return saved_tree
+        saved_flat = _flatten(saved_tree)
+        like_flat = jax.tree.leaves_with_path(like_tree)
+        out = dict(saved_flat)
+        for path_, leaf in like_flat:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path_)
+            if key in out:
+                out[key] = _refit_leading_axis(out[key], leaf.shape)
+        return _unflatten(out)
+
+    params = fit(params, like_params)
+    opt = fit(opt, like_opt)
+    if shardings is not None:
+        p_sh, o_sh = shardings
+        params = jax.tree.map(lambda a, s: jax.device_put(a, s), params, p_sh)
+        opt = jax.tree.map(lambda a, s: jax.device_put(a, s), opt, o_sh)
+    with open(os.path.join(path, "data_state.json")) as f:
+        data_state = json.load(f)
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    return params, opt, data_state, meta
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host then write on a daemon thread; at most one
+    outstanding save (a newer save waits for the previous to land, keeping
+    the LATEST pointer monotonic)."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        os.makedirs(ckpt_dir, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, params: Any, opt_state: Any,
+             data_state: Optional[Dict] = None,
+             meta: Optional[Dict] = None) -> None:
+        self.wait()
+        # device -> host snapshot happens NOW (so training may mutate)
+        params_h = jax.tree.map(np.asarray, params)
+        opt_h = jax.tree.map(np.asarray, opt_state)
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, params_h, opt_h, data_state, meta)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,69 @@
+"""Per-arch training presets: optimizer mode, FSDP, remat (DESIGN.md §3/§5).
+
+Mode A (paper-faithful per-worker momentum) wherever the momentum fits a
+chip; Mode B (vote-on-sign + global momentum, fused ZeRO backward) for the
+three archs whose per-replica momentum exceeds HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import (ByzantineConfig, MomentumMode,
+                                OptimizerConfig, ShapeCell, TrainConfig,
+                                VoteStrategy, get_config)
+
+# archs that need the scalable Mode-B + ZeRO-3 path
+MODE_B_ARCHS = ("qwen1.5-32b", "deepseek-67b", "qwen3-moe-235b-a22b")
+# Mode-A archs whose fp32 per-worker momentum is tight -> bf16 momentum
+BF16_MOMENTUM_ARCHS = ("gemma3-12b", "pixtral-12b", "glm4-9b",
+                       "qwen2-moe-a2.7b")
+# per-arch grad-accumulation for Mode A train cells (activation memory)
+MICROBATCHES = {"whisper-tiny": 8, "zamba2-1.2b": 4, "mamba2-2.7b": 4,
+                "qwen2-moe-a2.7b": 8, "qwen3-moe-235b-a22b": 4}
+
+
+def default_optimizer(arch: str, *, kind: str = "signum_vote",
+                      vote_strategy: Optional[VoteStrategy] = None
+                      ) -> OptimizerConfig:
+    if kind in ("sgd", "sgdm", "adam"):
+        return OptimizerConfig(kind=kind, learning_rate=1e-4, momentum=0.9)
+    if arch in MODE_B_ARCHS:
+        return OptimizerConfig(
+            kind="signsgd_vote",
+            momentum_mode=MomentumMode.GLOBAL,
+            vote_strategy=vote_strategy or VoteStrategy.HIERARCHICAL,
+            learning_rate=1e-4, momentum=0.9)
+    mom_dtype = ("bfloat16" if arch in BF16_MOMENTUM_ARCHS else "float32")
+    return OptimizerConfig(
+        kind="signum_vote",
+        momentum_mode=MomentumMode.PER_WORKER,
+        vote_strategy=vote_strategy or VoteStrategy.PSUM_INT8,
+        momentum_dtype=mom_dtype,
+        learning_rate=1e-4, momentum=0.9)
+
+
+def default_train_config(arch: str, cell: ShapeCell, *,
+                         kind: str = "signum_vote",
+                         vote_strategy: Optional[VoteStrategy] = None,
+                         byzantine: Optional[ByzantineConfig] = None
+                         ) -> TrainConfig:
+    opt = default_optimizer(arch, kind=kind, vote_strategy=vote_strategy)
+    # Mode A holds params replicated over 'data'; grad-accumulate in
+    # microbatches to bound activation memory (Mode B relies on ZeRO-3 +
+    # remat + sequence-parallel residuals instead).
+    # Mode B microbatching: each microbatch's backward votes (the fused
+    # reduce-scatter), and the +-1 votes accumulate in the slice-shaped
+    # grad buffer (~1 GB at 67B) — majority-of-microbatch-votes semantics,
+    # recorded in DESIGN.md §3.
+    micro = MICROBATCHES.get(arch, 8)
+    return TrainConfig(
+        global_batch=cell.global_batch,
+        seq_len=cell.seq_len,
+        microbatches=micro,
+        # big archs additionally use sqrt-remat over layer groups
+        remat="nested" if arch in MODE_B_ARCHS else "full",
+        fsdp=arch in MODE_B_ARCHS,
+        optimizer=opt,
+        byzantine=byzantine or ByzantineConfig(),
+    )

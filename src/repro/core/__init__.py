@@ -1,0 +1,3 @@
+"""Core: the paper's contribution — sign compression, majority vote,
+SIGNUM/signSGD optimizers, Byzantine adversaries, theory predictors."""
+from repro.core import byzantine, majority_vote, sign_compress, signum, theory  # noqa: F401

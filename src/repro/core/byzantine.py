@@ -1,0 +1,60 @@
+"""Byzantine adversary models (paper §3.4, Fig. 4).
+
+Adversaries are *non-cooperating*: each manipulates only its own sign
+vector, keyed on the replica's index along the vote axes. Transforms are
+jit-compatible and applied between local sign computation and the vote, so
+they compose with every vote strategy — including the fused
+vote-in-backward path.
+
+Modes
+  sign_flip  — send the negation (the paper's strongest adversary)
+  random     — send random ±1 (corrupted-worker model)
+  zero       — abstain every step (crashed/mute worker)
+  none       — honest
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ByzantineConfig
+
+
+def replica_index(axis_names: Sequence[str]) -> jax.Array:
+    """Linear index of this replica over the (manual) vote axes."""
+    idx = jnp.int32(0)
+    for name in axis_names:
+        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+    return idx
+
+
+def apply_adversary(signs: jax.Array, cfg: ByzantineConfig,
+                    axis_names: Sequence[str], *,
+                    step: jax.Array | None = None,
+                    salt: int = 0) -> jax.Array:
+    """Transform this replica's int8 sign tensor per the adversary model.
+
+    Replicas with linear index < cfg.num_adversaries act adversarially
+    (which replicas are adversarial is immaterial to the vote — only the
+    count matters, Theorem 2).
+    """
+    if cfg.mode == "none" or cfg.num_adversaries == 0:
+        return signs
+    idx = replica_index(axis_names)
+    is_adv = idx < cfg.num_adversaries
+    if cfg.mode == "sign_flip":
+        evil = -signs
+    elif cfg.mode == "zero":
+        evil = jnp.zeros_like(signs)
+    elif cfg.mode == "random":
+        key = jax.random.PRNGKey(cfg.seed + salt)
+        key = jax.random.fold_in(key, idx)
+        if step is not None:
+            key = jax.random.fold_in(key, step)
+        rnd = jax.random.bernoulli(key, 0.5, signs.shape)
+        evil = jnp.where(rnd, jnp.int8(1), jnp.int8(-1))
+    else:
+        raise ValueError(f"unknown byzantine mode {cfg.mode!r}")
+    return jnp.where(is_adv, evil, signs)

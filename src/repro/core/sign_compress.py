@@ -1,0 +1,91 @@
+"""Sign extraction and 1-bit packing (pure-jnp reference layer).
+
+Two sign conventions coexist (DESIGN.md §5):
+
+* ``sign_ternary`` — ``jnp.sign`` semantics, 0 maps to 0. Used by the
+  integer-sum vote strategies; a zero gradient (e.g. an expert no local
+  token routed to) *abstains* rather than voting +1.
+* ``sign_binary``  — ``x >= 0 -> +1 else -1``. The 1-bit wire format of the
+  paper: a packed bit can only encode two states.
+
+Packing is 32 signs per uint32 word, little-endian within the word. The
+Pallas kernels in ``repro.kernels`` implement the same layout; these jnp
+versions are their oracles and the fallback path.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+PACK = 32
+
+
+def sign_ternary(x: jax.Array) -> jax.Array:
+    return jnp.sign(x).astype(jnp.int8)
+
+
+def sign_binary(x: jax.Array) -> jax.Array:
+    return jnp.where(x >= 0, jnp.int8(1), jnp.int8(-1))
+
+
+def pad_to_pack(flat: jax.Array, multiple: int = PACK) -> Tuple[jax.Array, int]:
+    """Pad 1-D array to a multiple; returns (padded, original_len)."""
+    n = flat.shape[0]
+    rem = (-n) % multiple
+    if rem:
+        flat = jnp.pad(flat, (0, rem))
+    return flat, n
+
+
+def pack_signs(x: jax.Array) -> jax.Array:
+    """x (..., n) any real dtype, n % 32 == 0 -> uint32 (..., n // 32).
+
+    bit j of word w encodes sign(x[..., 32*w + j]) >= 0.
+    """
+    assert x.shape[-1] % PACK == 0, x.shape
+    bits = (x >= 0).astype(jnp.uint32)
+    words = bits.reshape(x.shape[:-1] + (x.shape[-1] // PACK, PACK))
+    # unrolled shift/OR: an or-reduction is not lowerable by the CPU SPMD
+    # partitioner (observed on the 256-device dry-run)
+    acc = jnp.zeros(words.shape[:-1], jnp.uint32)
+    for j in range(PACK):
+        acc = acc | (words[..., j] << jnp.uint32(j))
+    return acc
+
+
+def unpack_signs(packed: jax.Array, dtype=jnp.int8) -> jax.Array:
+    """uint32 (..., w) -> (..., 32*w) of ±1 in `dtype`."""
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    signs = jnp.where(bits == 1, 1, -1).astype(dtype)
+    return signs.reshape(packed.shape[:-1] + (packed.shape[-1] * PACK,))
+
+
+def popcount(x: jax.Array) -> jax.Array:
+    """Per-word population count of a uint32 array (SWAR)."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & 0x55555555)
+    x = (x & 0x33333333) + ((x >> 2) & 0x33333333)
+    x = (x + (x >> 4)) & 0x0F0F0F0F
+    return ((x * 0x01010101) >> 24).astype(jnp.int32)
+
+
+def packed_majority(packed: jax.Array) -> jax.Array:
+    """(M, w) packed votes -> (w,) packed majority.
+
+    Bit-sliced: for each bit position count set bits across M workers;
+    majority bit = count*2 > M (ties -> +1, consistent with sign_binary).
+    """
+    M = packed.shape[0]
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)   # (M, w, 32)
+    counts = jnp.sum(bits.astype(jnp.int32), axis=0)       # (w, 32)
+    maj = (2 * counts >= M).astype(jnp.uint32)
+    return jnp.bitwise_or.reduce(maj << shifts, axis=-1)
+
+
+def compression_ratio(dtype: jnp.dtype) -> float:
+    """Wire compression vs a dense gradient of `dtype` (per direction)."""
+    return jnp.dtype(dtype).itemsize * 8.0

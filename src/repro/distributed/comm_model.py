@@ -1,0 +1,56 @@
+"""Alpha-beta communication time model for TPU v5e meshes.
+
+Used by the speedup benchmarks (Fig. 5/6 analogs) to convert collective
+bytes — either analytic (core.majority_vote.comm_bytes_per_step) or parsed
+from compiled HLO (launch.hlo_stats) — into estimated wall-clock, and by
+the roofline's collective term.
+
+Constants (per the brief): 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI. v5e has a 2D torus, 4 ICI links per chip (2 per axis);
+cross-pod (DCI) bandwidth is taken at 25 GB/s per chip-pair link.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW_PER_LINK = 50e9       # bytes/s
+ICI_LINKS = 4                # 2D torus
+DCI_BW = 25e9                # bytes/s per chip (cross-pod)
+ALPHA_ICI = 1e-6             # per-collective latency (s)
+ALPHA_DCI = 10e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class CommEstimate:
+    bytes_ici: float
+    bytes_dci: float
+    time_s: float
+
+
+def collective_time(bytes_ici: float, bytes_dci: float = 0.0,
+                    n_collectives: int = 1) -> CommEstimate:
+    """Per-chip transit bytes -> seconds (bandwidth + latency terms)."""
+    t = (bytes_ici / (ICI_BW_PER_LINK * ICI_LINKS)
+         + bytes_dci / DCI_BW
+         + n_collectives * ALPHA_ICI
+         + (ALPHA_DCI if bytes_dci else 0.0))
+    return CommEstimate(bytes_ici, bytes_dci, t)
+
+
+def compute_time(flops_per_chip: float, mfu: float = 0.5) -> float:
+    return flops_per_chip / (PEAK_FLOPS * mfu)
+
+
+def memory_time(bytes_per_chip: float) -> float:
+    return bytes_per_chip / HBM_BW
+
+
+def step_time_estimate(flops_per_chip: float, hbm_bytes_per_chip: float,
+                       comm: CommEstimate, overlap: float = 0.7) -> float:
+    """Step wall-clock with `overlap` of comm hidden under compute."""
+    roof = max(compute_time(flops_per_chip, mfu=1.0),
+               memory_time(hbm_bytes_per_chip))
+    return roof + (1.0 - overlap) * comm.time_s + overlap * max(
+        0.0, comm.time_s - roof)

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the paper's compute hot spots (bit-pack, popcount
+majority vote, fused SIGNUM update) with jnp oracles in ref.py."""
+from repro.kernels import ops, ref  # noqa: F401

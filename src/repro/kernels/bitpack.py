@@ -1,0 +1,76 @@
+"""Pallas TPU kernels: sign bit-packing / unpacking (32 signs per uint32).
+
+The TPU adaptation of the paper's CUDA bit-pack: data is tiled into VMEM
+as (ROWS, 32*WORDS) blocks — the trailing dim a multiple of 128 lanes —
+and each block packs along the lane dimension with an unrolled shift/OR
+tree over the 32 sub-lanes of each output word. The MXU is not involved;
+this is pure VPU bit arithmetic, bandwidth-bound by design (1 read of the
+sign source, 1/32-size write).
+
+Block shapes: input (8, 4096) fp32/bf16 -> output (8, 128) uint32, i.e.
+one (8,128) output register tile per grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PACK = 32
+ROWS = 8
+WORDS = 128  # output lane dim; input lane dim = 32*128 = 4096
+
+
+def _bitpack_kernel(x_ref, out_ref):
+    x = x_ref[...]                                   # (ROWS, WORDS*32)
+    bits = (x >= 0).astype(jnp.uint32)
+    bits = bits.reshape(x.shape[0], x.shape[1] // PACK, PACK)
+    acc = jnp.zeros(bits.shape[:2], jnp.uint32)
+    for j in range(PACK):                            # unrolled shift/OR tree
+        acc = acc | (bits[:, :, j] << jnp.uint32(j))
+    out_ref[...] = acc
+
+
+def _bitunpack_kernel(p_ref, out_ref, *, dtype):
+    p = p_ref[...]                                   # (ROWS, WORDS)
+    cols = []
+    for j in range(PACK):
+        bit = (p >> jnp.uint32(j)) & jnp.uint32(1)
+        cols.append(jnp.where(bit == 1, 1, -1).astype(dtype))
+    out = jnp.stack(cols, axis=-1)                   # (ROWS, WORDS, 32)
+    out_ref[...] = out.reshape(p.shape[0], p.shape[1] * PACK)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitpack_2d(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """x (rows, 32*w) with rows % 8 == 0, w % 128 == 0 -> (rows, w) uint32."""
+    rows, n = x.shape
+    w = n // PACK
+    grid = (rows // ROWS, w // WORDS)
+    return pl.pallas_call(
+        _bitpack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS, WORDS * PACK),
+                               lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((ROWS, WORDS), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, w), jnp.uint32),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "interpret"))
+def bitunpack_2d(p: jax.Array, dtype=jnp.float32, *,
+                 interpret: bool = False) -> jax.Array:
+    """p (rows, w) uint32 -> (rows, 32*w) ±1 in `dtype`."""
+    rows, w = p.shape
+    grid = (rows // ROWS, w // WORDS)
+    return pl.pallas_call(
+        functools.partial(_bitunpack_kernel, dtype=dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS, WORDS), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((ROWS, WORDS * PACK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, w * PACK), dtype),
+        interpret=interpret,
+    )(p)

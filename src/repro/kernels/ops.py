@@ -1,0 +1,84 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle arbitrary 1-D/N-D inputs (pad + reshape to the kernels' tiled 2-D
+layout), and dispatch ``interpret=True`` automatically on non-TPU backends
+so the same call sites work in CPU tests and on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitpack as _bp, signum_update as _su, vote as _vt
+
+PACK = 32
+TILE = 8 * 128 * PACK  # elements per (ROWS, WORDS*32) block
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_2d(flat: jax.Array) -> Tuple[jax.Array, int]:
+    """Pad a 1-D array to a TILE multiple and reshape (rows, 4096)."""
+    n = flat.shape[0]
+    rem = (-n) % TILE
+    if rem:
+        flat = jnp.pad(flat, (0, rem))
+    return flat.reshape(-1, 128 * PACK), n
+
+
+def bitpack(x: jax.Array) -> jax.Array:
+    """Any-shape real array -> (ceil(n/32),) uint32 of packed sign bits
+    (padding bits are sign(0)=+1)."""
+    flat2d, n = _to_2d(x.reshape(-1))
+    packed = _bp.bitpack_2d(flat2d, interpret=_interpret())
+    return packed.reshape(-1)[: -(-n // PACK)]
+
+
+def bitunpack(packed: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
+    """(w,) uint32 -> (n,) ±1 `dtype` (first n of 32*w)."""
+    w = packed.shape[0]
+    rem = (-w) % (8 * 128)
+    if rem:
+        packed = jnp.pad(packed, (0, rem))
+    out = _bp.bitunpack_2d(packed.reshape(-1, 128), dtype,
+                           interpret=_interpret())
+    return out.reshape(-1)[:n]
+
+
+def majority(packed: jax.Array) -> jax.Array:
+    """(M, w) uint32 -> (w,) packed majority (ties -> +1)."""
+    m, w = packed.shape
+    rem = (-w) % _vt.WBLOCK
+    if rem:
+        packed = jnp.pad(packed, ((0, 0), (0, rem)))
+    return _vt.majority_packed(packed, interpret=_interpret())[:w]
+
+
+def momentum_sign_pack(g: jax.Array, m: jax.Array, beta: float
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Flat g/m (n,) -> (m_new (n,), packed (ceil(n/32),))."""
+    n = g.shape[0]
+    g2, _ = _to_2d(g)
+    m2, _ = _to_2d(m)
+    m_new, packed = _su.momentum_sign_pack(g2, m2, beta,
+                                           interpret=_interpret())
+    return m_new.reshape(-1)[:n], packed.reshape(-1)[: -(-n // PACK)]
+
+
+def apply_vote(p: jax.Array, votes: jax.Array, eta: float,
+               weight_decay: float) -> jax.Array:
+    """Flat p (n,), votes (ceil(n/32),) packed -> updated p (n,)."""
+    n = p.shape[0]
+    p2, _ = _to_2d(p)
+    w = votes.shape[0]
+    rem = p2.shape[0] * 128 - w
+    if rem:
+        votes = jnp.pad(votes, (0, rem))
+    out = _su.apply_vote(p2, votes.reshape(-1, 128), eta, weight_decay,
+                         interpret=_interpret())
+    return out.reshape(-1)[:n]

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the exact semantics the kernels must reproduce; tests sweep
+shapes/dtypes and ``assert_allclose`` kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sign_compress as sc
+
+PACK = sc.PACK
+
+
+def bitpack(x: jax.Array) -> jax.Array:
+    """(rows, 32*w) real -> (rows, w) uint32; bit j of word k = x[.,32k+j]>=0."""
+    return sc.pack_signs(x)
+
+
+def bitunpack(packed: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """(rows, w) uint32 -> (rows, 32*w) of ±1 in `dtype`."""
+    return sc.unpack_signs(packed, dtype)
+
+
+def majority(packed: jax.Array) -> jax.Array:
+    """(M, w) packed -> (w,) packed majority (ties -> +1)."""
+    return sc.packed_majority(packed)
+
+
+def momentum_sign_pack(g: jax.Array, m: jax.Array, beta: float
+                       ) -> tuple[jax.Array, jax.Array]:
+    """SIGNUM worker-side hot loop: m' = beta*m + (1-beta)*g;
+    packed = pack(sign(m')). g/m (rows, 32*w). Returns (m', packed)."""
+    m_new = beta * m + (1.0 - beta) * g.astype(m.dtype)
+    return m_new, sc.pack_signs(m_new)
+
+
+def apply_vote(p: jax.Array, votes_packed: jax.Array, eta: float,
+               weight_decay: float) -> jax.Array:
+    """x <- x - eta*(unpack(vote) + lambda*x); p (rows, 32*w)."""
+    v = sc.unpack_signs(votes_packed, jnp.float32)
+    p32 = p.astype(jnp.float32)
+    return (p32 - eta * (v + weight_decay * p32)).astype(p.dtype)

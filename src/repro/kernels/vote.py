@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: popcount majority vote over packed sign words.
+
+The "server" inner loop of the paper-faithful ``allgather_1bit`` strategy:
+after the packed all-gather every chip holds (M, w) uint32 words and must
+produce the (w,) packed majority. Bit-sliced counting: for each of the 32
+bit positions, count set bits across the M voters (vectorised over the
+word/lane dim), compare against M/2, re-pack. No unpacking to float ever
+touches HBM — the whole vote is integer VPU work on VMEM tiles.
+
+Block shape: (M, 512) words per grid step (M is small — the vote runs over
+data-parallel replicas, 16..32 — so a whole voter column fits VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PACK = 32
+WBLOCK = 512
+
+
+def _majority_kernel(p_ref, out_ref, *, m_voters: int):
+    p = p_ref[...]                                    # (M, WBLOCK) uint32
+    acc = jnp.zeros((p.shape[1],), jnp.uint32)
+    for j in range(PACK):                             # bit-sliced count
+        bits = (p >> jnp.uint32(j)) & jnp.uint32(1)   # (M, W)
+        cnt = jnp.sum(bits.astype(jnp.int32), axis=0)  # (W,)
+        maj = (2 * cnt >= m_voters).astype(jnp.uint32)
+        acc = acc | (maj << jnp.uint32(j))
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def majority_packed(packed: jax.Array, *, interpret: bool = False
+                    ) -> jax.Array:
+    """packed (M, w) uint32, w % 512 == 0 -> (w,) packed majority."""
+    m, w = packed.shape
+    grid = (w // WBLOCK,)
+    return pl.pallas_call(
+        functools.partial(_majority_kernel, m_voters=m),
+        grid=grid,
+        in_specs=[pl.BlockSpec((m, WBLOCK), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((WBLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.uint32),
+        interpret=interpret,
+    )(packed)

@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh (16,16) or (2,16,16), the
+abstract (never-allocated) train/serve state, lowers the jitted step,
+compiles it, and records:
+
+  * memory_analysis()        — proves the cell fits per-chip HBM,
+  * cost_analysis()          — HLO FLOPs / bytes for the roofline,
+  * parsed collective bytes  — the roofline's collective term
+                               (launch.hlo_stats),
+  * the config fingerprint (params, active params, mode, vote strategy).
+
+Results append to a JSON-lines file consumed by benchmarks/roofline.py
+and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-67b --shape train_4k
+  python -m repro.launch.dryrun --all                     # every cell
+  python -m repro.launch.dryrun --all --multi-pod         # 512-chip mesh
+  python -m repro.launch.dryrun --arch X --shape Y --opt sgdm   # baseline
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, get_config, list_archs
+from repro.configs.presets import MODE_B_ARCHS, default_train_config
+from repro.launch.hlo_stats import parse_collectives, summarize
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes, pod_stride
+from repro.models import model as M
+from repro.train import serve_step as SS, train_step as TS
+
+
+def skip_reason(arch: str, shape: str) -> Optional[str]:
+    cfg = get_config(arch)
+    for name, reason in cfg.skip_shapes:
+        if name == shape:
+            return reason
+    return None
+
+
+def _compile_stats(lowered, mesh) -> Dict[str, Any]:
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo, pod_stride(mesh))
+    n_chips = mesh.devices.size
+    return {
+        "compile_s": round(compile_s, 1),
+        "flops_per_chip": float(cost.get("flops", 0.0)),
+        "hbm_bytes_per_chip": float(cost.get("bytes accessed", 0.0)),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_per_chip": (mem.argument_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+        },
+        "collectives": summarize(colls),
+        "n_chips": n_chips,
+    }
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             opt_kind: str = "signum_vote",
+             vote_strategy: Optional[str] = None) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the stats record."""
+    from repro.configs.base import VoteStrategy
+
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "opt": opt_kind, "status": "ok",
+    }
+    reason = skip_reason(arch, shape)
+    if reason:
+        record.update(status="skip", reason=reason)
+        return record
+
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    record["params"] = cfg.param_count()
+    record["active_params"] = cfg.active_param_count()
+
+    vs = VoteStrategy(vote_strategy) if vote_strategy else None
+    with jax.set_mesh(mesh):
+        if cell.kind == "train":
+            tcfg = default_train_config(arch, cell, kind=opt_kind,
+                                        vote_strategy=vs)
+            record["mode"] = tcfg.optimizer.momentum_mode.value
+            record["vote_strategy"] = tcfg.optimizer.vote_strategy.value
+            record["fsdp"] = tcfg.fsdp
+            record["microbatches"] = tcfg.microbatches
+            record["remat"] = tcfg.remat
+            art = TS.make_train_step(cfg, tcfg, mesh)
+            p_abs, o_abs = TS.abstract_state(cfg, tcfg, art, mesh)
+            batch_struct = M.input_specs(cfg, cell)["batch"]
+            batch_abs = {
+                k: jax.ShapeDtypeStruct(
+                    v.shape, v.dtype,
+                    sharding=NamedSharding(mesh, art.batch_spec[k]))
+                for k, v in batch_struct.items()}
+            step_abs = jax.ShapeDtypeStruct((), jnp.int32,
+                                            sharding=NamedSharding(mesh, P()))
+            lowered = art.step_fn.lower(p_abs, o_abs, batch_abs, step_abs)
+        else:
+            fsdp = arch in MODE_B_ARCHS
+            record["fsdp"] = fsdp
+            inputs = SS.abstract_serve_inputs(cfg, cell, mesh, fsdp=fsdp)
+            if cell.kind == "prefill":
+                fn = SS.make_prefill_sharded(
+                    cfg, mesh, fsdp=fsdp, global_batch=cell.global_batch)
+                lowered = fn.lower(inputs["params"], inputs["batch"])
+            else:
+                fn = SS.make_decode_step(cfg)
+                lowered = fn.lower(inputs["params"], inputs["tokens"],
+                                   inputs["cache"], inputs["pos"])
+        record.update(_compile_stats(lowered, mesh))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--opt", default="signum_vote")
+    ap.add_argument("--vote-strategy", default=None)
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    with open(args.out, "a") as f:
+        for arch, shape in cells:
+            print(f"=== {arch} x {shape} "
+                  f"({'2x16x16' if args.multi_pod else '16x16'}) ===",
+                  flush=True)
+            try:
+                rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                               opt_kind=args.opt,
+                               vote_strategy=args.vote_strategy)
+            except Exception as e:  # record failures; the dry-run must not die
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if args.multi_pod else "16x16",
+                       "opt": args.opt, "status": "error",
+                       "error": f"{type(e).__name__}: {e}"}
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+            status = rec["status"]
+            if status == "ok":
+                mem = rec["memory"]["peak_bytes_per_chip"] / 2**30
+                print(f"  ok: {rec['flops_per_chip']:.3e} flops/chip, "
+                      f"peak {mem:.2f} GiB/chip, "
+                      f"{rec['collectives']['n_collectives']} collectives, "
+                      f"compile {rec['compile_s']}s", flush=True)
+            else:
+                print(f"  {status}: {rec.get('reason', rec.get('error'))}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

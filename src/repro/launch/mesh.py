@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Single pod: (16, 16) = 256 chips, axes ('data', 'model').
+Multi-pod:  (2, 16, 16) = 512 chips, axes ('pod', 'data', 'model') — the
+'pod' axis carries only int8 vote counts (DESIGN.md §2).
+
+A function, not a module-level constant: importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def pod_stride(mesh) -> int:
+    """Linear device-id stride between pods (for HLO group attribution)."""
+    sizes = mesh_axis_sizes(mesh)
+    return sizes.get("data", 1) * sizes.get("model", 1)

@@ -1,0 +1,82 @@
+"""Batched serving driver: prefill a batch of prompts, then decode tokens.
+
+CPU-scale entry point (the same decode/prefill steps lower on the
+production mesh in the dry-run):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced \\
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, reduced_config
+from repro.models import model as M
+from repro.train.serve_step import make_decode_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init_params(cfg, key)
+    batch = M.make_batch(cfg, args.batch, args.prompt_len, key)
+
+    max_len = args.prompt_len + args.gen
+    # prefill token-by-token through the decode path for recurrent archs;
+    # transformer archs use the batched prefill
+    t0 = time.time()
+    logits, cache = jax.jit(lambda p, b: M.prefill(cfg, p, b))(params, batch)
+    # re-home the cache to max_len for decoding
+    cache_full = M.init_cache(cfg, args.batch, max_len)
+    if "k" in cache and cache["k"].shape[2] <= max_len:
+        S = cache["k"].shape[2]
+        for kk in cache:
+            cache_full[kk] = jax.lax.dynamic_update_slice(
+                cache_full[kk], cache[kk].astype(cache_full[kk].dtype),
+                (0,) * 2 + (0,) * (cache_full[kk].ndim - 2))
+    else:
+        cache_full = cache
+    prefill_s = time.time() - t0
+    print(f"prefill: {args.batch}x{args.prompt_len} in {prefill_s:.2f}s")
+
+    decode = make_decode_step(cfg)
+    tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    out = [tokens]
+    t0 = time.time()
+    for i in range(args.gen):
+        pos = jnp.int32(args.prompt_len + i)
+        logits_t, cache_full = decode(params, tokens, cache_full, pos)
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            tokens = jax.random.categorical(
+                sub, logits_t / args.temperature, axis=-1
+            ).astype(jnp.int32)[:, None]
+        else:
+            tokens = jnp.argmax(logits_t, axis=-1).astype(jnp.int32)[:, None]
+        out.append(tokens)
+    gen_s = time.time() - t0
+    toks = jnp.concatenate(out, axis=1)
+    print(f"decode: {args.gen} steps x batch {args.batch} in {gen_s:.2f}s "
+          f"({args.gen * args.batch / max(gen_s, 1e-9):.1f} tok/s)")
+    print("sampled token ids (first row):", np.asarray(toks)[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

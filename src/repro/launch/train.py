@@ -1,0 +1,116 @@
+"""Training launcher with checkpoint/restart, watchdog and elastic rescale.
+
+CPU-scale entry point (full-scale runs use the same code path under a real
+TPU mesh — the mesh simply comes from jax.devices()):
+
+  PYTHONPATH=src python -m repro.launch.train --arch zamba2-1.2b \\
+      --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Fault-tolerance loop: every step runs under a Watchdog; on timeout or
+crash the launcher restores the latest checkpoint (possibly onto a smaller
+survivor mesh via distributed.fault_tolerance.plan_rescale) and resumes.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import AsyncCheckpointer, latest_step_dir, restore
+from repro.configs.base import (SHAPES, ByzantineConfig, OptimizerConfig,
+                                ShapeCell, TrainConfig, get_config,
+                                reduced_config)
+from repro.configs.presets import default_train_config
+from repro.data.pipeline import SyntheticLMPipeline
+from repro.distributed.fault_tolerance import Watchdog
+from repro.models import model as M
+from repro.train import train_step as TS
+
+
+def build(arch: str, *, reduced: bool, batch: int, seq: int,
+          opt_kind: str, lr: float, momentum: float, microbatches: int,
+          byz_mode: str, byz_n: int):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = reduced_config(cfg)
+    opt = OptimizerConfig(kind=opt_kind, learning_rate=lr, momentum=momentum)
+    tcfg = TrainConfig(
+        global_batch=batch, seq_len=seq, microbatches=microbatches,
+        optimizer=opt,
+        byzantine=ByzantineConfig(mode=byz_mode, num_adversaries=byz_n))
+    return cfg, tcfg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config of the same family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--opt", default="signum_vote")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--byzantine", default="none")
+    ap.add_argument("--adversaries", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--watchdog-s", type=float, default=600.0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg, tcfg = build(args.arch, reduced=args.reduced, batch=args.batch,
+                      seq=args.seq, opt_kind=args.opt, lr=args.lr,
+                      momentum=args.momentum,
+                      microbatches=args.microbatches,
+                      byz_mode=args.byzantine, byz_n=args.adversaries)
+    art = TS.make_train_step(cfg, tcfg, mesh=None)
+    params, opt_state = TS.materialize_state(
+        cfg, tcfg, art, jax.random.PRNGKey(args.seed))
+    pipe = SyntheticLMPipeline(cfg, args.batch, args.seq, seed=args.seed)
+
+    ckpt: Optional[AsyncCheckpointer] = None
+    start_step = 0
+    if args.ckpt_dir:
+        ckpt = AsyncCheckpointer(args.ckpt_dir)
+        if latest_step_dir(args.ckpt_dir):
+            params, opt_state, data_state, meta = restore(
+                args.ckpt_dir, like_params=params, like_opt=opt_state)
+            pipe.restore(data_state)
+            start_step = int(meta["step"]) + 1
+            print(f"restored checkpoint at step {meta['step']}")
+
+    pipe.state.step = start_step
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+        with Watchdog(args.watchdog_s) as wd:
+            params, opt_state, metrics = art.step_fn(
+                params, opt_state, batch, jnp.int32(step))
+            loss = float(metrics["loss"])
+        if wd.fired:
+            raise TimeoutError(f"step {step} exceeded {args.watchdog_s}s")
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:5d}  loss {loss:8.4f}  "
+                  f"({dt / max(step - start_step + 1, 1):.3f}s/step)",
+                  flush=True)
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step, params, opt_state, pipe.checkpoint(),
+                      meta={"arch": args.arch, "step": step})
+    if ckpt:
+        ckpt.save(args.steps - 1, params, opt_state, pipe.checkpoint(),
+                  meta={"arch": args.arch, "step": args.steps - 1})
+        ckpt.wait()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

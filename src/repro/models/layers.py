@@ -1,0 +1,659 @@
+"""Shared neural-net layers: norms, RoPE, GQA attention, SwiGLU MLP.
+
+All functions are pure; parameters arrive as individual arrays (slices of
+the flat stacked-parameter dict). Compute dtype follows the inputs
+(bf16 by default); softmax and normalization statistics run in fp32.
+
+Attention is exact but *query-chunked*: for long sequences the score
+matrix is materialised only ``(B, H, chunk, T)`` at a time (lax.scan over
+query chunks, each chunk rematerialised in the backward pass), which keeps
+peak memory linear in ``T`` per chunk — the pure-JAX analogue of
+memory-efficient attention. Supports causal, sliding-window (gemma3),
+bidirectional (whisper encoder) and single-token decode-vs-cache paths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import BATCH, shard
+
+Q_CHUNK = 1024  # query-chunk size for long-sequence attention
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def _row_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    """sum(a*b) over the last dim with fp32 accumulation, WITHOUT operand
+    promotion (jnp.einsum's VJP upcasts operands to fp32, materialising
+    full-stream fp32 copies — measured 6x (B,S,d) fp32 buffers per layer at
+    deepseek-67b scale; lax.dot_general keeps operands bf16)."""
+    nd = a.ndim - 1
+    dims = (((nd,), (nd,)), (tuple(range(nd)), tuple(range(nd))))
+    return jax.lax.dot_general(a, b, dims,
+                               preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with an explicitly bf16 backward.
+
+    Statistics (sum-of-squares, per-position inv-rms) accumulate in fp32;
+    every stream-sized tensor in forward AND backward stays in the input
+    dtype. The naive formulation's VJP drags fp32 copies of the residual
+    stream through every layer.
+    """
+    return _rms_fwd(x, scale, eps)[0]
+
+
+def _rms_fwd(x, scale, eps):
+    inv = jax.lax.rsqrt(_row_dot(x, x) / x.shape[-1] + eps)   # (B,S) f32
+    y = x * inv.astype(x.dtype)[..., None] * scale.astype(x.dtype)
+    return y, (x, scale, inv)
+
+
+def _rms_bwd(eps, res, g):
+    x, scale, inv = res
+    d = x.shape[-1]
+    invb = inv.astype(x.dtype)[..., None]
+    t = g * scale.astype(x.dtype)                              # bf16 stream
+    m = _row_dot(x, t) / d                                     # (B,S) f32
+    coef = (m * inv ** 3).astype(x.dtype)[..., None]
+    dx = t * invb - x * coef
+    dscale = jnp.sum((g * x * invb).astype(jnp.float32),
+                     axis=tuple(range(x.ndim - 1))).astype(scale.dtype)
+    return dx, dscale
+
+
+rms_norm.defvjp(_rms_fwd, _rms_bwd)
+
+
+# ---------------------------------------------------------------------------
+# positions
+# ---------------------------------------------------------------------------
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,) int32 -> cos/sin (..., head_dim//2) fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, D); cos/sin (..., S, D//2) broadcast over heads."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, d_model: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings; positions (...,) int."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10_000.0) / max(half - 1, 1)))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention core
+# ---------------------------------------------------------------------------
+
+
+def _attn_form(num_heads: int, num_kv: int) -> str:
+    """How to keep attention sharded over 'model' (GQA reshape (H)->(K,G)
+    breaks head sharding whenever K doesn't divide the axis — measured as
+    a 16 GiB all-heads score gather per q-chunk per layer on deepseek
+    prefill, 45.6 TB/chip/step):
+
+      grouped — K divides the axis: shard kv heads (zamba2, qwen2-moe);
+      repeat  — H divides but K doesn't: repeat KV to H heads, shard H
+                (deepseek, glm4, gemma3, pixtral, qwen3);
+      seq     — neither divides (qwen1.5 H=40, whisper H=6): shard the
+                query-chunk dim of the scores instead.
+    """
+    from repro.distributed.sharding import mesh_axis_size
+    m = mesh_axis_size("model")
+    if m <= 1 or num_kv % m == 0:
+        return "grouped"
+    if num_heads % m == 0:
+        return "repeat"
+    return "seq"
+
+
+def _scores_softmax_out(q: jax.Array, k: jax.Array, v: jax.Array,
+                        mask: Optional[jax.Array], scale: float,
+                        form: str = "grouped") -> jax.Array:
+    """q (B,S,K,G,D), k/v (B,T,K,D), mask broadcastable to (B,K,G,S,T)."""
+    if form == "grouped":
+        scores = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                            preferred_element_type=jnp.float32) * scale
+        scores = shard(scores, None, "model", None, None, None)
+        if mask is not None:
+            scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+        probs = jax.nn.softmax(scores, axis=-1)
+        probs = shard(probs, None, "model", None, None, None)
+        out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+        return out
+    # repeat / seq forms: flatten to (B,S,H,D) with KV repeated per group
+    B, S, K, G, D = q.shape
+    qh = q.reshape(B, S, K * G, D)
+    kh = jnp.repeat(k, G, axis=2) if G > 1 else k
+    vh = jnp.repeat(v, G, axis=2) if G > 1 else v
+    spec = ((None, "model", None, None) if form == "repeat"
+            else (None, None, "model", None))   # shard the q-chunk rows
+    scores = jnp.einsum("bshd,bthd->bhst", qh, kh,
+                        preferred_element_type=jnp.float32) * scale
+    scores = shard(scores, *spec)
+    if mask is not None:
+        # mask arrives as (..,K,G,S,T) or broadcastable; flatten head dims
+        m = jnp.broadcast_to(mask, mask.shape)
+        if m.ndim == 5:
+            m = m.reshape(m.shape[0], -1, m.shape[3], m.shape[4])
+        scores = jnp.where(m, scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = shard(probs, *spec)
+    out = jnp.einsum("bhst,bthd->bshd", probs.astype(vh.dtype), vh)
+    return out.reshape(B, S, K, G, D)
+
+
+def _causal_window_mask(q_pos: jax.Array, kv_pos: jax.Array,
+                        window: Optional[jax.Array]) -> jax.Array:
+    """(S,T) bool; window None => plain causal, else sliding window.
+
+    `window` may be a traced scalar (per-layer local/global selection under
+    a layer scan)."""
+    rel = q_pos[:, None] - kv_pos[None, :]
+    mask = rel >= 0
+    if window is not None:
+        mask = mask & (rel < window)
+    return mask
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool,
+              q_positions: Optional[jax.Array] = None,
+              kv_positions: Optional[jax.Array] = None,
+              window: Optional[jax.Array] = None,
+              kv_valid_len: Optional[jax.Array] = None,
+              q_chunk: int = Q_CHUNK) -> jax.Array:
+    """Exact attention with GQA grouping and query chunking.
+
+    q: (B, S, H, D); k/v: (B, T, K, D) with H = K * G.
+    Returns (B, S, H, D).
+    """
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = D ** -0.5
+    qg = q.reshape(B, S, K, G, D)
+    form = _attn_form(H, K)
+
+    if q_positions is None:
+        q_positions = jnp.arange(S)
+    if kv_positions is None:
+        kv_positions = jnp.arange(T)
+
+    def mask_for(qpos: jax.Array) -> Optional[jax.Array]:
+        m = None
+        if causal:
+            m = _causal_window_mask(qpos, kv_positions, window)
+        if kv_valid_len is not None:
+            valid = kv_positions[None, :] < kv_valid_len[:, None]  # (B,T)
+            valid = valid[:, None, None, None, :]
+            m = valid if m is None else (m[None, None, None] & valid)
+        if m is not None and m.ndim == 2:
+            m = m[None, None, None]  # (1,1,1,S,T)
+        return m
+
+    if S <= max(q_chunk, 1) or S % q_chunk != 0:
+        out = _scores_softmax_out(qg, k, v, mask_for(q_positions), scale,
+                                  form)
+        return out.reshape(B, S, H, D)
+
+    # --- chunked path: scan over query chunks, remat each chunk ---
+    n_chunks = S // q_chunk
+    qg_c = qg.reshape(B, n_chunks, q_chunk, K, G, D)
+    qpos_c = q_positions.reshape(n_chunks, q_chunk)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        q_i, qpos_i = xs
+        o = _scores_softmax_out(q_i, k, v, mask_for(qpos_i), scale, form)
+        return carry, o
+
+    _, out_c = jax.lax.scan(
+        body, None, (jnp.moveaxis(qg_c, 1, 0), qpos_c))
+    out = jnp.moveaxis(out_c, 0, 1).reshape(B, S, H, D)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# attention block (projection + rope + core + output)
+# ---------------------------------------------------------------------------
+
+
+def attn_project_qkv(p: dict, prefix: str, x: jax.Array, num_heads: int,
+                     num_kv_heads: int, head_dim: int, *, bias: bool
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    q = x @ p[f"{prefix}_wq"]
+    k = x @ p[f"{prefix}_wk"]
+    v = x @ p[f"{prefix}_wv"]
+    if bias:
+        q = q + p[f"{prefix}_bq"]
+        k = k + p[f"{prefix}_bk"]
+        v = v + p[f"{prefix}_bv"]
+    q = q.reshape(B, S, num_heads, head_dim)
+    k = k.reshape(B, S, num_kv_heads, head_dim)
+    v = v.reshape(B, S, num_kv_heads, head_dim)
+    return q, k, v
+
+
+def self_attention_block(
+    p: dict, prefix: str, x: jax.Array, cfg, *,
+    causal: bool = True,
+    window: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    use_rope: bool = True,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full self-attention sublayer (no residual). Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q, k, v = attn_project_qkv(p, prefix, x, H, K, hd, bias=cfg.qkv_bias)
+    q = shard(q, BATCH, None, "model", None)
+    k = shard(k, BATCH, None, None, None)
+    v = shard(v, BATCH, None, None, None)
+    if positions is None:
+        positions = jnp.arange(S)
+    if use_rope and cfg.rope_theta:
+        cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    out = attention(q, k, v, causal=causal,
+                    q_positions=positions, kv_positions=positions,
+                    window=window)
+    out = shard(out, BATCH, None, "model", None)
+    out = out.reshape(B, S, H * hd) @ p[f"{prefix}_wo"]
+    return out, (k, v)
+
+
+def cross_attention_block(p: dict, prefix: str, x: jax.Array,
+                          k: jax.Array, v: jax.Array, cfg) -> jax.Array:
+    """Cross-attention against precomputed encoder k/v (whisper)."""
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = x @ p[f"{prefix}_wq"]
+    if cfg.qkv_bias:
+        q = q + p[f"{prefix}_bq"]
+    q = q.reshape(B, S, H, hd)
+    out = attention(q, k, v, causal=False)
+    return out.reshape(B, S, H * hd) @ p[f"{prefix}_wo"]
+
+
+def project_kv_cross(p: dict, prefix: str, enc: jax.Array, cfg
+                     ) -> Tuple[jax.Array, jax.Array]:
+    B, T, _ = enc.shape
+    K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    k = enc @ p[f"{prefix}_wk"]
+    v = enc @ p[f"{prefix}_wv"]
+    if cfg.qkv_bias:
+        k = k + p[f"{prefix}_bk"]
+        v = v + p[f"{prefix}_bv"]
+    return k.reshape(B, T, K, hd), v.reshape(B, T, K, hd)
+
+
+# --- decode path (single new token against a cache) -----------------------
+
+KV_CHUNK = 4096  # online-softmax chunk for long / quantized caches
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(..., hd) bf16 -> (int8 values, (...,) bf16 scale), symmetric."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None]).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _decode_attention_chunked(qg: jax.Array, k_cache: jax.Array,
+                              v_cache: jax.Array, pos: jax.Array,
+                              window: Optional[jax.Array],
+                              k_scale: Optional[jax.Array],
+                              v_scale: Optional[jax.Array],
+                              scale: float) -> jax.Array:
+    """Online-softmax (flash-decode) attention of one query against a long
+    (optionally int8-quantized) cache; dequantisation happens per KV chunk
+    so the full bf16 cache never materialises.
+
+    qg (B,1,K,G,D); caches (B,T,K,D); scales (B,T,K) or None.
+    """
+    B, _, K, G, D = qg.shape
+    T = k_cache.shape[1]
+    chunk = min(KV_CHUNK, T)
+    n_chunks = T // chunk
+    compute_dt = jnp.bfloat16 if k_scale is not None else k_cache.dtype
+    qc = qg.astype(compute_dt)
+
+    def body(carry, idx):
+        m, num, den = carry
+        start = idx * chunk
+        # optimization_barrier blocks XLA from canonicalising
+        # convert(slice(cache)) into slice(convert(cache)) and hoisting a
+        # full-cache fp32 copy out of the loop (measured 2 x 6.4 GiB on
+        # deepseek decode_32k).
+        ks = jax.lax.optimization_barrier(
+            jax.lax.dynamic_slice_in_dim(k_cache, start, chunk, 1))
+        vs = jax.lax.optimization_barrier(
+            jax.lax.dynamic_slice_in_dim(v_cache, start, chunk, 1))
+        if k_scale is not None:
+            ksc = jax.lax.dynamic_slice_in_dim(k_scale, start, chunk, 1)
+            vsc = jax.lax.dynamic_slice_in_dim(v_scale, start, chunk, 1)
+            ks = ks.astype(compute_dt) * ksc.astype(compute_dt)[..., None]
+            vs = vs.astype(compute_dt) * vsc.astype(compute_dt)[..., None]
+        kv_pos = start + jnp.arange(chunk)
+        valid = kv_pos <= pos
+        if window is not None:
+            valid = valid & (pos - kv_pos < window)
+        # chunk-sized tensors stay in the cache dtype; only the (B,K,G,1,C)
+        # scores and running stats are fp32
+        s = jnp.einsum("bskgd,btkd->bkgst", qc, ks
+                       ).astype(jnp.float32) * scale
+        s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # fully-masked chunks (m or m_new == -inf) must not poison the
+        # accumulators: exp(-inf - -inf) = NaN (found by test_flash_decode
+        # on windowed decode, where early chunks lie outside the window)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        num = num * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(compute_dt), vs
+        ).astype(jnp.float32)
+        den = den * corr + jnp.sum(p, axis=-1)
+        return (m_new, num, den), None
+
+    m0 = jnp.full((B, K, G, 1), -jnp.inf, jnp.float32)
+    num0 = jnp.zeros((B, K, G, 1, D), jnp.float32)
+    den0 = jnp.zeros((B, K, G, 1), jnp.float32)
+    (m, num, den), _ = jax.lax.scan(body, (m0, num0, den0),
+                                    jnp.arange(n_chunks))
+    out = num / jnp.maximum(den[..., None], 1e-30)
+    return jnp.moveaxis(out, 3, 1)  # (B,1,K,G,D)
+
+
+def _flash_decode_local(qg, kc, vc, ksc, vsc, pos, shard_start, window,
+                        scale):
+    """Shard-local online-softmax over the local KV shard.
+
+    qg (B,1,K,G,D); kc/vc (B,T_loc,K,D); returns (m, num, den) partials.
+    """
+    B, _, K, G, D = qg.shape
+    T_loc = kc.shape[1]
+    chunk = min(KV_CHUNK, T_loc)
+    n_chunks = T_loc // chunk
+    compute_dt = jnp.bfloat16 if ksc is not None else kc.dtype
+    qc = qg.astype(compute_dt)
+
+    def body(carry, idx):
+        m, num, den = carry
+        start = idx * chunk
+        ks = jax.lax.optimization_barrier(
+            jax.lax.dynamic_slice_in_dim(kc, start, chunk, 1))
+        vs = jax.lax.optimization_barrier(
+            jax.lax.dynamic_slice_in_dim(vc, start, chunk, 1))
+        if ksc is not None:
+            k_s = jax.lax.dynamic_slice_in_dim(ksc, start, chunk, 1)
+            v_s = jax.lax.dynamic_slice_in_dim(vsc, start, chunk, 1)
+            ks = ks.astype(compute_dt) * k_s.astype(compute_dt)[..., None]
+            vs = vs.astype(compute_dt) * v_s.astype(compute_dt)[..., None]
+        kv_pos = shard_start + start + jnp.arange(chunk)
+        valid = kv_pos <= pos
+        if window is not None:
+            valid = valid & (pos - kv_pos < window)
+        s = jnp.einsum("bskgd,btkd->bkgst", qc, ks
+                       ).astype(jnp.float32) * scale
+        s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        pr = jnp.exp(s - m_safe[..., None])
+        pr = jnp.where(jnp.isfinite(s), pr, 0.0)
+        num = num * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", pr.astype(compute_dt), vs
+        ).astype(jnp.float32)
+        den = den * corr + jnp.sum(pr, axis=-1)
+        return (m_new, num, den), None
+
+    m0 = jnp.full((B, K, G, 1), -jnp.inf, jnp.float32)
+    num0 = jnp.zeros((B, K, G, 1, D), jnp.float32)
+    den0 = jnp.zeros((B, K, G, 1), jnp.float32)
+    (m, num, den), _ = jax.lax.scan(body, (m0, num0, den0),
+                                    jnp.arange(n_chunks))
+    return m, num, den
+
+
+def _masked_local_update(cache, new, pos, shard_start):
+    """Write `new` (B,1,...) at global `pos` iff it lands in this shard."""
+    T_loc = cache.shape[1]
+    local = pos - shard_start
+    in_range = (local >= 0) & (local < T_loc)
+    idx = jnp.clip(local, 0, T_loc - 1)
+    start = (0, idx) + (0,) * (cache.ndim - 2)
+    old = jax.lax.dynamic_slice(cache, start, new.shape)
+    val = jnp.where(in_range, new.astype(cache.dtype), old)
+    return jax.lax.dynamic_update_slice(cache, val, start)
+
+
+def flash_decode_sharded(q, k, v, k_cache, v_cache, pos, *, window=None,
+                         k_scale=None, v_scale=None, axis: str = "model"):
+    """Distributed flash-decode: cache sequence-sharded over `axis`.
+
+    Each shard updates its slice locally (no resharded dynamic-update —
+    the naive SPMD lowering round-trips the whole cache through fp32
+    selects) and computes a local online softmax; the cross-shard combine
+    exchanges only (m, num, den): ~(B,K,G,D) floats per layer.
+
+    Returns (out (B,1,K,G,D) f32, new caches [, new scales]).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    B, _, K, D = k.shape
+    H = q.shape[2]
+    scale = D ** -0.5
+    qg = q.reshape(B, 1, K, H // K, D)
+    quantized = k_scale is not None
+
+    def local_fn(qg, k_new, v_new, kc, vc, ksc, vsc, pos):
+        nshard = jax.lax.axis_size(axis)
+        t_loc = kc.shape[1]
+        shard_start = jax.lax.axis_index(axis) * t_loc
+        if quantized:
+            kq, ks_new = quantize_kv(k_new)
+            vq, vs_new = quantize_kv(v_new)
+            kc = _masked_local_update(kc, kq, pos, shard_start)
+            vc = _masked_local_update(vc, vq, pos, shard_start)
+            ksc = _masked_local_update(ksc, ks_new, pos, shard_start)
+            vsc = _masked_local_update(vsc, vs_new, pos, shard_start)
+        else:
+            kc = _masked_local_update(kc, k_new, pos, shard_start)
+            vc = _masked_local_update(vc, v_new, pos, shard_start)
+            ksc = vsc = None  # dummies in the unquantized path
+        m, num, den = _flash_decode_local(qg, kc, vc, ksc, vsc, pos,
+                                          shard_start, window, scale)
+        m_g = jax.lax.pmax(m, axis)
+        w = jnp.exp(m - m_g)
+        num = jax.lax.psum(num * w[..., None], axis)
+        den = jax.lax.psum(den * w, axis)
+        out = num / jnp.maximum(den[..., None], 1e-30)
+        if quantized:
+            return out, kc, vc, ksc, vsc
+        return out, kc, vc
+
+    cache_spec = P(None, axis, None, None)
+    scale_spec = P(None, axis, None)
+    in_specs = (P(), P(), P(), cache_spec, cache_spec,
+                scale_spec if quantized else P(),
+                scale_spec if quantized else P(), P())
+    out_specs = ((P(), cache_spec, cache_spec)
+                 + ((scale_spec, scale_spec) if quantized else ()))
+    fn = jax.shard_map(local_fn, in_specs=in_specs, out_specs=out_specs,
+                       axis_names={axis}, check_vma=False)
+    ksc_in = k_scale if quantized else jnp.zeros((), jnp.float32)
+    vsc_in = v_scale if quantized else jnp.zeros((), jnp.float32)
+    return fn(qg, k, v, k_cache, v_cache, ksc_in, vsc_in, pos)
+
+
+def _should_flash_decode(num_kv_heads: int, seq_len: int) -> bool:
+    """Use the sharded flash-decode when the cache is sequence-sharded
+    (kv heads don't divide the model axis) and long enough to matter."""
+    from repro.distributed.sharding import mesh_axis_size
+    msize = mesh_axis_size("model")
+    return (msize > 1 and num_kv_heads % msize != 0
+            and seq_len % msize == 0 and seq_len >= 4096)
+
+
+def decode_self_attention(
+    p: dict, prefix: str, x: jax.Array, cfg, *,
+    k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array,
+    use_rope: bool = True, window: Optional[jax.Array] = None,
+    k_scale: Optional[jax.Array] = None, v_scale: Optional[jax.Array] = None,
+):
+    """x (B,1,d); caches (B,Smax,K,hd) bf16 or int8 (+scales).
+
+    Returns (out, new_k_cache, new_v_cache[, new_k_scale, new_v_scale]).
+    """
+    B = x.shape[0]
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q, k, v = attn_project_qkv(p, prefix, x, H, K, hd, bias=cfg.qkv_bias)
+    if use_rope and cfg.rope_theta:
+        posb = jnp.full((1,), 0, jnp.int32) + pos
+        cos, sin = rope_cos_sin(posb, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    quantized = k_scale is not None
+    T = k_cache.shape[1]
+
+    if _should_flash_decode(K, T):
+        res = flash_decode_sharded(
+            q, k, v, k_cache, v_cache, pos, window=window,
+            k_scale=k_scale, v_scale=v_scale)
+        out = res[0].astype(x.dtype).reshape(B, 1, H * hd) @ p[f"{prefix}_wo"]
+        if quantized:
+            return (out,) + tuple(res[1:])
+        return out, res[1], res[2]
+
+    if quantized:
+        kq, ksc = quantize_kv(k)
+        vq, vsc = quantize_kv(v)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, kq, (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, vq, (0, pos, 0, 0))
+        k_scale = jax.lax.dynamic_update_slice(k_scale, ksc, (0, pos, 0))
+        v_scale = jax.lax.dynamic_update_slice(v_scale, vsc, (0, pos, 0))
+    else:
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, pos, 0, 0))
+    qg = q.reshape(B, 1, K, H // K, hd)
+
+    if quantized or T > KV_CHUNK:
+        out = _decode_attention_chunked(
+            qg, k_cache, v_cache, pos, window, k_scale, v_scale, hd ** -0.5)
+        out = out.astype(x.dtype)
+    else:
+        kv_pos = jnp.arange(T)
+        valid = kv_pos <= pos
+        if window is not None:
+            valid = valid & (pos - kv_pos < window)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache,
+                            preferred_element_type=jnp.float32) * hd ** -0.5
+        scores = jnp.where(valid[None, None, None, None, :], scores,
+                           jnp.finfo(jnp.float32).min)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v_cache.dtype),
+                         v_cache)
+    out = out.reshape(B, 1, H * hd) @ p[f"{prefix}_wo"]
+    if quantized:
+        return out, k_cache, v_cache, k_scale, v_scale
+    return out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def swiglu_mlp(p: dict, prefix: str, x: jax.Array) -> jax.Array:
+    # constraints on gate/up pin the *cotangent* shardings too (wsc is
+    # self-transposing) — without them the backward all-gathers the hidden
+    # cotangent to full d_ff (2 GiB/layer at zamba2 scale).
+    gate = shard(x @ p[f"{prefix}_w_gate"], BATCH, None, "model")
+    up = shard(x @ p[f"{prefix}_w_up"], BATCH, None, "model")
+    h = jax.nn.silu(gate) * up
+    h = shard(h, BATCH, None, "model")
+    return h @ p[f"{prefix}_w_down"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table: jax.Array, h: jax.Array) -> jax.Array:
+    logits = jnp.einsum("bsd,vd->bsv", h, table,
+                        preferred_element_type=jnp.float32)
+    return shard(logits, BATCH, None, "model")
+
+
+@jax.custom_vjp
+def cross_entropy_loss(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean next-token CE; logits (B,S,V) bf16/f32, targets (B,S) int32.
+
+    custom-vjp so the backward emits the cotangent in the *logits dtype*:
+    the naive ``astype(f32)`` formulation drags fp32 through the unembed
+    backward dots — measured ~10 concurrent (B,S,d) fp32 buffers at
+    deepseek-67b scale. Statistics still accumulate in fp32.
+    """
+    loss, _ = _ce_fwd(logits, targets)
+    return loss
+
+
+def _ce_stats(logits, targets):
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    return logz, gold
+
+
+def _ce_fwd(logits, targets):
+    logz, gold = _ce_stats(logits, targets)
+    loss = jnp.mean(logz - gold)
+    return loss, (logits, targets, logz)
+
+
+def _ce_bwd(res, g):
+    logits, targets, logz = res
+    n = logz.size
+    p = jnp.exp(logits.astype(jnp.float32) - logz[..., None])
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32)
+    dlogits = ((p - onehot) * (g / n)).astype(logits.dtype)
+    return dlogits, None
+
+
+cross_entropy_loss.defvjp(_ce_fwd, _ce_bwd)

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Routing: softmax router, top-k experts per token. Dispatch: tokens are
+sorted by expert id and gathered into an ``(E, C, d)`` buffer (capacity
+``C = ceil(T*k/E * capacity_factor)``); tokens beyond capacity are dropped
+(standard GShard semantics). Expert GEMMs run as batched ``(E, C, d) x
+(E, d, f)`` einsums so the expert axis shards over ``'model'`` (EP) and the
+token gather/scatter lowers to an all-to-all on real meshes.
+
+Covers both assigned MoE archs: qwen2-moe (4 shared experts merged into one
+5632-wide branch with a learned sigmoid gate) and qwen3-moe (pure routed).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import BATCH, mesh_axis_size, shard
+from repro.models.layers import swiglu_mlp
+
+
+def _capacity(num_tokens: int, num_experts: int, top_k: int,
+              factor: float) -> int:
+    cap = int(math.ceil(num_tokens * top_k / num_experts * factor))
+    return max(8, int(math.ceil(cap / 8)) * 8)  # pad to 8 for TPU tiling
+
+
+def route_topk(router_logits: jax.Array, top_k: int
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(T, E) -> (weights (T,k), experts (T,k), aux_loss scalar).
+
+    Router probabilities are renormalised over the selected top-k (qwen
+    convention). Aux loss is the standard Switch load-balancing loss.
+    """
+    T, E = router_logits.shape
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    weights, experts = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # load-balancing aux: E * sum_e f_e * p_e
+    one_hot = jax.nn.one_hot(experts, E, dtype=jnp.float32)  # (T,k,E)
+    frac_tokens = jnp.mean(jnp.sum(one_hot, axis=1), axis=0)
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * mean_probs)
+    return weights, experts, aux
+
+
+def moe_ffn(p: Dict[str, jax.Array], x: jax.Array, moe_cfg
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,d) -> (out (B,S,d), aux_loss).
+
+    Expects params: router_w (d,E), experts_w_gate/up (E,d,f),
+    experts_w_down (E,f,d); optionally shared_* for the shared branch.
+    """
+    B, S, d = x.shape
+    T = B * S
+    E, k = moe_cfg.num_experts, moe_cfg.top_k
+    C = _capacity(T, E, k, moe_cfg.capacity_factor)
+
+    xt = x.reshape(T, d)
+    logits = xt @ p["router_w"]
+    weights, experts, aux = route_topk(logits, k)
+
+    # ---- sort-based dispatch ----
+    flat_expert = experts.reshape(-1)                       # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(T), k)               # token of each slot
+    flat_weight = weights.reshape(-1)
+    order = jnp.argsort(flat_expert)                        # stable
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_weight = flat_weight[order]
+    # position within expert segment
+    same = jnp.cumsum(jax.nn.one_hot(sorted_expert, E, dtype=jnp.int32),
+                      axis=0)
+    pos_in_expert = jnp.take_along_axis(
+        same, sorted_expert[:, None], axis=1)[:, 0] - 1     # (T*k,)
+    keep = pos_in_expert < C
+    # scatter slot -> (E, C) token index buffer (dropped slots point at T,
+    # a zero pad row)
+    slot_dest = sorted_expert * C + pos_in_expert
+    slot_dest = jnp.where(keep, slot_dest, E * C)           # overflow bin
+    buf_token = jnp.full((E * C + 1,), T, dtype=jnp.int32)
+    buf_token = buf_token.at[slot_dest].set(sorted_token.astype(jnp.int32))
+    buf_weight = jnp.zeros((E * C + 1,), dtype=jnp.float32)
+    buf_weight = buf_weight.at[slot_dest].set(sorted_weight)
+    buf_token = buf_token[: E * C].reshape(E, C)
+    buf_weight = buf_weight[: E * C].reshape(E, C)
+
+    # gather tokens into expert buffers (pad row T = zeros)
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    expert_in = jnp.take(xt_pad, buf_token, axis=0)         # (E, C, d)
+    # EP when E divides the model axis; otherwise TP-within-expert over f
+    # (qwen2-moe: 60 experts on a 16-wide axis).
+    ep = E % max(mesh_axis_size("model"), 1) == 0
+    if ep:
+        expert_in = shard(expert_in, "model", None, None)
+
+    # ---- expert GEMMs (batched over E) ----
+    gate = jnp.einsum("ecd,edf->ecf", expert_in, p["experts_w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", expert_in, p["experts_w_up"])
+    if ep:
+        gate = shard(gate, "model", None, None)
+        up = shard(up, "model", None, None)
+    else:
+        gate = shard(gate, None, None, "model")
+        up = shard(up, None, None, "model")
+    h = jax.nn.silu(gate) * up
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["experts_w_down"])
+
+    # ---- combine: weighted scatter-add back to tokens ----
+    # constrain BEFORE the scatter: the scatter's backward is a take whose
+    # cotangent is otherwise unconstrained on E — the partitioner then
+    # computes dW with E replicated and gathers the expert weights to match
+    if ep:
+        expert_out = shard(expert_out, "model", None, None)
+    expert_out = expert_out * buf_weight[..., None].astype(expert_out.dtype)
+    if ep:
+        expert_out = shard(expert_out, "model", None, None)
+    out = jnp.zeros((T + 1, d), expert_out.dtype)
+    out = out.at[buf_token.reshape(-1)].add(
+        expert_out.reshape(E * C, d))
+    out = out[:T]
+
+    # ---- shared-expert branch (qwen2-moe) ----
+    if "shared_w_gate" in p:
+        shared = swiglu_mlp(p, "shared", x).reshape(T, d)
+        gate_logit = xt @ p["shared_gate_w"]                # (T,1)
+        out = out + jax.nn.sigmoid(
+            gate_logit.astype(jnp.float32)).astype(shared.dtype) * shared
+
+    out = out.reshape(B, S, d)
+    return shard(out, BATCH, None, None), aux * moe_cfg.router_aux_weight

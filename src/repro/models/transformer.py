@@ -1,0 +1,229 @@
+"""Decoder-only transformer stack (dense + MoE variants).
+
+Layers are stored stacked (leading ``L`` axis) and the stack is a single
+``lax.scan`` over depth, keeping HLO size O(1) in depth — required for the
+95-layer dry-run compiles. The gemma3 5:1 local:global pattern rides
+through the scan as a per-layer boolean; local layers select a
+sliding-window mask width, global layers the full context (same HLO for
+every layer, so the scan stays homogeneous).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import BATCH, shard
+from repro.models import layers as L
+from repro.models.moe import moe_ffn
+
+
+def _layer_tree(p: Dict[str, jax.Array], prefix: str = "layers."
+                ) -> Dict[str, jax.Array]:
+    return {k[len(prefix):]: v for k, v in p.items() if k.startswith(prefix)}
+
+
+def residual_shard(h: jax.Array, cfg) -> jax.Array:
+    """Residual-stream constraint between blocks; sequence-parallel for
+    big Mode-B archs (cfg.act_seq_shard) so scan residuals store 1/16."""
+    if cfg.act_seq_shard:
+        return shard(h, BATCH, "model", None)
+    return shard(h, BATCH, None, None)
+
+
+def maybe_remat(fn, remat: str):
+    if remat in ("full", "nested"):
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return fn
+
+
+def _best_group(n_layers: int) -> int:
+    """Divisor of L nearest sqrt(L) — the sqrt-remat group size."""
+    import math
+    best, target = 1, math.sqrt(n_layers)
+    for k in range(1, n_layers + 1):
+        if n_layers % k == 0 and abs(k - target) < abs(best - target):
+            best = k
+    return best
+
+
+def _window_for(cfg, is_local: jax.Array, seq_len: int) -> Optional[jax.Array]:
+    if not cfg.sliding_window:
+        return None
+    return jnp.where(is_local, cfg.sliding_window, seq_len + 1)
+
+
+def decoder_block(lp: Dict[str, jax.Array], h: jax.Array, cfg, *,
+                  window: Optional[jax.Array],
+                  positions: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """One pre-norm block. Returns (h, aux_loss)."""
+    attn_in = L.rms_norm(h, lp["norm1_scale"], cfg.norm_eps)
+    attn_out, _ = L.self_attention_block(
+        lp, "attn", attn_in, cfg, causal=True, window=window,
+        positions=positions)
+    h = h + attn_out
+    ffn_in = L.rms_norm(h, lp["norm2_scale"], cfg.norm_eps)
+    if cfg.moe.enabled:
+        ffn_out, aux = moe_ffn(lp, ffn_in, cfg.moe)
+    else:
+        ffn_out = L.swiglu_mlp(lp, "mlp", ffn_in)
+        aux = jnp.zeros((), jnp.float32)
+    h = h + ffn_out
+    return residual_shard(h, cfg), aux
+
+
+def decoder_stack(p: Dict[str, jax.Array], h: jax.Array, cfg,
+                  positions: Optional[jax.Array] = None,
+                  hook=None, remat: str = "none"
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Scan the stacked layers. Returns (h, total_aux_loss).
+
+    `hook(layer_tree, 'layers')` is the ZeRO-3 gather(+vote-bwd) transform;
+    with remat it sits inside the checkpointed body, so gathered params are
+    re-gathered (not stored) for the backward pass — exactly ZeRO-3.
+    """
+    lp = _layer_tree(p)
+    local = jnp.asarray(cfg.local_layer_mask(), dtype=bool)
+    S = h.shape[1]
+    L = cfg.num_layers
+
+    def body(carry, xs):
+        layer_p, is_local = xs
+        if hook is not None:
+            layer_p = hook(layer_p, "layers")
+        window = _window_for(cfg, is_local, S)
+        carry, aux = decoder_block(layer_p, carry, cfg, window=window,
+                                   positions=positions)
+        return carry, aux
+
+    if remat == "nested" and L >= 4:
+        # sqrt-remat: outer scan over groups is checkpointed; residuals are
+        # stored only at group boundaries (L/k of them), each group's
+        # interior recomputed during its backward. Peak residual memory
+        # drops from L x act to (L/k + k) x act.
+        k = _best_group(L)
+        lp_g = {n: v.reshape((L // k, k) + v.shape[1:])
+                for n, v in lp.items()}
+        local_g = local.reshape(L // k, k)
+
+        @jax.checkpoint
+        def outer(carry, xs):
+            gp, gl = xs
+            carry, auxes = jax.lax.scan(body, carry, (gp, gl))
+            return carry, jnp.sum(auxes)
+
+        h, auxes = jax.lax.scan(outer, h, (lp_g, local_g))
+        return h, jnp.sum(auxes)
+
+    h, auxes = jax.lax.scan(maybe_remat(body, remat), h, (lp, local))
+    return h, jnp.sum(auxes)
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
+    K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, max_len, K, hd)
+    if cfg.kv_cache_dtype == "int8":
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1], jnp.bfloat16),
+                "v_scale": jnp.zeros(shape[:-1], jnp.bfloat16)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decoder_prefill(p: Dict[str, jax.Array], h: jax.Array, cfg, hook=None
+                    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Forward pass that also returns the populated KV cache."""
+    lp = _layer_tree(p)
+    local = jnp.asarray(cfg.local_layer_mask(), dtype=bool)
+    S = h.shape[1]
+
+    quantized = cfg.kv_cache_dtype == "int8"
+
+    def body(carry, xs):
+        layer_p, is_local = xs
+        if hook is not None:
+            layer_p = hook(layer_p, "layers")
+        window = _window_for(cfg, is_local, S)
+        attn_in = L.rms_norm(carry, layer_p["norm1_scale"], cfg.norm_eps)
+        attn_out, (k, v) = L.self_attention_block(
+            layer_p, "attn", attn_in, cfg, causal=True, window=window)
+        carry = carry + attn_out
+        ffn_in = L.rms_norm(carry, layer_p["norm2_scale"], cfg.norm_eps)
+        if cfg.moe.enabled:
+            ffn_out, _ = moe_ffn(layer_p, ffn_in, cfg.moe)
+        else:
+            ffn_out = L.swiglu_mlp(layer_p, "mlp", ffn_in)
+        carry = carry + ffn_out
+        # shard the produced cache over 'model': heads when divisible,
+        # else sequence (otherwise a 32k cache leaf is replicated 16x)
+        from repro.distributed.sharding import mesh_axis_size
+        if cfg.num_kv_heads % max(mesh_axis_size("model"), 1) == 0:
+            k = shard(k, None, None, "model", None)
+            v = shard(v, None, None, "model", None)
+        else:
+            k = shard(k, None, "model", None, None)
+            v = shard(v, None, "model", None, None)
+        if quantized:
+            kq, ksc = L.quantize_kv(k)
+            vq, vsc = L.quantize_kv(v)
+            return carry, (kq, vq, ksc, vsc)
+        return carry, (k, v)
+
+    if quantized:
+        h, (ks, vs, kscs, vscs) = jax.lax.scan(body, h, (lp, local))
+        return h, {"k": ks, "v": vs, "k_scale": kscs, "v_scale": vscs}
+    h, (ks, vs) = jax.lax.scan(body, h, (lp, local))
+    return h, {"k": ks, "v": vs}
+
+
+def decoder_decode_step(p: Dict[str, jax.Array], h: jax.Array,
+                        cache: Dict[str, jax.Array], pos: jax.Array, cfg
+                        ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """h (B,1,d); cache {'k','v'} (L,B,Smax,K,hd); pos scalar int32."""
+    lp = _layer_tree(p)
+    local = jnp.asarray(cfg.local_layer_mask(), dtype=bool)
+
+    quantized = "k_scale" in cache
+    keys = (("k", "v", "k_scale", "v_scale") if quantized else ("k", "v"))
+
+    # The cache rides the loop CARRY (sliced/written back per layer) rather
+    # than scan xs->ys: stacked xs and stacked ys are separate buffers,
+    # double-buffering a multi-GB cache; carries alias in place.
+    def body(i, carry):
+        h, cache = carry
+        layer_p = jax.tree.map(lambda a: a[i], lp)
+        is_local = local[i]
+        sliced = {kk: cache[kk][i] for kk in keys}
+        window = None
+        if cfg.sliding_window:
+            window = jnp.where(is_local, cfg.sliding_window, 1 << 30)
+        attn_in = L.rms_norm(h, layer_p["norm1_scale"], cfg.norm_eps)
+        res = L.decode_self_attention(
+            layer_p, "attn", attn_in, cfg, k_cache=sliced["k"],
+            v_cache=sliced["v"], pos=pos, window=window,
+            k_scale=sliced.get("k_scale"), v_scale=sliced.get("v_scale"))
+        attn_out = res[0]
+        h = h + attn_out
+        ffn_in = L.rms_norm(h, layer_p["norm2_scale"], cfg.norm_eps)
+        if cfg.moe.enabled:
+            ffn_out, _ = moe_ffn(layer_p, ffn_in, cfg.moe)
+        else:
+            ffn_out = L.swiglu_mlp(layer_p, "mlp", ffn_in)
+        h = h + ffn_out
+        cache = {
+            kk: jax.lax.dynamic_update_index_in_dim(cache[kk], r, i, 0)
+            for kk, r in zip(keys, res[1:])}
+        return h, cache
+
+    h, cache = jax.lax.fori_loop(0, cfg.num_layers, body, (h, cache))
+    return h, cache

@@ -1,0 +1,10 @@
+"""Optimizer facade: the paper's sign-vote family plus dense baselines.
+
+Implementations live in `repro.core.signum` (they are the paper's core
+contribution); this package re-exports the stable public API.
+"""
+from repro.core.signum import (Optimizer, build_optimizer, lr_at,
+                               make_dense_optimizer, make_sign_optimizer)
+
+__all__ = ["Optimizer", "build_optimizer", "lr_at", "make_dense_optimizer",
+           "make_sign_optimizer"]

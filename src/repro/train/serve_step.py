@@ -1,0 +1,199 @@
+"""Serving steps (prefill / decode) and their shardings.
+
+Serving needs no vote, so steps are plain ``jax.jit`` under auto SPMD:
+weights keep their (possibly 2D data x model) training layout; the KV /
+SSM caches get family-aware specs:
+
+* attention caches (L,B,S,K,hd): batch over ('pod','data') when divisible;
+  heads over 'model' when divisible, else sequence over 'model'
+  (flash-decode-style partial softmax handled by the chunked decode path /
+  XLA reductions);
+* batch=1 long-context: sequence over ('data','model') jointly;
+* SSM state (L,B,H,P,N): heads over 'model';
+* int8 caches carry (L,B,S,K) scale leaves sharded to match.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.distributed import sharding as shd
+from repro.models import model as M
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def batch_entry(b: int, sizes: Dict[str, int]):
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    if _div(b, dp) and dp > 1:
+        return ("pod", "data") if "pod" in sizes else "data"
+    if _div(b, sizes.get("data", 1)) and sizes.get("data", 1) > 1:
+        return "data"
+    return None
+
+
+def cache_leaf_spec(name: str, shape: Tuple[int, ...],
+                    sizes: Dict[str, int]) -> P:
+    model = sizes.get("model", 1)
+    if name in ("ssm",):  # (L,B,H,P,N)
+        h = shape[2]
+        return P(None, batch_entry(shape[1], sizes),
+                 "model" if _div(h, model) else None, None, None)
+    if name in ("conv",):  # (L,B,W-1,CD)
+        return P(None, batch_entry(shape[1], sizes), None,
+                 "model" if _div(shape[3], model) else None)
+    if name in ("k_scale", "v_scale"):  # (L,B,S,K)
+        b, s, k = shape[1], shape[2], shape[3]
+        be = batch_entry(b, sizes)
+        if _div(k, model):
+            return P(None, be, None, "model")
+        if be is None and _div(s, model * sizes.get("data", 1)):
+            return P(None, None, ("data", "model"), None)
+        return P(None, be, "model" if _div(s, model) else None, None)
+    if name in ("k", "v", "attn_k", "attn_v", "xk", "xv"):  # (L,B,S,K,hd)
+        b, s, k = shape[1], shape[2], shape[3]
+        be = batch_entry(b, sizes)
+        if _div(k, model):
+            return P(None, be, None, "model", None)
+        if be is None and _div(s, model * sizes.get("data", 1)):
+            return P(None, None, ("data", "model"), None, None)
+        return P(None, be, "model" if _div(s, model) else None, None, None)
+    return P()
+
+
+def cache_shardings(cfg: ModelConfig, cache_abs, mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return {
+        k: NamedSharding(mesh, cache_leaf_spec(k, v.shape, sizes))
+        for k, v in cache_abs.items()
+    }
+
+
+def serve_param_shardings(cfg: ModelConfig, mesh, *, fsdp: bool):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    specs = shd.param_specs(cfg.param_shapes(), fsdp=fsdp, mesh_shape=sizes)
+    return {k: NamedSharding(mesh, s) for k, s in specs.items()}
+
+
+def make_decode_step(cfg: ModelConfig):
+    # cache is donated: the updated cache aliases the input buffers, so the
+    # decode step never holds two copies of a multi-GB KV cache.
+    @functools.partial(jax.jit, donate_argnums=(2,))
+    def step(params, tokens, cache, pos):
+        return M.decode_step(cfg, params, tokens, cache, pos)
+
+    return step
+
+
+def make_prefill(cfg: ModelConfig, cache_shardings_=None):
+    # out_shardings pin the produced cache to its serving layout (batch
+    # over data, heads-or-seq over model) — otherwise XLA leaves the scan
+    # output batch-sharded only and a 32k cache lands 16x too large.
+    kw = {}
+    if cache_shardings_ is not None:
+        kw["out_shardings"] = (None, cache_shardings_)
+
+    @functools.partial(jax.jit, **kw)
+    def step(params, batch):
+        return M.prefill(cfg, params, batch)
+
+    return step
+
+
+def make_prefill_sharded(cfg: ModelConfig, mesh, *, fsdp: bool,
+                         global_batch: int):
+    """Prefill as shard_map manual over the batch axes, auto over 'model'
+    — the same layout as training. Keeps MoE token dispatch replica-LOCAL:
+    under pure auto-SPMD the capacity gather/scatter goes global and the
+    partitioner materialises (E, 16*C, d) fp32 dispatch buffers (measured
+    43 GiB on qwen2-moe prefill_32k). FSDP-sharded params are gathered by
+    the standard hooks (vote=False: no backward runs in serving).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.majority_vote import make_fsdp_hooks
+    from repro.distributed import sharding as shd
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    dp = 1
+    for a in batch_axes:
+        dp *= sizes[a]
+    if dp <= 1 or global_batch % dp != 0:
+        return make_prefill(cfg)
+
+    specs = shd.param_specs(cfg.param_shapes(), fsdp=fsdp, mesh_shape=sizes)
+    hook = (make_fsdp_hooks(specs, tuple(mesh.axis_names), vote=False)
+            if fsdp else None)
+    p_manual = {k: _strip_to_manual(s, batch_axes) for k, s in specs.items()}
+
+    def local_fn(params, batch):
+        return M.prefill(cfg, params, batch, hook=hook)
+
+    # batch sharded over the batch axes; logits/cache carry the batch dim
+    bspec = P(batch_axes)
+    out_specs = (bspec, _cache_out_specs(cfg, batch_axes))
+    fn = jax.shard_map(local_fn, mesh=mesh,
+                       in_specs=(p_manual, bspec), out_specs=out_specs,
+                       axis_names=set(batch_axes), check_vma=False)
+    return jax.jit(fn)
+
+
+def _strip_to_manual(spec, manual):
+    def fix(e):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(x for x in e if x in manual)
+            return kept if kept else None
+        return e if e in manual else None
+
+    from jax.sharding import PartitionSpec as P
+    return P(*(fix(e) for e in spec))
+
+
+def _cache_out_specs(cfg: ModelConfig, batch_axes):
+    """Manual (batch-axes-only) out_specs for the prefill cache: every
+    cache leaf carries batch at dim 1 (L, B, ...)."""
+    from jax.sharding import PartitionSpec as P
+
+    cache_abs = jax.eval_shape(lambda: M.init_cache(cfg, 8, 128))
+    return {k: P(None, batch_axes) for k in cache_abs}
+
+
+def abstract_serve_inputs(cfg: ModelConfig, cell: ShapeCell, mesh,
+                          *, fsdp: bool):
+    """ShapeDtypeStructs with shardings for a serve-shape dry-run."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    p_sh = serve_param_shardings(cfg, mesh, fsdp=fsdp)
+    shapes = cfg.param_shapes()
+    dt = jnp.dtype(cfg.dtype)
+    params = {k: jax.ShapeDtypeStruct(v, dt, sharding=p_sh[k])
+              for k, v in shapes.items()}
+    specs = M.input_specs(cfg, cell)
+    if cell.kind == "prefill":
+        batch = specs["batch"]
+        bspec = {k: NamedSharding(
+            mesh, P(batch_entry(v.shape[0], sizes)))
+            for k, v in batch.items()}
+        batch = {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=bspec[k])
+                 for k, v in batch.items()}
+        return {"params": params, "batch": batch}
+    cache = specs["cache"]
+    c_sh = cache_shardings(cfg, cache, mesh)
+    cache = {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=c_sh[k])
+             for k, v in cache.items()}
+    tok = specs["tokens"]
+    tok = jax.ShapeDtypeStruct(
+        tok.shape, tok.dtype,
+        sharding=NamedSharding(mesh, P(batch_entry(tok.shape[0], sizes))))
+    pos = jax.ShapeDtypeStruct(
+        (), jnp.int32, sharding=NamedSharding(mesh, P()))
+    return {"params": params, "tokens": tok, "cache": cache, "pos": pos}

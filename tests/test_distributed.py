@@ -1,0 +1,25 @@
+"""Mesh-level tests. They need 8 fake XLA devices, which must be configured
+before jax initialises — so they run as a subprocess harness; the main
+pytest session keeps the default single device."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HARNESS = os.path.join(os.path.dirname(__file__), "distributed_harness.py")
+
+
+@pytest.mark.timeout(1200)
+def test_distributed_harness():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    proc = subprocess.run(
+        [sys.executable, HARNESS], env=env, capture_output=True, text=True,
+        timeout=1200)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "distributed harness failed"
+    assert "ALL DISTRIBUTED CHECKS PASSED" in proc.stdout

@@ -1,0 +1,100 @@
+"""Per-kernel validation: shape/dtype sweeps, allclose vs the jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sign_compress as sc
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(n, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=(n,)).astype(dtype))
+
+
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 4096, 8 * 128 * 32,
+                               8 * 128 * 32 + 17, 100_000])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_bitpack_roundtrip(n, dtype):
+    x = _rand(n).astype(dtype)
+    packed = ops.bitpack(x)
+    assert packed.dtype == jnp.uint32
+    assert packed.shape[0] == -(-n // 32)
+    un = ops.bitunpack(packed, n)
+    expect = np.where(np.asarray(x, np.float32) >= 0, 1.0, -1.0)
+    np.testing.assert_array_equal(np.asarray(un), expect)
+
+
+@pytest.mark.parametrize("n", [64, 4096])
+def test_bitpack_matches_oracle(n):
+    x = _rand(n)
+    packed = ops.bitpack(x)
+    oracle = ref.bitpack(x.reshape(1, -1))[0]
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(oracle))
+
+
+@pytest.mark.parametrize("m", [1, 2, 3, 7, 16, 33])
+@pytest.mark.parametrize("w", [1, 511, 512, 700])
+def test_majority_matches_oracle(m, w):
+    p = jnp.asarray(RNG.integers(0, 2 ** 32, size=(m, w), dtype=np.uint32))
+    got = ops.majority(p)
+    expect = ref.majority(p)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+def test_majority_semantics_vs_sign_counting():
+    m, n = 9, 320
+    x = RNG.normal(size=(m, n)).astype(np.float32)
+    packed = jnp.stack([ops.bitpack(jnp.asarray(row)) for row in x])
+    maj = ops.bitunpack(ops.majority(packed), n)
+    votes = np.where(x >= 0, 1, -1).sum(axis=0)
+    expect = np.where(votes >= 0, 1.0, -1.0)
+    np.testing.assert_array_equal(np.asarray(maj), expect)
+
+
+@pytest.mark.parametrize("beta", [0.0, 0.9, 0.99])
+@pytest.mark.parametrize("n", [32, 50_016])
+def test_momentum_sign_pack(beta, n):
+    g, m = _rand(n), _rand(n)
+    m_new, packed = ops.momentum_sign_pack(g, m, beta)
+    mr, pr = ref.momentum_sign_pack(g.reshape(1, -1), m.reshape(1, -1), beta)
+    np.testing.assert_allclose(np.asarray(m_new), np.asarray(mr)[0],
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(pr)[0])
+
+
+@pytest.mark.parametrize("eta,wd", [(1e-3, 0.0), (1e-2, 0.1)])
+def test_apply_vote(eta, wd):
+    n = 50_016
+    p = _rand(n)
+    votes = ops.bitpack(_rand(n))
+    out = ops.apply_vote(p, votes, eta, wd)
+    outr = ref.apply_vote(p.reshape(1, -1), votes.reshape(1, -1), eta, wd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(outr)[0],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fused_pipeline_equals_unfused():
+    """momentum_sign_pack + majority + apply_vote == the optimizer math."""
+    m_workers, n = 5, 2_048
+    gs = [_rand(n) for _ in range(m_workers)]
+    ms = [_rand(n) for _ in range(m_workers)]
+    p = _rand(n)
+    beta, eta = 0.9, 1e-3
+    packed = []
+    new_ms = []
+    for g, mom in zip(gs, ms):
+        m_new, pk = ops.momentum_sign_pack(g, mom, beta)
+        new_ms.append(m_new)
+        packed.append(pk)
+    maj = ops.majority(jnp.stack(packed))
+    p_new = ops.apply_vote(p, maj, eta, 0.0)
+    # unfused reference
+    votes = sum(np.where(np.asarray(beta * m0 + (1 - beta) * g0) >= 0, 1, -1)
+                for g0, m0 in zip(gs, ms))
+    vote = np.where(votes >= 0, 1.0, -1.0)
+    expect = np.asarray(p) - eta * vote
+    np.testing.assert_allclose(np.asarray(p_new), expect, rtol=1e-5,
+                               atol=1e-6)

@@ -1,0 +1,121 @@
+"""Validate the paper's theory empirically (Fig. 1 / Thm 1 / Thm 2 / Lemma 1).
+
+These run the actual optimizer math on the paper's toy quadratic:
+f(x) = 0.5||x||^2, per-coordinate N(0, sigma^2) gradient noise (Gaussian is
+unimodal-symmetric, so Assumption 4 holds).
+"""
+import numpy as np
+import pytest
+
+from repro.core import theory
+
+
+def _run_signsgd(dim=200, noise=1.0, steps=400, lr=None, m_workers=1,
+                 alpha=0.0, seed=0, momentum=0.0):
+    """signSGD with majority vote on the toy quadratic; returns mixed-norm
+    trajectory and final point."""
+    f, grad_oracle, x0 = theory.quadratic_problem(dim, noise, seed)
+    rng = np.random.default_rng(seed + 1)
+    x = x0.copy()
+    n_adv = int(alpha * m_workers)
+    mom = np.zeros((m_workers, dim))
+    traj = []
+    if lr is None:
+        lr = theory.theorem1_lr(dim, f(x0), steps)
+    for k in range(steps):
+        votes = np.zeros(dim)
+        for m in range(m_workers):
+            g = grad_oracle(x, rng)
+            mom[m] = momentum * mom[m] + (1 - momentum) * g
+            s = np.sign(mom[m])
+            if m < n_adv:
+                s = -s
+            votes += s
+        x = x - lr * np.sign(votes)
+        traj.append(f(x))
+    return np.asarray(traj), x
+
+
+def test_lemma1_failure_probability():
+    """Measured sign-failure prob <= Lemma 1 bound across the SNR range."""
+    rng = np.random.default_rng(0)
+    n = 200_000
+    for snr in [0.1, 0.5, 2.0 / np.sqrt(3.0), 2.0, 5.0]:
+        g = snr  # sigma = 1
+        noisy = g + rng.normal(size=n)
+        fail = np.mean(np.sign(noisy) != np.sign(g))
+        bound = theory.lemma1_failure_prob(np.asarray([snr]))[0]
+        assert fail <= bound + 3e-3, (snr, fail, bound)
+        assert fail <= 0.5
+
+
+def test_signsgd_converges_on_quadratic():
+    traj, _ = _run_signsgd(steps=600)
+    assert traj[-1] < 0.05 * traj[0]
+
+
+def test_majority_vote_variance_reduction():
+    """More workers -> better final objective (the 1/sqrt(M) term)."""
+    f1, _ = _run_signsgd(steps=300, m_workers=1, noise=3.0, lr=5e-2)
+    f9, _ = _run_signsgd(steps=300, m_workers=9, noise=3.0, lr=5e-2)
+    assert f9[-1] < f1[-1]
+
+
+@pytest.mark.parametrize("alpha", [0.0, 0.2, 0.4])
+def test_byzantine_convergence(alpha):
+    """Theorem 2: convergence holds for alpha < 1/2 sign-flippers."""
+    traj, _ = _run_signsgd(steps=400, m_workers=15, alpha=alpha,
+                           noise=1.0, lr=3e-2)
+    assert traj[-1] < 0.1 * traj[0], f"alpha={alpha} failed to converge"
+
+
+def test_byzantine_majority_fails_at_majority_adversaries():
+    """Sanity: above 1/2 adversaries the update is inverted and f grows."""
+    traj, _ = _run_signsgd(steps=100, m_workers=9, alpha=0.78, noise=0.1,
+                           lr=3e-2)
+    assert traj[-1] > traj[0]
+
+
+def test_theorem1_bound_holds_on_quadratic():
+    """Average mixed-norm of the iterates respects Theorem 1's bound.
+
+    For f = 0.5||x||^2: L_i = 1 (so ||L||_1 = d), g = x, sigma_i = noise.
+    """
+    dim, steps, noise = 100, 400, 1.0
+    f, grad_oracle, x0 = theory.quadratic_problem(dim, noise, seed=3)
+    rng = np.random.default_rng(4)
+    lr = theory.theorem1_lr(dim, f(x0), steps)
+    x = x0.copy()
+    mixed = []
+    for k in range(steps):
+        g = x
+        snr = np.abs(g) / noise
+        high = snr > theory.CRITICAL_SNR
+        mixed.append(np.sum(np.abs(g[high]))
+                     + np.sum(g[~high] ** 2 / noise))
+        x = x - lr * np.sign(grad_oracle(x, rng))
+    measured = np.mean(mixed)
+    bound = theory.theorem1_bound(dim, f(x0), steps)
+    assert measured <= bound, (measured, bound)
+
+
+def test_vote_failure_bound():
+    """(*) from Thm 2's proof: per-coordinate vote failure probability."""
+    rng = np.random.default_rng(5)
+    m, alpha, snr = 25, 0.2, 0.5
+    n_adv = int(alpha * m)
+    trials = 4000
+    fails = 0
+    for _ in range(trials):
+        s = np.sign(snr + rng.normal(size=m))
+        s[:n_adv] = -np.sign(snr + rng.normal(size=n_adv))
+        fails += (s.sum() <= 0)
+    measured = fails / trials
+    bound = theory.vote_failure_bound(np.asarray([snr]), m, alpha)[0]
+    assert measured <= bound + 0.02, (measured, bound)
+
+
+def test_momentum_signum_converges():
+    """SIGNUM (beta=0.9, the paper's default) also converges."""
+    traj, _ = _run_signsgd(steps=600, momentum=0.9, m_workers=3, lr=2e-2)
+    assert traj[-1] < 0.05 * traj[0]

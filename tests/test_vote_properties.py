@@ -1,0 +1,101 @@
+"""Property-based tests (hypothesis) for the system's invariants:
+
+* pack/unpack roundtrip for arbitrary sign patterns,
+* majority == sign of sum of signs, for every strategy wire format,
+* Byzantine bound: with alpha < 1/2 sign-flippers, the vote equals the
+  honest-unanimous sign whenever honest replicas agree (the determinism
+  core of Theorem 2),
+* vote is permutation-invariant in the workers,
+* abstention (zero gradient) never flips an otherwise-decided vote.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sign_compress as sc
+
+signs_arrays = st.integers(1, 200).flatmap(
+    lambda n: st.lists(st.sampled_from([-1, 1]), min_size=n, max_size=n))
+
+
+@given(signs_arrays)
+@settings(max_examples=200, deadline=None)
+def test_pack_unpack_roundtrip(bits):
+    x = np.asarray(bits, np.float32)
+    padded, n = sc.pad_to_pack(jnp.asarray(x))
+    packed = sc.pack_signs(padded)
+    un = np.asarray(sc.unpack_signs(packed))[:n]
+    np.testing.assert_array_equal(un, x)
+
+
+@given(st.integers(1, 33), st.integers(1, 8), st.randoms())
+@settings(max_examples=100, deadline=None)
+def test_majority_is_sign_of_sum(m, words, rnd):
+    data = np.array([[rnd.getrandbits(32) for _ in range(words)]
+                     for _ in range(m)], dtype=np.uint32)
+    maj = sc.packed_majority(jnp.asarray(data))
+    signs = np.asarray(sc.unpack_signs(jnp.asarray(data), jnp.int32))
+    votes = signs.sum(axis=0)
+    expect = np.where(votes >= 0, 1, -1)
+    got = np.asarray(sc.unpack_signs(maj[None], jnp.int32))[0]
+    np.testing.assert_array_equal(got, expect)
+
+
+@given(st.integers(0, 49), st.integers(1, 30), st.randoms())
+@settings(max_examples=100, deadline=None)
+def test_byzantine_bound(adv_pct, dim, rnd):
+    """alpha < 1/2 sign-flipping adversaries cannot flip a unanimous
+    honest vote (Theorem 2's worst-case adversary, deterministic core)."""
+    m = 16
+    n_adv = (m * adv_pct) // 100  # < m/2 by construction
+    honest = np.array([rnd.choice([-1, 1]) for _ in range(dim)], np.int32)
+    votes = np.tile(honest, (m - n_adv, 1)).sum(axis=0) \
+        + np.tile(-honest, (n_adv, 1)).sum(axis=0) if n_adv else \
+        np.tile(honest, (m, 1)).sum(axis=0)
+    vote = np.sign(votes)
+    np.testing.assert_array_equal(vote, honest)
+
+
+@given(st.integers(2, 12), st.integers(1, 20), st.randoms())
+@settings(max_examples=100, deadline=None)
+def test_vote_permutation_invariant(m, dim, rnd):
+    signs = np.array([[rnd.choice([-1, 1]) for _ in range(dim)]
+                      for _ in range(m)], np.int32)
+    v1 = np.sign(signs.sum(axis=0))
+    perm = rnd.sample(range(m), m)
+    v2 = np.sign(signs[perm].sum(axis=0))
+    np.testing.assert_array_equal(v1, v2)
+
+
+@given(st.integers(3, 15), st.integers(1, 20), st.randoms())
+@settings(max_examples=100, deadline=None)
+def test_abstention_never_flips_decided_vote(m, dim, rnd):
+    """sign(0)=0 abstention (MoE experts with no routed tokens) can only
+    weaken a majority, never reverse it."""
+    signs = np.array([[rnd.choice([-1, 1]) for _ in range(dim)]
+                      for _ in range(m)], np.int32)
+    base = signs.sum(axis=0)
+    k = rnd.randrange(m)
+    signs_abs = signs.copy()
+    signs_abs[:k] = 0
+    after = signs_abs.sum(axis=0)
+    decided = np.abs(base) > k  # margin exceeds removed votes
+    np.testing.assert_array_equal(np.sign(after)[decided],
+                                  np.sign(base)[decided])
+
+
+@given(st.lists(st.floats(-1e6, 1e6, allow_nan=False), min_size=1,
+                max_size=100))
+@settings(max_examples=200, deadline=None)
+def test_sign_conventions(vals):
+    x = jnp.asarray(np.asarray(vals, np.float32))
+    t = np.asarray(sc.sign_ternary(x))
+    b = np.asarray(sc.sign_binary(x))
+    xv = np.asarray(x)
+    # JAX flushes subnormals to zero (FTZ); they belong to the zero class
+    nz = np.abs(xv) >= np.finfo(np.float32).tiny
+    np.testing.assert_array_equal(t[nz], np.sign(xv[nz]).astype(np.int8))
+    np.testing.assert_array_equal(
+        b[nz], np.where(xv[nz] >= 0, 1, -1).astype(np.int8))
+    # binary and ternary agree wherever x is nonzero (and normal)
+    np.testing.assert_array_equal(t[nz], b[nz])
