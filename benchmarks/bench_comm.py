@@ -1,9 +1,29 @@
 """Fig. 5 analog: per-step communication of majority vote vs dense
-all-reduce, from (a) the analytic wire model and (b) measured wall-clock of
-the actual kernels + vote math on this host (compression/vote cost incl.).
+all-reduce, from (a) the VoteEngine's analytic wire model and (b) measured
+wall-clock of the engine's fused local tally on this host
+(compression/vote cost incl.).
+
+Everything here runs through :class:`repro.core.vote_engine.VoteEngine` —
+the same object the trainer steps through — so the reported bytes are the
+bytes the production wire protocol moves, per strategy:
+
+* ``wire_bytes``      — one replica's outbound payload per step (the
+                        paper's "bits sent" metric). For ``allgather_1bit``
+                        this is exactly fp32_bytes / 32.
+* ``ring transit``    — per-chip transit bytes of the full exchange under
+                        the ring collective model, vs the dense baseline.
+* measured kernels    — the fused sign+pack+popcount Pallas kernel
+                        (one pass) vs the staged bitpack-then-popcount
+                        pair, plus the SIGNUM update kernels.
+
+CLI: ``python -m benchmarks.bench_comm --smoke`` runs a small-n correctness
++ accounting pass (CI-friendly; asserts the 1-bit wire ratio and fused
+kernel == oracle) and exits nonzero on violation.
 """
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 import jax
@@ -11,9 +31,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import VoteStrategy, get_config
-from repro.core.majority_vote import comm_bytes_per_step
+from repro.core.vote_engine import (STRATEGIES, VoteEngine, select_strategy)
 from repro.distributed.comm_model import collective_time
-from repro.kernels import ops
+from repro.kernels import ops, ref
+
+FP32_BITS = 32.0
 
 
 def _time(fn, *args, iters=5):
@@ -25,34 +47,125 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters
 
 
+def wire_rows(n_params: int, data_size: int = 16, pod_size: int = 1,
+              tag: str = ""):
+    """Per-strategy wire accounting rows for one model size."""
+    out = []
+    fp32_payload = n_params * FP32_BITS / 8.0
+    for strat in VoteStrategy:
+        if strat == VoteStrategy.AUTO:
+            continue
+        engine = VoteEngine(strategy=strat)
+        impl = STRATEGIES[strat]
+        payload = impl.payload_bytes(n_params, data_size * pod_size)
+        c = engine.comm_bytes(n_params, data_size, pod_size, grad_bytes=4)
+        t_dense = collective_time(c["dense_allreduce"]).time_s
+        t_vote = collective_time(c["vote"]).time_s
+        out.append((
+            f"fig5/{tag}{strat.value}_wire_bytes", payload,
+            f"{impl.wire_bits_per_param:g} bits/param; fp32 payload "
+            f"{fp32_payload:.3g}B -> {fp32_payload / payload:.1f}x smaller"))
+        out.append((
+            f"fig5/{tag}{strat.value}_comm_reduction", c["ratio"],
+            f"ring transit vs fp32 dense: dense={t_dense * 1e3:.2f}ms "
+            f"vote={t_vote * 1e3:.2f}ms @50GB/s/link x4"))
+    auto = select_strategy(n_params, data_size, pod_size)
+    out.append((f"fig5/{tag}auto_strategy",
+                float(list(VoteStrategy).index(auto)),
+                f"AUTO resolves to {auto.value} at data={data_size} "
+                f"pod={pod_size}"))
+    return out
+
+
 def rows():
     out = []
     # ---- analytic wire model per arch (single-pod mesh, 16 DP voters) ----
     for arch in ["zamba2-1.2b", "glm4-9b", "deepseek-67b",
                  "qwen3-moe-235b-a22b"]:
         n = get_config(arch).param_count() // 16  # per-chip TP shard
-        for strat in VoteStrategy:
-            c = comm_bytes_per_step(n, strat, data_size=16, pod_size=1)
-            t_dense = collective_time(c["dense_allreduce"]).time_s
-            t_vote = collective_time(c["vote"]).time_s
-            out.append((
-                f"fig5/{arch}/{strat.value}_comm_reduction",
-                c["ratio"],
-                f"dense={t_dense * 1e3:.2f}ms vote={t_vote * 1e3:.2f}ms "
-                f"@50GB/s/link x4"))
+        out.extend(wire_rows(n, data_size=16, pod_size=1, tag=f"{arch}/"))
     # ---- measured compression+vote cost (the paper's 'incl. compression')
     n = 25_000_000  # resnet50-scale, the paper's model
+    m_workers = 15
     g = jnp.asarray(np.random.default_rng(0).normal(size=(n,))
                     .astype(np.float32))
     m = jnp.zeros((n,), jnp.float32)
     t_pack = _time(lambda: ops.momentum_sign_pack(g, m, 0.9))
-    packed = jnp.stack([ops.bitpack(g)] * 15)
+    stacked = jnp.stack([g] * m_workers)
+    t_fused = _time(lambda: ops.fused_majority(stacked))
+    packed = jnp.stack([ops.bitpack(g)] * m_workers)
     t_vote = _time(lambda: ops.majority(packed))
     p = jnp.zeros((n,), jnp.float32)
     t_apply = _time(lambda: ops.apply_vote(p, packed[0], 1e-4, 0.0))
     out.append(("fig5/pack25M_ms", t_pack * 1e3,
                 "fused momentum+sign+bitpack (interpret on CPU)"))
+    out.append(("fig5/fusedvote25M_15workers_ms", t_fused * 1e3,
+                "ONE-PASS sign+pack+popcount (VoteEngine local tally)"))
     out.append(("fig5/vote25M_15workers_ms", t_vote * 1e3,
-                "popcount majority kernel"))
+                "staged popcount majority kernel (after packed all-gather)"))
     out.append(("fig5/apply25M_ms", t_apply * 1e3, "fused unpack+update"))
     return out
+
+
+# ---------------------------------------------------------------------------
+# smoke mode (scripts/ci.sh)
+# ---------------------------------------------------------------------------
+
+
+def smoke() -> int:
+    """Small, fast, assertive: the engine's wire accounting and the fused
+    Pallas path must hold the paper's headline numbers."""
+    failures = 0
+    n, m_workers = 1 << 16, 15
+    print("name,value,derived")
+    for name, value, derived in wire_rows(n, data_size=16, tag="smoke/"):
+        print(f"{name},{value:.6g},{derived}", flush=True)
+
+    # 1-bit wire format is exactly fp32/32 per payload
+    payload = STRATEGIES[VoteStrategy.ALLGATHER_1BIT].payload_bytes(n)
+    fp32_payload = n * FP32_BITS / 8.0
+    if payload > fp32_payload / 32.0 + 1e-9:
+        print(f"FAIL: allgather_1bit payload {payload} > fp32/32 "
+              f"{fp32_payload / 32.0}", file=sys.stderr)
+        failures += 1
+
+    # fused Pallas kernel == composed oracle, tie cases included
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(m_workers, n)).astype(np.float32)
+    x[: m_workers // 2, :128] = 1.0
+    x[m_workers // 2:, :128] = -1.0
+    got = np.asarray(ops.fused_majority(jnp.asarray(x)))
+    want = np.asarray(ref.fused_majority(jnp.asarray(x)))
+    if not np.array_equal(got, want):
+        print("FAIL: fused_majority != ref oracle", file=sys.stderr)
+        failures += 1
+    else:
+        print("fig5/smoke/fused_kernel_vs_oracle,1,bit-identical "
+              f"(M={m_workers}, n={n})", flush=True)
+
+    # engine local tally (fused path) == engine jnp path
+    eng = VoteEngine(strategy=VoteStrategy.ALLGATHER_1BIT)
+    s_fused = np.asarray(eng.vote_stacked(jnp.asarray(x), use_kernels=True))
+    s_ref = np.asarray(eng.vote_stacked(jnp.asarray(x), use_kernels=False))
+    if not np.array_equal(s_fused, s_ref):
+        print("FAIL: engine fused tally != jnp tally", file=sys.stderr)
+        failures += 1
+    else:
+        print("fig5/smoke/engine_fused_vs_jnp,1,bit-identical", flush=True)
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast correctness+accounting pass for CI")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(1 if smoke() else 0)
+    print("name,value,derived")
+    for name, value, derived in rows():
+        print(f"{name},{value:.6g},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

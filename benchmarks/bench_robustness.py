@@ -16,14 +16,15 @@ _WORKER = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json, sys
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro import compat
     from repro.configs.base import (ByzantineConfig, OptimizerConfig,
                                     TrainConfig, get_config, reduced_config)
     from repro.models import model as M
     from repro.train import train_step as TS
 
-    mesh = jax.make_mesh((8, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((8, 1), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
     out = {}
     for n_adv in [0, 1, 2, 3]:
         cfg = reduced_config(get_config("glm4-9b"), num_layers=2)

@@ -18,8 +18,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import (ByzantineConfig, OptimizerConfig,
                                 TrainConfig, get_config, reduced_config)
 from repro.models import model as M
@@ -27,8 +28,8 @@ from repro.train import train_step as TS
 
 
 def main():
-    mesh = jax.make_mesh((8, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((8, 1), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
     print(f"{'adversaries':>12s} {'alpha':>6s} {'lr':>7s} "
           f"{'loss_0':>8s} {'loss_40':>8s}")
     # high-adversarial cases use a re-tuned (lower) learning rate, exactly

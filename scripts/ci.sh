@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 CI lane: the full test suite plus the communication benchmark's
+# smoke pass (VoteEngine wire accounting + fused-kernel-vs-oracle checks).
+#
+#   scripts/ci.sh          # everything
+#   scripts/ci.sh --quick  # skip tests marked slow (the distributed
+#                          # subprocess harness is the long pole)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+MARK=()
+if [[ "${1:-}" == "--quick" ]]; then
+  MARK=(-m "not slow")
+fi
+
+echo "== tier-1 tests =="
+python -m pytest -x -q "${MARK[@]}"
+
+echo "== bench_comm smoke =="
+python -m benchmarks.bench_comm --smoke
+
+echo "CI OK"

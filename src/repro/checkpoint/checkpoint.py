@@ -30,6 +30,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
+from repro import compat
+
 
 def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
     out = {}
@@ -162,7 +164,7 @@ def restore(ckpt_dir: str, like_params: Any = None, like_opt: Any = None,
         if like_tree is None:
             return saved_tree
         saved_flat = _flatten(saved_tree)
-        like_flat = jax.tree.leaves_with_path(like_tree)
+        like_flat = compat.tree_leaves_with_path(like_tree)
         out = dict(saved_flat)
         for path_, leaf in like_flat:
             key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))

@@ -41,6 +41,8 @@ class VoteStrategy(str, enum.Enum):
     PSUM_INT8 = "psum_int8"            # int8 all-reduce of signs
     ALLGATHER_1BIT = "allgather_1bit"  # paper-faithful wire protocol: packed AG + popcount
     HIERARCHICAL = "hierarchical"      # int8 RS in pod + int8 psum across pods + packed AG
+    AUTO = "auto"                      # cheapest of the above per the comm cost model
+                                       # (resolved by core.vote_engine.select_strategy)
 
 
 class MomentumMode(str, enum.Enum):

@@ -19,14 +19,20 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ByzantineConfig
 
 
-def replica_index(axis_names: Sequence[str]) -> jax.Array:
-    """Linear index of this replica over the (manual) vote axes."""
+def replica_index(axis_names: Sequence[str], like=None) -> jax.Array:
+    """Linear index of this replica over the (manual) vote axes.
+
+    `like` anchors the legacy-JAX emulation's sharding (see
+    ``compat.axis_index``); pass any traced array from the manual region.
+    """
     idx = jnp.int32(0)
     for name in axis_names:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        idx = idx * compat.axis_size(name) + compat.axis_index(name,
+                                                               like=like)
     return idx
 
 
@@ -42,7 +48,7 @@ def apply_adversary(signs: jax.Array, cfg: ByzantineConfig,
     """
     if cfg.mode == "none" or cfg.num_adversaries == 0:
         return signs
-    idx = replica_index(axis_names)
+    idx = replica_index(axis_names, like=signs)
     is_adv = idx < cfg.num_adversaries
     if cfg.mode == "sign_flip":
         evil = -signs

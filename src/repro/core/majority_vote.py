@@ -5,112 +5,67 @@ All functions here run *inside* a ``shard_map`` that is manual over the
 vote axes (``'data'`` and, multi-pod, ``'pod'``) — per-replica values are
 visible and every collective is explicit.
 
-Strategies (flat, over a replica-local 1-D sign tensor):
+The wire protocols themselves live in ``repro.core.vote_engine``: a
+:class:`~repro.core.vote_engine.VoteEngine` drives one of three pluggable
+strategies (``psum_int8``, ``allgather_1bit``, ``hierarchical``) through a
+pack → exchange → tally → unpack pipeline, with ``VoteStrategy.AUTO``
+resolved against the comm cost model. This module keeps the tree-level and
+ZeRO-3-fused entry points the trainer uses, plus flat per-strategy wrappers
+for tests and the distributed harness.
 
-* ``psum_int8``      — int-sum of signs over the vote axes, then sign.
-                       One all-reduce of int8 (int16 above 127 replicas).
-* ``allgather_1bit`` — paper-faithful wire protocol: bit-pack to uint32,
-                       all-gather, local popcount majority. Every chip
-                       plays the server; 1 bit/param on the wire.
-* ``hierarchical``   — int8 reduce-scatter within pod -> int8 psum of the
-                       scattered counts across pods -> local sign ->
-                       bit-packed all-gather of the result. The global
-                       majority (counts cross pods, not votes-of-votes).
-
-Plus the fused scalable path: ``make_fsdp_hooks`` returns parameter hooks
-that all-gather ZeRO-3-sharded parameters in the forward pass and perform
+The fused scalable path: ``make_fsdp_hooks`` returns parameter hooks that
+all-gather ZeRO-3-sharded parameters in the forward pass and perform
 **sign + majority vote inside the backward reduce-scatter** — the vote
 rides the collective ZeRO does anyway, in int8 instead of bf16 (beyond-
 paper; see DESIGN.md §3 Mode B).
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ByzantineConfig, VoteStrategy
 from repro.core import byzantine, sign_compress as sc
+from repro.core.vote_engine import (  # noqa: F401  (re-exported API)
+    STRATEGIES, VoteEngine, count_dtype, num_voters, vote_axes_in)
 
 
 # ---------------------------------------------------------------------------
-# helpers
-# ---------------------------------------------------------------------------
-
-
-def vote_axes_in(mesh_axis_names: Sequence[str]) -> Tuple[str, ...]:
-    return tuple(a for a in ("pod", "data") if a in mesh_axis_names)
-
-
-def num_voters(axes: Sequence[str]) -> int:
-    n = 1
-    for a in axes:
-        n *= jax.lax.axis_size(a)
-    return n
-
-
-def count_dtype(n_voters: int):
-    if n_voters <= 127:
-        return jnp.int8
-    if n_voters <= 32_767:
-        return jnp.int16
-    return jnp.int32
-
-
-# ---------------------------------------------------------------------------
-# flat strategies
+# flat strategy wrappers (engine-backed; kept for tests/benchmarks)
 # ---------------------------------------------------------------------------
 
 
 def vote_psum(signs: jax.Array, axes: Sequence[str]) -> jax.Array:
     """signs int8 (ternary ok) -> int8 majority (ties/zero-sum -> 0)."""
-    acc = count_dtype(num_voters(axes))
-    counts = jax.lax.psum(signs.astype(acc), axis_name=tuple(axes))
-    return jnp.sign(counts).astype(jnp.int8)
+    return STRATEGIES[VoteStrategy.PSUM_INT8].vote(signs, tuple(axes))
 
 
 def vote_allgather_1bit(signs: jax.Array, axes: Sequence[str],
                         majority_fn: Optional[Callable] = None) -> jax.Array:
-    """signs int8 1-D -> int8 ±1 majority via the packed wire protocol."""
-    majority_fn = majority_fn or sc.packed_majority
-    flat, n = sc.pad_to_pack(signs)
-    packed = sc.pack_signs(flat)
-    for a in axes:  # gather over each vote axis; leading M dims stack
-        packed = jax.lax.all_gather(packed, a, tiled=False)
-    packed = packed.reshape(-1, packed.shape[-1])
-    maj = majority_fn(packed)
-    return sc.unpack_signs(maj, jnp.int8)[:n]
+    """signs int8 -> int8 ±1 majority via the packed wire protocol."""
+    from repro.core.vote_engine import Allgather1BitStrategy
+    strat = (Allgather1BitStrategy(tally_fn=majority_fn) if majority_fn
+             else STRATEGIES[VoteStrategy.ALLGATHER_1BIT])
+    return strat.vote(signs, tuple(axes))
 
 
 def vote_hierarchical(signs: jax.Array, data_axis: str,
                       pod_axis: Optional[str]) -> jax.Array:
-    """signs int8 1-D -> int8 ±1; RS(int8) + pod-psum + packed AG."""
-    dsize = jax.lax.axis_size(data_axis)
-    flat, n = sc.pad_to_pack(signs, sc.PACK * dsize)
-    acc = count_dtype(dsize * (jax.lax.axis_size(pod_axis) if pod_axis else 1))
-    counts = jax.lax.psum_scatter(flat.astype(acc), data_axis, tiled=True)
-    if pod_axis is not None:
-        counts = jax.lax.psum(counts, pod_axis)
-    shard_vote = sc.sign_binary(counts)          # ties -> +1 (1-bit wire)
-    packed = sc.pack_signs(shard_vote)
-    packed = jax.lax.all_gather(packed, data_axis, tiled=True)
-    return sc.unpack_signs(packed, jnp.int8)[:n]
+    """signs int8 -> int8 ±1; RS(int8) + pod-psum + packed AG."""
+    from repro.core.vote_engine import HierarchicalStrategy
+    axes = (pod_axis, data_axis) if pod_axis else (data_axis,)
+    return HierarchicalStrategy(data_axis, pod_axis).vote(signs, axes)
 
 
 def majority_vote_flat(signs: jax.Array, strategy: VoteStrategy,
                        axes: Sequence[str]) -> jax.Array:
-    if strategy == VoteStrategy.PSUM_INT8:
-        return vote_psum(signs, axes)
-    if strategy == VoteStrategy.ALLGATHER_1BIT:
-        return vote_allgather_1bit(signs, axes)
-    if strategy == VoteStrategy.HIERARCHICAL:
-        pod = "pod" if "pod" in axes else None
-        return vote_hierarchical(signs, "data", pod)
-    raise ValueError(strategy)
+    """Dispatch a flat sign tensor through the engine (AUTO resolves on the
+    tensor's own size)."""
+    return VoteEngine(strategy=strategy, axes=tuple(axes)).vote_signs(signs)
 
 
 # ---------------------------------------------------------------------------
@@ -125,54 +80,6 @@ def majority_vote_flat(signs: jax.Array, strategy: VoteStrategy,
 # which merges small same-type collectives on real backends.
 
 
-def _pad_last(x: jax.Array, multiple: int) -> Tuple[jax.Array, int]:
-    n = x.shape[-1]
-    rem = (-n) % multiple
-    if rem:
-        pad = [(0, 0)] * (x.ndim - 1) + [(0, rem)]
-        x = jnp.pad(x, pad)
-    return x, n
-
-
-def _vote_1bit_leaf(signs: jax.Array, axes: Sequence[str]) -> jax.Array:
-    """Per-leaf paper wire protocol: pack last dim, all-gather over the
-    vote axes, bit-sliced popcount majority (ties -> +1)."""
-    padded, n = _pad_last(signs, sc.PACK)
-    packed = sc.pack_signs(padded)
-    for a in axes:
-        packed = jax.lax.all_gather(packed, a, tiled=False)
-    packed = packed.reshape((-1,) + packed.shape[len(axes):])  # (M, ..., w)
-    m = packed.shape[0]
-    shifts = jnp.arange(sc.PACK, dtype=jnp.uint32)
-    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
-    counts = jnp.sum(bits.astype(jnp.int32), axis=0)            # (..., w, 32)
-    maj = (2 * counts >= m).astype(jnp.uint32)
-    packed_maj = jnp.zeros(maj.shape[:-1], jnp.uint32)
-    for j in range(sc.PACK):
-        packed_maj = packed_maj | (maj[..., j] << jnp.uint32(j))
-    out = sc.unpack_signs(packed_maj, jnp.int8)
-    return out[..., :n]
-
-
-def _vote_hierarchical_leaf(signs: jax.Array, data_axis: str,
-                            pod_axis: Optional[str]) -> jax.Array:
-    """Per-leaf hierarchical vote: int8 reduce-scatter of the last dim
-    within pod, psum of counts across pods, sign, packed all-gather."""
-    dsize = jax.lax.axis_size(data_axis)
-    padded, n = _pad_last(signs, sc.PACK * dsize)
-    acc = count_dtype(dsize * (jax.lax.axis_size(pod_axis) if pod_axis else 1))
-    counts = jax.lax.psum_scatter(
-        padded.astype(acc), data_axis,
-        scatter_dimension=padded.ndim - 1, tiled=True)
-    if pod_axis is not None:
-        counts = jax.lax.psum(counts, pod_axis)
-    shard_vote = sc.sign_binary(counts)             # ties -> +1 (1-bit wire)
-    packed = jax.lax.all_gather(
-        sc.pack_signs(shard_vote), data_axis,
-        axis=shard_vote.ndim - 1, tiled=True)
-    return sc.unpack_signs(packed, jnp.int8)[..., :n]
-
-
 def tree_vote(tree, strategy: VoteStrategy, axes: Sequence[str],
               byz: Optional[ByzantineConfig] = None):
     """Vote a pytree of local momenta/grads; returns ±1 tree (leaf dtypes).
@@ -180,27 +87,8 @@ def tree_vote(tree, strategy: VoteStrategy, axes: Sequence[str],
     With no vote axes (single process) the vote of M=1 degenerates to the
     leaf's own sign.
     """
-    axes = tuple(axes)
-    pod = "pod" if "pod" in axes else None
-
-    def vote_leaf(l):
-        shape = l.shape
-        s = sc.sign_ternary(l if l.ndim else l.reshape(1))
-        if byz is not None and axes:
-            s = byzantine.apply_adversary(s, byz, axes)
-        if not axes:
-            v = s
-        elif strategy == VoteStrategy.PSUM_INT8:
-            v = vote_psum(s, axes)
-        elif strategy == VoteStrategy.ALLGATHER_1BIT:
-            v = _vote_1bit_leaf(s, axes)
-        elif strategy == VoteStrategy.HIERARCHICAL:
-            v = _vote_hierarchical_leaf(s, "data", pod)
-        else:
-            raise ValueError(strategy)
-        return v.reshape(shape).astype(l.dtype)
-
-    return jax.tree.map(vote_leaf, tree)
+    engine = VoteEngine(strategy=strategy, axes=tuple(axes), byz=byz)
+    return engine.vote_tree(tree)
 
 
 def tree_mean(tree, axes: Sequence[str]):
@@ -241,13 +129,13 @@ def make_gather_vote(dim: int, data_axis: str, pod_axis: Optional[str], *,
     spec = out_spec if out_spec is not None else P()
 
     def _wrap(fn, in_spec, out_spec_):
-        return jax.shard_map(fn, in_specs=in_spec, out_specs=out_spec_,
-                             axis_names={"model"}, check_vma=False)
+        return compat.shard_map(fn, in_specs=in_spec, out_specs=out_spec_,
+                                axis_names={"model"}, check_vma=False)
 
     @jax.custom_vjp
     def gather(x):
         def inner(xl):
-            return jax.lax.all_gather(xl, data_axis, axis=dim, tiled=True)
+            return compat.all_gather(xl, data_axis, axis=dim, tiled=True)
 
         return _wrap(inner, (spec,), spec)(x)
 
@@ -259,8 +147,8 @@ def make_gather_vote(dim: int, data_axis: str, pod_axis: Optional[str], *,
         if byz is not None:
             axes = (pod_axis, data_axis) if pod_axis else (data_axis,)
             s = byzantine.apply_adversary(s, byz, axes)
-        nvote = jax.lax.axis_size(data_axis) * (
-            jax.lax.axis_size(pod_axis) if pod_axis else 1)
+        nvote = compat.axis_size(data_axis) * (
+            compat.axis_size(pod_axis) if pod_axis else 1)
         counts = jax.lax.psum_scatter(
             s.astype(count_dtype(nvote)), data_axis,
             scatter_dimension=dim, tiled=True)
@@ -269,8 +157,8 @@ def make_gather_vote(dim: int, data_axis: str, pod_axis: Optional[str], *,
         return jnp.sign(counts).astype(g.dtype)
 
     def _mean_inner(g):
-        nvote = jax.lax.axis_size(data_axis) * (
-            jax.lax.axis_size(pod_axis) if pod_axis else 1)
+        nvote = compat.axis_size(data_axis) * (
+            compat.axis_size(pod_axis) if pod_axis else 1)
         red = jax.lax.psum_scatter(g, data_axis, scatter_dimension=dim,
                                    tiled=True)
         if pod_axis is not None:
@@ -341,7 +229,7 @@ def make_fsdp_hooks(specs: Dict[str, P], mesh_axis_names: Sequence[str], *,
 
 
 # ---------------------------------------------------------------------------
-# communication accounting (used by benchmarks; mirrors the strategies)
+# communication accounting (engine-backed; mirrors the strategies)
 # ---------------------------------------------------------------------------
 
 
@@ -350,17 +238,7 @@ def comm_bytes_per_step(n_params: int, strategy: VoteStrategy,
                         grad_bytes: int = 2) -> Dict[str, float]:
     """Analytic per-chip collective bytes for one vote vs a dense
     all-reduce of the same gradient (ring terms; used by bench_comm and
-    cross-checked against HLO-parsed bytes in the dry-run)."""
-    d = float(n_params)
-    M = data_size * pod_size
-    dense = 2 * d * grad_bytes * (M - 1) / M          # ring all-reduce
-    if strategy == VoteStrategy.PSUM_INT8:
-        vote = 2 * d * 1 * (M - 1) / M                # int8 all-reduce
-    elif strategy == VoteStrategy.ALLGATHER_1BIT:
-        vote = (M - 1) * d / 8                        # packed all-gather
-    else:  # hierarchical
-        rs = d * 1 * (data_size - 1) / data_size      # int8 RS in pod
-        xpod = (d / data_size) * 1 * 2 * (pod_size - 1) / max(pod_size, 1)
-        ag = (d / 8) * (data_size - 1) / data_size    # packed AG
-        vote = rs + xpod + ag
-    return {"dense_allreduce": dense, "vote": vote, "ratio": dense / vote}
+    cross-checked against HLO-parsed bytes in the dry-run). AUTO resolves
+    to the cheapest strategy for this mesh shape."""
+    return VoteEngine(strategy=strategy).comm_bytes(
+        n_params, data_size, pod_size, grad_bytes)

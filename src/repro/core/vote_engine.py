@@ -1,0 +1,430 @@
+"""The VoteEngine subsystem: one interface over every majority-vote wire
+protocol (DESIGN.md §2).
+
+The paper's parameter server is a four-stage pipeline
+
+    pack  ->  exchange  ->  tally  ->  unpack
+
+* **pack**     — turn a replica-local sign tensor into its wire format
+                 (int counts, or 32-signs-per-uint32 packed words);
+* **exchange** — the mesh collectives that move the wire format between
+                 replicas (all-reduce / all-gather / reduce-scatter);
+* **tally**    — compute the majority from what arrived (sign of counts,
+                 or bit-sliced popcount over packed words);
+* **unpack**   — decode the decision back to a ±1 sign tensor.
+
+Each :class:`VoteStrategyImpl` realises those stages differently but is
+interchangeable behind :class:`VoteEngine`, which is what the trainer
+(`train/train_step.py`), the Byzantine machinery
+(`distributed/fault_tolerance.py`) and the benchmarks
+(`benchmarks/bench_comm.py`) all drive — one engine, one set of semantics,
+one accounting model.
+
+Strategy selection: :func:`select_strategy` prices each strategy's wire
+bytes through ``distributed.comm_model`` (alpha-beta ICI/DCI terms) for the
+given mesh shape and parameter count; ``VoteStrategy.AUTO`` resolves to the
+cheapest. The choice is compile-time (mesh shape and param count are
+static), so AUTO costs nothing at runtime.
+
+Tie conventions differ by wire format (DESIGN.md §5): integer-count
+strategies use ternary signs (a tied or all-zero coordinate yields 0 —
+abstention), while the 1-bit wire can only encode two states, so packed
+strategies resolve ties to +1 exactly like ``kernels/ref.py``.
+
+All vote entry points accept N-D tensors and pack along the LAST dim only:
+flattening leaves would destroy their auto ('model') shardings and force
+full all-gathers of every TP-sharded tensor (measured: 14.3 GB of int8
+signs for qwen2-moe before this was changed).
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.configs.base import ByzantineConfig, VoteStrategy
+from repro.core import byzantine, sign_compress as sc
+from repro.distributed import comm_model
+
+
+# ---------------------------------------------------------------------------
+# mesh helpers (shared by majority_vote and the strategies)
+# ---------------------------------------------------------------------------
+
+
+def vote_axes_in(mesh_axis_names: Sequence[str]) -> Tuple[str, ...]:
+    """The mesh axes the vote runs over, outermost first."""
+    return tuple(a for a in ("pod", "data") if a in mesh_axis_names)
+
+
+def num_voters(axes: Sequence[str]) -> int:
+    """Static replica count over the (manual) vote axes, inside a trace."""
+    n = 1
+    for a in axes:
+        n *= compat.axis_size(a)
+    return n
+
+
+def count_dtype(n_voters: int):
+    """Narrowest signed integer that can hold a vote count of `n_voters`."""
+    if n_voters <= 127:
+        return jnp.int8
+    if n_voters <= 32_767:
+        return jnp.int16
+    return jnp.int32
+
+
+def _count_bytes(n_voters: int) -> int:
+    return jnp.dtype(count_dtype(n_voters)).itemsize
+
+
+def _pad_last(x: jax.Array, multiple: int) -> Tuple[jax.Array, int]:
+    n = x.shape[-1]
+    return compat.pad_trailing(x, (-n) % multiple), n
+
+
+# ---------------------------------------------------------------------------
+# strategy interface
+# ---------------------------------------------------------------------------
+
+
+class VoteStrategyImpl(abc.ABC):
+    """One wire protocol for the majority vote.
+
+    ``vote`` composes the four pipeline stages over the vote axes; the
+    accounting methods price the exchange stage for the cost model and the
+    benchmarks. Inputs to ``vote`` are replica-local int8 sign tensors
+    (ternary ok); outputs are int8 majorities with this strategy's tie
+    convention.
+    """
+
+    kind: VoteStrategy
+    #: bits each replica puts on the wire per parameter, per exchange
+    wire_bits_per_param: float
+    #: tie convention of the decoded majority ("zero" or "plus_one")
+    ties: str
+
+    # ---- pipeline stages ----
+
+    @abc.abstractmethod
+    def pack(self, signs: jax.Array, n_voters: int) -> jax.Array:
+        """Replica-local signs -> wire tensor."""
+
+    @abc.abstractmethod
+    def exchange(self, wire: jax.Array, axes: Sequence[str]) -> jax.Array:
+        """Run the collectives; returns whatever tally needs."""
+
+    @abc.abstractmethod
+    def tally(self, arrived: jax.Array, n_voters: int) -> jax.Array:
+        """Aggregate to the (still-encoded) majority decision."""
+
+    @abc.abstractmethod
+    def unpack(self, decision: jax.Array, n: int, dtype) -> jax.Array:
+        """Decode the decision to (..., n) ±1/0 signs in `dtype`."""
+
+    def vote(self, signs: jax.Array, axes: Sequence[str]) -> jax.Array:
+        """signs int8 (..., n) -> int8 majority (..., n) over `axes`."""
+        m = num_voters(axes)
+        n = signs.shape[-1]
+        wire = self.pack(signs, m)
+        arrived = self.exchange(wire, axes)
+        decision = self.tally(arrived, m)
+        return self.unpack(decision, n, jnp.int8)
+
+    # ---- accounting (per-chip bytes; ring collective terms) ----
+
+    def payload_bytes(self, n_params: int, n_voters: int = 2) -> float:
+        """One replica's outbound wire payload (the paper's 'bits sent')."""
+        return n_params * self.wire_bits_per_param / 8.0
+
+    @abc.abstractmethod
+    def ring_bytes(self, n_params: int, data_size: int,
+                   pod_size: int = 1) -> Dict[str, float]:
+        """Per-chip transit bytes of the exchange, split ICI/DCI, plus the
+        collective count (for the latency term)."""
+
+    def estimated_time(self, n_params: int, data_size: int,
+                       pod_size: int = 1) -> float:
+        b = self.ring_bytes(n_params, data_size, pod_size)
+        return comm_model.collective_time(
+            b["ici"], b["dci"], n_collectives=int(b["n_collectives"])).time_s
+
+
+class PsumInt8Strategy(VoteStrategyImpl):
+    """Integer-sum vote: one all-reduce of narrow counts, then sign.
+
+    pack: cast ternary signs to the narrowest count dtype; exchange: psum
+    over the vote axes; tally: the psum already is the count tensor; unpack:
+    sign of counts (ties and all-abstain coordinates -> 0).
+    """
+
+    kind = VoteStrategy.PSUM_INT8
+    wire_bits_per_param = 8.0   # int8 counts up to 127 voters
+    ties = "zero"
+
+    def pack(self, signs, n_voters):
+        return signs.astype(count_dtype(n_voters))
+
+    def exchange(self, wire, axes):
+        return jax.lax.psum(wire, axis_name=tuple(axes))
+
+    def tally(self, arrived, n_voters):
+        return arrived
+
+    def unpack(self, decision, n, dtype):
+        return jnp.sign(decision).astype(dtype)
+
+    def ring_bytes(self, n_params, data_size, pod_size=1):
+        c = _count_bytes(data_size * pod_size)
+        m = data_size * pod_size
+        return {"ici": 2.0 * n_params * c * (data_size - 1) / data_size,
+                "dci": (2.0 * (n_params / data_size) * c
+                        * (pod_size - 1) / pod_size if pod_size > 1 else 0.0),
+                "n_collectives": 1, "total": 2.0 * n_params * c * (m - 1) / m}
+
+
+class Allgather1BitStrategy(VoteStrategyImpl):
+    """The paper-faithful wire protocol: every chip plays the server.
+
+    pack: bit-pack 32 signs per uint32 word (1 bit/param on the wire);
+    exchange: all-gather the packed words over each vote axis; tally:
+    bit-sliced popcount majority across the voter dim; unpack: decode the
+    packed majority (ties -> +1).
+    """
+
+    kind = VoteStrategy.ALLGATHER_1BIT
+    wire_bits_per_param = 1.0
+    ties = "plus_one"
+
+    def __init__(self, tally_fn: Optional[Callable] = None):
+        # override point for the Pallas popcount kernel (kernels.ops.majority)
+        self._tally_fn = tally_fn
+
+    def pack(self, signs, n_voters):
+        padded, _ = _pad_last(signs, sc.PACK)
+        return sc.pack_signs(padded)
+
+    def exchange(self, wire, axes):
+        packed = wire
+        for a in axes:   # gather over each vote axis; leading M dims stack
+            packed = compat.all_gather(packed, a, tiled=False)
+        # collapse the stacked gather dims into one voter dim M
+        return packed.reshape((-1,) + packed.shape[len(tuple(axes)):])
+
+    def tally(self, arrived, n_voters):
+        if self._tally_fn is not None:
+            return self._tally_fn(arrived)
+        m = arrived.shape[0]
+        shifts = jnp.arange(sc.PACK, dtype=jnp.uint32)
+        bits = (arrived[..., None] >> shifts) & jnp.uint32(1)   # (M, ..., w, 32)
+        counts = jnp.sum(bits.astype(jnp.int32), axis=0)        # (..., w, 32)
+        maj = (2 * counts >= m).astype(jnp.uint32)
+        packed_maj = jnp.zeros(maj.shape[:-1], jnp.uint32)
+        for j in range(sc.PACK):   # unrolled OR (SPMD-partitioner-safe)
+            packed_maj = packed_maj | (maj[..., j] << jnp.uint32(j))
+        return packed_maj
+
+    def unpack(self, decision, n, dtype):
+        return sc.unpack_signs(decision, dtype)[..., :n]
+
+    def ring_bytes(self, n_params, data_size, pod_size=1):
+        # exchange() gathers pod-first (vote_axes_in order): the DCI hop
+        # moves one packed payload, the ICI hop then gathers the stacked
+        # (pod, w) words
+        m = data_size * pod_size
+        dci = (pod_size - 1) * n_params / 8.0
+        ici = (data_size - 1) * pod_size * n_params / 8.0
+        assert abs((ici + dci) - (m - 1) * n_params / 8.0) < 1e-6 * max(m, 1)
+        return {"ici": ici, "dci": dci,
+                "n_collectives": 1 + (1 if pod_size > 1 else 0),
+                "total": ici + dci}
+
+
+class HierarchicalStrategy(VoteStrategyImpl):
+    """Count-shards within the pod, sums counts across pods, rebroadcasts
+    the 1-bit result: the global majority (counts cross pods — NOT a
+    vote-of-votes).
+
+    The stages interleave two exchanges, so ``vote`` overrides the default
+    composition: pack casts to counts, exchange is the int8 reduce-scatter
+    (+ cross-pod psum of the scattered counts), tally is the binary sign of
+    the shard's counts, and unpack re-packs the shard decision, all-gathers
+    it (1 bit/param), and decodes — the second collective is part of the
+    decode because every replica needs the full decision back.
+    """
+
+    kind = VoteStrategy.HIERARCHICAL
+    wire_bits_per_param = 8.0   # int8 counts in the reduce-scatter
+    ties = "plus_one"
+
+    def __init__(self, data_axis: str = "data",
+                 pod_axis: Optional[str] = "pod"):
+        self.data_axis = data_axis
+        self.pod_axis = pod_axis
+
+    def _axes(self, axes: Sequence[str]) -> Tuple[str, Optional[str]]:
+        pod = self.pod_axis if self.pod_axis in tuple(axes) else None
+        return self.data_axis, pod
+
+    def pack(self, signs, n_voters):
+        return signs.astype(count_dtype(n_voters))
+
+    def exchange(self, wire, axes):
+        data_axis, pod_axis = self._axes(axes)
+        counts = jax.lax.psum_scatter(
+            wire, data_axis, scatter_dimension=wire.ndim - 1, tiled=True)
+        if pod_axis is not None:
+            counts = jax.lax.psum(counts, pod_axis)
+        return counts
+
+    def tally(self, arrived, n_voters):
+        return sc.sign_binary(arrived)       # ties -> +1 (1-bit wire)
+
+    def unpack(self, decision, n, dtype):
+        # second (cheap) exchange: packed all-gather of the shard decision
+        packed = compat.all_gather(
+            sc.pack_signs(decision), self.data_axis,
+            axis=decision.ndim - 1, tiled=True)
+        return sc.unpack_signs(packed, dtype)[..., :n]
+
+    def vote(self, signs, axes):
+        data_axis, pod_axis = self._axes(axes)
+        dsize = compat.axis_size(data_axis)
+        m = dsize * (compat.axis_size(pod_axis) if pod_axis else 1)
+        n = signs.shape[-1]
+        padded, _ = _pad_last(signs, sc.PACK * dsize)
+        decision = self.tally(self.exchange(self.pack(padded, m), axes), m)
+        return self.unpack(decision, n, jnp.int8)
+
+    def ring_bytes(self, n_params, data_size, pod_size=1):
+        d = float(n_params)
+        rs = d * 1 * (data_size - 1) / data_size        # int8 RS in pod
+        xpod = ((d / data_size) * 1 * 2 * (pod_size - 1) / max(pod_size, 1)
+                if pod_size > 1 else 0.0)
+        ag = (d / 8) * (data_size - 1) / data_size      # packed AG
+        return {"ici": rs + ag, "dci": xpod,
+                "n_collectives": 2 + (1 if pod_size > 1 else 0),
+                "total": rs + xpod + ag}
+
+
+STRATEGIES: Dict[VoteStrategy, VoteStrategyImpl] = {
+    VoteStrategy.PSUM_INT8: PsumInt8Strategy(),
+    VoteStrategy.ALLGATHER_1BIT: Allgather1BitStrategy(),
+    VoteStrategy.HIERARCHICAL: HierarchicalStrategy(),
+}
+
+
+# ---------------------------------------------------------------------------
+# strategy auto-selection
+# ---------------------------------------------------------------------------
+
+
+def select_strategy(n_params: int, data_size: int,
+                    pod_size: int = 1) -> VoteStrategy:
+    """Cheapest concrete strategy under the alpha-beta comm model for this
+    mesh shape and parameter count. Deterministic and static (compile-time);
+    single-replica meshes degenerate to PSUM_INT8 (no wire traffic at all).
+    """
+    if data_size * pod_size <= 1:
+        return VoteStrategy.PSUM_INT8
+    times = {k: s.estimated_time(n_params, data_size, pod_size)
+             for k, s in STRATEGIES.items()}
+    return min(times, key=times.get)
+
+
+def resolve_strategy(strategy: VoteStrategy, n_params: int,
+                     data_size: int, pod_size: int = 1) -> VoteStrategy:
+    if strategy == VoteStrategy.AUTO:
+        return select_strategy(n_params, data_size, pod_size)
+    return strategy
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class VoteEngine:
+    """pack -> exchange -> tally -> unpack, behind one object.
+
+    `axes` are the manual mesh axes the vote runs over (empty = the M=1
+    single-process degenerate case where the vote is the local sign).
+    `byz` compiles the Byzantine adversary models into the pack stage, so
+    fault injection perturbs exactly the tensors the trainer votes on.
+    `strategy` may be ``VoteStrategy.AUTO``; it resolves per tree against
+    the comm cost model (needs the axis sizes, i.e. a trace context).
+    """
+
+    strategy: VoteStrategy
+    axes: Tuple[str, ...] = ()
+    byz: Optional[ByzantineConfig] = None
+
+    def _resolved(self, n_params: int) -> VoteStrategyImpl:
+        data = compat.axis_size("data") if "data" in self.axes else 1
+        pod = compat.axis_size("pod") if "pod" in self.axes else 1
+        return STRATEGIES[resolve_strategy(self.strategy, n_params, data, pod)]
+
+    # ---- voting ----
+
+    def vote_signs(self, signs: jax.Array) -> jax.Array:
+        """Replica-local int8 signs (..., n) -> int8 majority (..., n)."""
+        if not self.axes:
+            return signs
+        return self._resolved(signs.size).vote(signs, self.axes)
+
+    def vote(self, values: jax.Array) -> jax.Array:
+        """Replica-local real tensor -> majority of signs, in the input
+        dtype (the trainer's per-leaf entry point)."""
+        shape = values.shape
+        s = sc.sign_ternary(values if values.ndim else values.reshape(1))
+        if self.byz is not None and self.axes:
+            s = byzantine.apply_adversary(s, self.byz, self.axes)
+        return self.vote_signs(s).reshape(shape).astype(values.dtype)
+
+    def vote_tree(self, tree):
+        """Vote every leaf of a pytree (momenta/grads); ±1 tree in the leaf
+        dtypes. AUTO resolves once per tree on the total parameter count."""
+        if self.strategy == VoteStrategy.AUTO and self.axes:
+            total = sum(l.size for l in jax.tree.leaves(tree))
+            data = compat.axis_size("data") if "data" in self.axes else 1
+            pod = compat.axis_size("pod") if "pod" in self.axes else 1
+            eng = dataclasses.replace(
+                self, strategy=select_strategy(total, data, pod))
+        else:
+            eng = self
+        return jax.tree.map(eng.vote, tree)
+
+    def vote_stacked(self, stacked: jax.Array,
+                     use_kernels: bool = True) -> jax.Array:
+        """Host-local simulation path: (M, n) real values from M simulated
+        voters -> (n,) int8 majority (ties -> +1), via the fused Pallas
+        sign+pack+popcount kernel when available. Benchmarks and fault
+        drills share this with the mesh path's semantics."""
+        m, n = stacked.shape
+        if use_kernels:
+            from repro.kernels import ops
+            packed = ops.fused_majority(stacked)
+            return ops.bitunpack(packed, n, jnp.int8)
+        padded, _ = _pad_last(stacked, sc.PACK)
+        maj = sc.packed_majority(sc.pack_signs(padded))
+        return sc.unpack_signs(maj, jnp.int8)[:n]
+
+    # ---- accounting ----
+
+    def comm_bytes(self, n_params: int, data_size: int, pod_size: int = 1,
+                   grad_bytes: int = 2) -> Dict[str, float]:
+        """Analytic per-chip collective bytes for one vote vs a dense
+        all-reduce of the same gradient (ring terms)."""
+        strat = STRATEGIES[resolve_strategy(
+            self.strategy, n_params, data_size, pod_size)]
+        d = float(n_params)
+        m = data_size * pod_size
+        dense = 2 * d * grad_bytes * (m - 1) / m        # ring all-reduce
+        vote = strat.ring_bytes(n_params, data_size, pod_size)["total"]
+        return {"dense_allreduce": dense, "vote": vote,
+                "ratio": dense / vote if vote else float("inf")}

@@ -17,6 +17,11 @@ that property:
 * ``Watchdog`` — wall-clock supervision of the train loop; on a stuck
   step (collective hang after a node failure) it triggers the
   restore-and-rescale path in launch/train.py.
+* ``vote_with_failures`` — the failure drill's aggregation path: stale-vote
+  substitution + Byzantine perturbation feeding the SAME
+  :class:`~repro.core.vote_engine.VoteEngine` the trainer steps through,
+  so robustness experiments measure the production wire protocol, not a
+  lookalike.
 """
 from __future__ import annotations
 
@@ -27,6 +32,8 @@ from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 
 
 # ---------------------------------------------------------------------------
@@ -41,10 +48,29 @@ def simulate_stragglers(signs: jax.Array, prev_signs: jax.Array,
     return jnp.where(straggler_mask, prev_signs, signs)
 
 
-def straggler_mask_for(axis_names: Sequence[str], n_stale: int) -> jax.Array:
-    """First `n_stale` replicas along the vote axes are stale this step."""
+def straggler_mask_for(axis_names: Sequence[str], n_stale: int,
+                       like=None) -> jax.Array:
+    """First `n_stale` replicas along the vote axes are stale this step.
+    `like` anchors the legacy-JAX index emulation (compat.axis_index)."""
     from repro.core.byzantine import replica_index
-    return replica_index(axis_names) < n_stale
+    return replica_index(axis_names, like=like) < n_stale
+
+
+def vote_with_failures(engine, signs: jax.Array,
+                       prev_signs: Optional[jax.Array] = None,
+                       n_stale: int = 0) -> jax.Array:
+    """One aggregation under failures, through the trainer's engine.
+
+    Runs inside the manual vote region: substitutes stale votes for the
+    first `n_stale` replicas (when `prev_signs` is given), then lets the
+    engine apply its compiled Byzantine model and wire protocol. The paper's
+    point (§3.4) made executable: every failure mode enters as a ≤1-vote
+    perturbation to the same pack → exchange → tally → unpack pipeline.
+    """
+    if n_stale and prev_signs is not None:
+        mask = straggler_mask_for(engine.axes, n_stale, like=signs)
+        signs = simulate_stragglers(signs, prev_signs, mask)
+    return engine.vote(signs)
 
 
 # ---------------------------------------------------------------------------
@@ -101,9 +127,9 @@ def plan_rescale(old_shape: Tuple[int, ...], old_axes: Tuple[str, ...],
 
 
 def make_mesh_from_plan(plan: ElasticPlan):
-    return jax.make_mesh(
+    return compat.make_mesh(
         plan.new_shape, plan.new_axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(plan.new_shape))
+        axis_types=(compat.AxisType.Auto,) * len(plan.new_shape))
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,8 @@ import jax
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 # ---------------------------------------------------------------------------
 # activation annotation helper
 # ---------------------------------------------------------------------------
@@ -34,11 +36,11 @@ def shard(x: jax.Array, *spec) -> jax.Array:
     * entries whose dimension is not divisible by the axis size are
       dropped (e.g. 60 experts on a 16-wide model axis).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return x
     manual = {n for n, t in zip(mesh.axis_names, mesh.axis_types)
-              if t == jax.sharding.AxisType.Manual}
+              if t == compat.AxisType.Manual}
     avail = set(mesh.axis_names) - manual
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
 
@@ -57,13 +59,20 @@ def shard(x: jax.Array, *spec) -> jax.Array:
         return kept if len(kept) > 1 else kept[0]
 
     fixed = P(*(fix(e, d) for e, d in zip(spec, x.shape)))
+    if all(e is None for e in fixed):
+        return x
+    # legacy JAX resolves bare PartitionSpecs only under `with mesh:`; when
+    # the compat layer knows the concrete mesh, bind it explicitly.
+    concrete = getattr(mesh, "concrete", None)
+    if concrete is not None:
+        fixed = jax.sharding.NamedSharding(concrete, fixed)
     return jax.lax.with_sharding_constraint(x, fixed)
 
 
 def mesh_axis_size(name: str) -> int:
     """Size of a mesh axis in the current (abstract) mesh context; 1 if
     absent/no mesh. Includes Manual axes (shard_map context)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return 1
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))

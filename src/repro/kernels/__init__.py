@@ -1,3 +1,8 @@
-"""Pallas TPU kernels for the paper's compute hot spots (bit-pack, popcount
-majority vote, fused SIGNUM update) with jnp oracles in ref.py."""
+"""Pallas TPU kernels for the paper's compute hot spots (fused
+sign+bitpack+popcount majority, bit-pack/unpack, popcount vote, fused
+SIGNUM update) with jnp oracles in ref.py.
+
+``fused_vote.fused_majority_2d`` is the VoteEngine's one-pass local tally;
+``bitpack``/``vote`` remain as the staged pair for the paths where pack and
+tally are separated by a collective (the 1-bit wire protocol)."""
 from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused sign-extraction + bit-pack + popcount majority.
+
+The VoteEngine's single-pass local tally (DESIGN.md §2): given the M
+voters' raw real-valued tensors — momenta in the host-local simulation
+path, or the would-be wire payloads in the benchmarks — produce the packed
+uint32 majority words directly. The separate ``bitpack`` (pack each voter)
+and ``vote`` (popcount over packed words) kernels made M+1 passes over HBM
+and materialised M packed intermediates; this kernel reads the (M, n)
+source once and writes only the n/32-word decision:
+
+    bits    = x >= 0                      (sign extraction, binary wire
+                                           convention: ties -> +1)
+    counts  = sum over M of bits          (bit-sliced popcount)
+    maj     = 2*counts >= M
+    words   = pack 32 maj bits per uint32 (little-endian within the word)
+
+Pure VPU bit arithmetic on VMEM tiles, bandwidth-bound by design: one read
+of the sign source, one 1/(32*M)-size write. The MXU is not involved.
+
+Block shapes: input (M, 4096) fp32/bf16 -> output (128,) uint32 per grid
+step; M is small (the vote runs over data-parallel replicas, 16..32) so a
+whole voter column fits VMEM (M=32 fp32: 512 KB per block).
+
+``kernels/ref.py`` (``ref.fused_majority``) is the correctness oracle;
+``kernels/ops.fused_majority`` is the shape-handling public wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PACK = 32
+WORDS = 128  # output lane dim; input lane dim = 32*128 = 4096
+
+
+def _fused_majority_kernel(x_ref, out_ref, *, m_voters: int):
+    x = x_ref[...]                                    # (M, WORDS*32) real
+    bits = (x >= 0).astype(jnp.int32)
+    counts = jnp.sum(bits, axis=0)                    # (WORDS*32,) popcount
+    maj = (2 * counts >= m_voters).astype(jnp.uint32)
+    maj = maj.reshape(WORDS, PACK)
+    acc = jnp.zeros((WORDS,), jnp.uint32)
+    for j in range(PACK):                             # unrolled shift/OR tree
+        acc = acc | (maj[:, j] << jnp.uint32(j))
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_majority_2d(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """x (M, n) real with n % 4096 == 0 -> (n // 32,) uint32 packed majority.
+
+    bit j of word k encodes majority(x[:, 32*k + j] >= 0), ties -> +1.
+    """
+    m, n = x.shape
+    w = n // PACK
+    grid = (w // WORDS,)
+    return pl.pallas_call(
+        functools.partial(_fused_majority_kernel, m_voters=m),
+        grid=grid,
+        in_specs=[pl.BlockSpec((m, WORDS * PACK), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((WORDS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.uint32),
+        interpret=interpret,
+    )(x)

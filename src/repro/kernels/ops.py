@@ -12,7 +12,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import bitpack as _bp, signum_update as _su, vote as _vt
+from repro.kernels import (bitpack as _bp, fused_vote as _fv,
+                           signum_update as _su, vote as _vt)
 
 PACK = 32
 TILE = 8 * 128 * PACK  # elements per (ROWS, WORDS*32) block
@@ -48,6 +49,17 @@ def bitunpack(packed: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
     out = _bp.bitunpack_2d(packed.reshape(-1, 128), dtype,
                            interpret=_interpret())
     return out.reshape(-1)[:n]
+
+
+def fused_majority(x: jax.Array) -> jax.Array:
+    """(M, n) real voter values -> (ceil(n/32),) uint32 packed majority in
+    ONE pass (fused sign+bitpack+popcount; ties and padding -> sign(0)=+1)."""
+    m, n = x.shape
+    rem = (-n) % (128 * PACK)
+    if rem:
+        x = jnp.pad(x, ((0, 0), (0, rem)))
+    packed = _fv.fused_majority_2d(x, interpret=_interpret())
+    return packed[: -(-n // PACK)]
 
 
 def majority(packed: jax.Array) -> jax.Array:

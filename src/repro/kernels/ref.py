@@ -28,6 +28,12 @@ def majority(packed: jax.Array) -> jax.Array:
     return sc.packed_majority(packed)
 
 
+def fused_majority(x: jax.Array) -> jax.Array:
+    """(M, n) real, n % 32 == 0 -> (n//32,) packed majority: the composed
+    sign+pack+popcount semantics the fused kernel must reproduce."""
+    return sc.packed_majority(sc.pack_signs(x))
+
+
 def momentum_sign_pack(g: jax.Array, m: jax.Array, beta: float
                        ) -> tuple[jax.Array, jax.Array]:
     """SIGNUM worker-side hot loop: m' = beta*m + (1-beta)*g;

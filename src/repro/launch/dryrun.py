@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import SHAPES, get_config, list_archs
 from repro.configs.presets import MODE_B_ARCHS, default_train_config
 from repro.launch.hlo_stats import parse_collectives, summarize
@@ -54,7 +55,7 @@ def _compile_stats(lowered, mesh) -> Dict[str, Any]:
     compiled = lowered.compile()
     compile_s = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     colls = parse_collectives(hlo, pod_stride(mesh))
     n_chips = mesh.devices.size
@@ -100,16 +101,17 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
     record["active_params"] = cfg.active_param_count()
 
     vs = VoteStrategy(vote_strategy) if vote_strategy else None
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if cell.kind == "train":
             tcfg = default_train_config(arch, cell, kind=opt_kind,
                                         vote_strategy=vs)
             record["mode"] = tcfg.optimizer.momentum_mode.value
-            record["vote_strategy"] = tcfg.optimizer.vote_strategy.value
             record["fsdp"] = tcfg.fsdp
             record["microbatches"] = tcfg.microbatches
             record["remat"] = tcfg.remat
             art = TS.make_train_step(cfg, tcfg, mesh)
+            # post-resolution (AUTO has been priced against the mesh here)
+            record["vote_strategy"] = art.vote_strategy.value
             p_abs, o_abs = TS.abstract_state(cfg, tcfg, art, mesh)
             batch_struct = M.input_specs(cfg, cell)["batch"]
             batch_abs = {

@@ -13,12 +13,14 @@ from typing import Dict, Tuple
 
 import jax
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return compat.make_mesh(
+        shape, axes, axis_types=(compat.AxisType.Auto,) * len(shape))
 
 
 def mesh_axis_sizes(mesh) -> Dict[str, int]:

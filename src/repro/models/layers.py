@@ -19,6 +19,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.distributed.sharding import BATCH, shard
 
 Q_CHUNK = 1024  # query-chunk size for long-sequence attention
@@ -478,9 +479,9 @@ def flash_decode_sharded(q, k, v, k_cache, v_cache, pos, *, window=None,
     quantized = k_scale is not None
 
     def local_fn(qg, k_new, v_new, kc, vc, ksc, vsc, pos):
-        nshard = jax.lax.axis_size(axis)
+        nshard = compat.axis_size(axis)
         t_loc = kc.shape[1]
-        shard_start = jax.lax.axis_index(axis) * t_loc
+        shard_start = compat.axis_index(axis, like=kc) * t_loc
         if quantized:
             kq, ks_new = quantize_kv(k_new)
             vq, vs_new = quantize_kv(v_new)
@@ -510,8 +511,8 @@ def flash_decode_sharded(q, k, v, k_cache, v_cache, pos, *, window=None,
                 scale_spec if quantized else P(), P())
     out_specs = ((P(), cache_spec, cache_spec)
                  + ((scale_spec, scale_spec) if quantized else ()))
-    fn = jax.shard_map(local_fn, in_specs=in_specs, out_specs=out_specs,
-                       axis_names={axis}, check_vma=False)
+    fn = compat.shard_map(local_fn, in_specs=in_specs, out_specs=out_specs,
+                          axis_names={axis}, check_vma=False)
     ksc_in = k_scale if quantized else jnp.zeros((), jnp.float32)
     vsc_in = v_scale if quantized else jnp.zeros((), jnp.float32)
     return fn(qg, k, v, k_cache, v_cache, ksc_in, vsc_in, pos)

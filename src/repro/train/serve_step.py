@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig, ShapeCell
 from repro.distributed import sharding as shd
 from repro.models import model as M
@@ -140,9 +141,9 @@ def make_prefill_sharded(cfg: ModelConfig, mesh, *, fsdp: bool,
     # batch sharded over the batch axes; logits/cache carry the batch dim
     bspec = P(batch_axes)
     out_specs = (bspec, _cache_out_specs(cfg, batch_axes))
-    fn = jax.shard_map(local_fn, mesh=mesh,
-                       in_specs=(p_manual, bspec), out_specs=out_specs,
-                       axis_names=set(batch_axes), check_vma=False)
+    fn = compat.shard_map(local_fn, mesh=mesh,
+                          in_specs=(p_manual, bspec), out_specs=out_specs,
+                          axis_names=set(batch_axes), check_vma=False)
     return jax.jit(fn)
 
 

@@ -31,9 +31,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import (ModelConfig, MomentumMode, TrainConfig)
+from repro import compat
+from repro.configs.base import (ModelConfig, MomentumMode, TrainConfig,
+                                VoteStrategy)
 from repro.core.majority_vote import make_fsdp_hooks
 from repro.core.signum import build_optimizer
+from repro.core.vote_engine import resolve_strategy
 from repro.distributed import sharding as shd
 from repro.models import model as M
 
@@ -80,7 +83,7 @@ def _constrain_grads(grads: Dict[str, jax.Array], specs: Dict[str, P],
     out = {}
     for k, g in grads.items():
         spec = _auto_only(specs[k], manual)
-        out[k] = jax.lax.with_sharding_constraint(g, spec)
+        out[k] = compat.with_sharding_constraint(g, spec)
     return out
 
 
@@ -100,6 +103,7 @@ class StepArtifacts:
     n_vote_replicas: int
     vote_axes: Tuple[str, ...]
     fused_leaves: Tuple[str, ...]
+    vote_strategy: Optional[VoteStrategy] = None  # resolved (never AUTO)
 
 
 # ---------------------------------------------------------------------------
@@ -120,6 +124,14 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     vote_axes = tuple(a for a in ("pod", "data") if a in axis_names)
     sizes = _mesh_axis_sizes(mesh) if mesh is not None else {}
     n_votes = int(np.prod([sizes.get(a, 1) for a in vote_axes])) if mesh else 1
+
+    # AUTO resolves here, once, against the comm cost model — mesh shape and
+    # param count are static, so the whole step compiles against one wire
+    # protocol and the dry-run records which one won.
+    resolved = resolve_strategy(opt_cfg.vote_strategy, cfg.param_count(),
+                                sizes.get("data", 1), sizes.get("pod", 1))
+    if resolved != opt_cfg.vote_strategy:
+        opt_cfg = dataclasses.replace(opt_cfg, vote_strategy=resolved)
 
     specs = shd.param_specs(shapes, fsdp=tcfg.fsdp, mesh_shape=sizes or None)
     fused = tcfg.fsdp and mesh is not None
@@ -169,8 +181,19 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
                 return carry, (loss, met)
 
             zeros = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, acc_dt), params)
-            grads, (losses, mets) = jax.lax.scan(acc_body, zeros, micro)
+                lambda p: compat.zeros_like_traced(p, acc_dt), params)
+            if compat.SCAN_OVER_MANUAL_XS_SAFE or mesh is None:
+                grads, (losses, mets) = jax.lax.scan(acc_body, zeros, micro)
+            else:
+                # legacy partial-auto: scan over batch-derived xs aborts the
+                # SPMD partitioner — unroll (identical accumulation)
+                grads, acc = zeros, []
+                for i in range(tcfg.microbatches):
+                    grads, lm = acc_body(
+                        grads, jax.tree.map(lambda x: x[i], micro))
+                    acc.append(lm)
+                losses, mets = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *acc)
             grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
             loss = jnp.mean(losses)
             metrics = jax.tree.map(jnp.mean, mets)
@@ -204,7 +227,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
             step_fn=jax.jit(local_step), param_specs=specs,
             param_shard_specs={k: P() for k in specs}, opt_specs=None,
             batch_spec=None, n_vote_replicas=1, vote_axes=(),
-            fused_leaves=fused_leaves)
+            fused_leaves=fused_leaves, vote_strategy=resolved)
 
     manual = vote_axes
     p_manual = {k: _manual_only(s, manual) for k, s in specs.items()}
@@ -234,7 +257,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
                             "name": "train"})())["batch"]
     batch_spec = jax.tree.map(lambda _: P(manual), batch_struct)
 
-    step_fn = jax.jit(jax.shard_map(
+    step_fn = jax.jit(compat.shard_map(
         local_step, mesh=mesh,
         in_specs=(p_manual, opt_manual, batch_spec, P()),
         out_specs=(p_manual, opt_manual, P()),
@@ -245,7 +268,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
         step_fn=step_fn, param_specs=specs, param_shard_specs=p_manual,
         opt_specs=opt_manual, batch_spec=batch_spec,
         n_vote_replicas=n_votes, vote_axes=vote_axes,
-        fused_leaves=fused_leaves)
+        fused_leaves=fused_leaves, vote_strategy=resolved)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,12 @@
+"""Shared pytest setup.
+
+Puts ``src/`` on sys.path so ``pytest`` works without exporting PYTHONPATH
+(the tier-1 command in ROADMAP.md still sets it; both paths converge here).
+Markers are registered in pytest.ini.
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, os.path.abspath(_SRC))

@@ -18,18 +18,21 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
+from repro.compat import AxisType
 from repro.configs.base import (ByzantineConfig, MomentumMode,
                                 OptimizerConfig, TrainConfig, VoteStrategy,
                                 get_config, reduced_config)
 from repro.core import sign_compress as sc
 from repro.core.majority_vote import make_gather_vote, tree_vote
+from repro.core.vote_engine import VoteEngine
 from repro.models import model as M
 from repro.train import train_step as TS
 
-MESH = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+MESH = compat.make_mesh((4, 2), ("data", "model"),
+                        axis_types=(AxisType.Auto,) * 2)
 RNG = np.random.default_rng(0)
 
 
@@ -38,12 +41,14 @@ def check_tree_vote():
         g = jax.tree.map(lambda x: x[0], g)
         out = {}
         for strat in VoteStrategy:
+            if strat == VoteStrategy.AUTO:
+                continue  # resolves to one of the concrete rows below
             out[strat.value] = tree_vote(g, strat, ("data",))
         return jax.tree.map(lambda x: x[None], out)
 
-    sh = jax.shard_map(f, mesh=MESH, in_specs=(P("data"),),
-                       out_specs=P("data"), axis_names={"data"},
-                       check_vma=False)
+    sh = compat.shard_map(f, mesh=MESH, in_specs=(P("data"),),
+                          out_specs=P("data"), axis_names={"data"},
+                          check_vma=False)
     g = {"a": jnp.asarray(RNG.normal(size=(4, 37)).astype(np.float32)),
          "b": jnp.asarray(RNG.normal(size=(4, 8, 5)).astype(np.float32))}
     out = jax.jit(sh)(g)
@@ -51,6 +56,8 @@ def check_tree_vote():
         s = np.sign(np.asarray(g[k])).astype(np.int32)
         count = s.sum(axis=0)
         for strat in VoteStrategy:
+            if strat == VoteStrategy.AUTO:
+                continue
             got = np.asarray(out[strat.value][k][0])
             if strat == VoteStrategy.PSUM_INT8:
                 expect = np.sign(count)
@@ -69,9 +76,9 @@ def check_byzantine_vote():
         v = tree_vote(g, VoteStrategy.PSUM_INT8, ("data",), byz)
         return jax.tree.map(lambda x: x[None], v)
 
-    sh = jax.shard_map(f, mesh=MESH, in_specs=(P("data"),),
-                       out_specs=P("data"), axis_names={"data"},
-                       check_vma=False)
+    sh = compat.shard_map(f, mesh=MESH, in_specs=(P("data"),),
+                          out_specs=P("data"), axis_names={"data"},
+                          check_vma=False)
     g = {"a": jnp.asarray(RNG.normal(size=(4, 33)).astype(np.float32))}
     out = jax.jit(sh)(g)
     s = np.sign(np.asarray(g["a"])).astype(np.int32)
@@ -93,9 +100,9 @@ def check_fused_gather_vote():
 
         return jax.grad(loss)(w_slice)[None]
 
-    sh = jax.shard_map(step, mesh=MESH, in_specs=(P("data"), P("data")),
-                       out_specs=P("data"), axis_names={"data"},
-                       check_vma=False)
+    sh = compat.shard_map(step, mesh=MESH, in_specs=(P("data"), P("data")),
+                          out_specs=P("data"), axis_names={"data"},
+                          check_vma=False)
     gr = np.asarray(jax.jit(sh)(W, xs)).reshape(16, 12)
     count = sum(np.sign(np.asarray(
         jax.grad(lambda w: jnp.sum((xs[i] @ w) ** 2))(W)))
@@ -190,25 +197,26 @@ def check_dense_baseline_matches_mean():
 
 
 def check_stale_votes():
-    from repro.distributed.fault_tolerance import (simulate_stragglers,
-                                                   straggler_mask_for)
+    """Stale-vote substitution runs through the SAME VoteEngine as the
+    trainer (fault_tolerance.vote_with_failures)."""
+    from repro.distributed.fault_tolerance import vote_with_failures
+
+    engine = VoteEngine(strategy=VoteStrategy.PSUM_INT8, axes=("data",))
 
     def f(signs, prev):
-        signs, prev = signs[0], prev[0]
-        mask = straggler_mask_for(("data",), 2)
-        eff = simulate_stragglers(signs, prev, mask)
-        tot = jax.lax.psum(eff.astype(jnp.int8), "data")
-        return jnp.sign(tot).astype(jnp.float32)[None]
+        out = vote_with_failures(engine, signs[0].astype(jnp.float32),
+                                 prev[0].astype(jnp.float32), n_stale=2)
+        return out[None]
 
-    sh = jax.shard_map(f, mesh=MESH, in_specs=(P("data"), P("data")),
-                       out_specs=P("data"), axis_names={"data"},
-                       check_vma=False)
+    sh = compat.shard_map(f, mesh=MESH, in_specs=(P("data"), P("data")),
+                          out_specs=P("data"), axis_names={"data"},
+                          check_vma=False)
     signs = jnp.asarray(np.sign(RNG.normal(size=(4, 16))).astype(np.int8))
     prev = jnp.asarray(np.sign(RNG.normal(size=(4, 16))).astype(np.int8))
     out = np.asarray(jax.jit(sh)(signs, prev))
     eff = np.concatenate([np.asarray(prev)[:2], np.asarray(signs)[2:]])
     np.testing.assert_array_equal(out[0], np.sign(eff.sum(0)))
-    print("OK stale-vote straggler substitution")
+    print("OK stale-vote straggler substitution via VoteEngine")
 
 
 if __name__ == "__main__":

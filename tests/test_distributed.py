@@ -10,6 +10,7 @@ import pytest
 HARNESS = os.path.join(os.path.dirname(__file__), "distributed_harness.py")
 
 
+@pytest.mark.slow
 @pytest.mark.timeout(1200)
 def test_distributed_harness():
     env = dict(os.environ)

@@ -6,13 +6,24 @@
   honest-unanimous sign whenever honest replicas agree (the determinism
   core of Theorem 2),
 * vote is permutation-invariant in the workers,
-* abstention (zero gradient) never flips an otherwise-decided vote.
+* abstention (zero gradient) never flips an otherwise-decided vote,
+* the fused sign+pack+popcount kernel is bit-identical to the composed
+  oracle (kernels/ref.py) on arbitrary inputs including exact ties.
+
+``hypothesis`` is optional: without it this module skips (tier-1 still
+covers the same invariants deterministically in test_vote_engine.py).
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; "
+    "deterministic equivalents live in test_vote_engine.py")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import sign_compress as sc
+from repro.kernels import ops, ref
 
 signs_arrays = st.integers(1, 200).flatmap(
     lambda n: st.lists(st.sampled_from([-1, 1]), min_size=n, max_size=n))
@@ -82,6 +93,33 @@ def test_abstention_never_flips_decided_vote(m, dim, rnd):
     decided = np.abs(base) > k  # margin exceeds removed votes
     np.testing.assert_array_equal(np.sign(after)[decided],
                                   np.sign(base)[decided])
+
+
+@given(st.integers(1, 9), st.integers(1, 130), st.randoms())
+@settings(max_examples=50, deadline=None)
+def test_fused_kernel_matches_oracle(m, n, rnd):
+    """ONE-PASS sign+pack+popcount (kernels/fused_vote.py) == the composed
+    pack_signs -> packed_majority oracle, bit for bit."""
+    x = np.array([[rnd.uniform(-1, 1) for _ in range(n)] for _ in range(m)],
+                 np.float32)
+    got = np.asarray(ops.fused_majority(jnp.asarray(x)))
+    pad = (-n) % sc.PACK
+    xp = np.pad(x, ((0, 0), (0, pad)))
+    want = np.asarray(ref.fused_majority(jnp.asarray(xp)))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.integers(1, 4), st.integers(1, 64), st.randoms())
+@settings(max_examples=50, deadline=None)
+def test_fused_kernel_tie_convention(half_m, n, rnd):
+    """Exact ties (half the voters +, half -) resolve to +1, matching the
+    1-bit wire convention of sign_binary / ref.majority."""
+    m = 2 * half_m
+    x = np.array([[rnd.uniform(0.1, 1) for _ in range(n)]
+                  for _ in range(m)], np.float32)
+    x[half_m:] *= -1.0
+    got = np.asarray(ops.bitunpack(ops.fused_majority(jnp.asarray(x)), n))
+    np.testing.assert_array_equal(got, np.ones(n, np.float32))
 
 
 @given(st.lists(st.floats(-1e6, 1e6, allow_nan=False), min_size=1,
