@@ -1,24 +1,36 @@
 #!/usr/bin/env bash
-# Tier-1 CI lane: the full test suite plus the communication benchmark's
-# smoke pass (VoteEngine wire accounting + fused-kernel-vs-oracle checks).
+# CI lanes: the full test suite, the tier-2 Scenario Lab lane, the
+# communication benchmark's smoke pass (VoteEngine wire accounting +
+# fused-kernel-vs-oracle checks), and the Scenario Lab smoke sweep
+# (3 drills x 2 strategies, mesh==virtual bit-identity on the
+# 8-virtual-device host platform, <60 s).
 #
 #   scripts/ci.sh          # everything
 #   scripts/ci.sh --quick  # skip tests marked slow (the distributed
-#                          # subprocess harness is the long pole)
+#                          # subprocess harnesses are the long poles)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-MARK=()
+MARK="not tier2"
+TIER2_MARK="tier2"
 if [[ "${1:-}" == "--quick" ]]; then
-  MARK=(-m "not slow")
+  MARK="not tier2 and not slow"
+  TIER2_MARK="tier2 and not slow"
 fi
 
 echo "== tier-1 tests =="
-python -m pytest -x -q "${MARK[@]}"
+python -m pytest -x -q -m "$MARK"
+
+echo "== tier-2 scenario lab lane =="
+python -m pytest -x -q tests/tier2 -m "$TIER2_MARK"
 
 echo "== bench_comm smoke =="
 python -m benchmarks.bench_comm --smoke
+
+echo "== scenario lab smoke (8-virtual-device platform) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  python -m benchmarks.bench_robustness --scenario-smoke
 
 echo "CI OK"

@@ -122,9 +122,13 @@ def latest_step_dir(ckpt_dir: str) -> Optional[str]:
     return path if os.path.isdir(path) else None
 
 
-def _refit_leading_axis(saved: np.ndarray, want_shape: Tuple[int, ...]
-                        ) -> np.ndarray:
-    """Elastic reshard of per-worker state: truncate or zero-pad axis 0."""
+def refit_leading_axis(saved: np.ndarray, want_shape: Tuple[int, ...]
+                       ) -> np.ndarray:
+    """Elastic reshard of per-worker state: truncate or zero-pad axis 0.
+
+    Public: the Scenario Lab (``repro.sim``) applies the same rule when an
+    elastic event rescales the voter set mid-run, so a simulated shrink/
+    regrow exercises exactly the checkpoint-restore semantics (§6)."""
     if saved.shape == tuple(want_shape):
         return saved
     if saved.shape[1:] == tuple(want_shape)[1:]:
@@ -170,7 +174,7 @@ def restore(ckpt_dir: str, like_params: Any = None, like_opt: Any = None,
             key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                            for p in path_)
             if key in out:
-                out[key] = _refit_leading_axis(out[key], leaf.shape)
+                out[key] = refit_leading_axis(out[key], leaf.shape)
         return _unflatten(out)
 
     params = fit(params, like_params)

@@ -281,11 +281,18 @@ class OptimizerConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ByzantineConfig:
-    """Simulated non-cooperating adversaries, compiled into train_step."""
+    """Simulated adversaries, compiled into train_step / the Scenario Lab.
 
-    mode: str = "none"            # none | sign_flip | random | zero
+    ``sign_flip`` / ``random`` / ``zero`` are the paper's non-cooperating
+    models; ``colluding`` (all adversaries push one shared target
+    direction) and ``blind`` (per-step per-coordinate flip probability)
+    are the successor-paper models exercised by ``repro.sim``
+    (DESIGN.md §7)."""
+
+    mode: str = "none"    # none | sign_flip | random | zero | colluding | blind
     num_adversaries: int = 0      # data-parallel replicas acting adversarially
     seed: int = 0
+    flip_prob: float = 0.5        # blind mode: P(flip) per coordinate, per step
 
 
 @dataclasses.dataclass(frozen=True)
@@ -299,6 +306,10 @@ class TrainConfig:
     byzantine: ByzantineConfig = ByzantineConfig()
     loss_dtype: str = "float32"
     seed: int = 0
+    # per-step vote diagnostics (agreement/margin) in the metrics dict;
+    # costs one extra psum per leaf, so off unless a trace consumer
+    # (repro.sim / robustness benchmarks) asks for it
+    diagnostics: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

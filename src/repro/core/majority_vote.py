@@ -81,14 +81,15 @@ def majority_vote_flat(signs: jax.Array, strategy: VoteStrategy,
 
 
 def tree_vote(tree, strategy: VoteStrategy, axes: Sequence[str],
-              byz: Optional[ByzantineConfig] = None):
+              byz: Optional[ByzantineConfig] = None, step=None):
     """Vote a pytree of local momenta/grads; returns ±1 tree (leaf dtypes).
 
     With no vote axes (single process) the vote of M=1 degenerates to the
-    leaf's own sign.
+    leaf's own sign. `step` feeds the stochastic adversary models so
+    random/blind/colluding replicas redraw their perturbation each step.
     """
     engine = VoteEngine(strategy=strategy, axes=tuple(axes), byz=byz)
-    return engine.vote_tree(tree)
+    return engine.vote_tree(tree, step)
 
 
 def tree_mean(tree, axes: Sequence[str]):

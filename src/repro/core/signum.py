@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ByzantineConfig, MomentumMode, OptimizerConfig
 from repro.core import sign_compress as sc
-from repro.core.majority_vote import tree_mean, tree_vote
+from repro.core.majority_vote import num_voters, tree_mean, tree_vote
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +61,32 @@ def _agreement(local_signs: Dict, votes: Dict) -> jax.Array:
               for l, v in zip(jax.tree.leaves(local_signs),
                               jax.tree.leaves(votes)))
     den = sum(v.size for v in jax.tree.leaves(votes))
+    return num / den
+
+
+def _vote_margin(local: Dict, axes: Sequence[str],
+                 byz: Optional[ByzantineConfig] = None,
+                 step: Optional[jax.Array] = None) -> jax.Array:
+    """Mean |vote count| / M over all coordinates — how decisively the
+    electorate votes (1 = unanimous, ->0 = knife-edge), measured on the
+    signs that actually reach the wire: the compiled adversary model is
+    re-applied here (same replica-index/step PRNG keys as the vote), so
+    this is the same quantity the Scenario Lab traces record per step
+    (DESIGN.md §7), not the honest electorate's margin."""
+    from repro.core import byzantine
+    leaves = jax.tree.leaves(local)
+    m = num_voters(axes) if axes else 1
+    counts = []
+    for l in leaves:
+        s = sc.sign_ternary(l)
+        if byz is not None and axes:
+            s = byzantine.apply_adversary(s, byz, axes, step=step)
+        if axes:
+            counts.append(jax.lax.psum(s.astype(jnp.int32), tuple(axes)))
+        else:
+            counts.append(s.astype(jnp.int32))
+    num = sum(jnp.sum(jnp.abs(c)) for c in counts)
+    den = sum(l.size for l in leaves) * m
     return num / den
 
 
@@ -108,7 +134,7 @@ def make_sign_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
                 v = grads
             if ef:
                 v = jax.tree.map(lambda e, t: e + t, state["error"], v)
-            votes = tree_vote(v, cfg.vote_strategy, axes, byz)
+            votes = tree_vote(v, cfg.vote_strategy, axes, byz, step)
             if ef:
                 scale = jax.tree.map(
                     lambda t: jnp.mean(jnp.abs(t)), v)
@@ -117,11 +143,23 @@ def make_sign_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
                     v, scale, votes)}
             if diagnostics:
                 diag["vote_agreement"] = _agreement(v, votes)
+                diag["vote_margin"] = _vote_margin(v, axes, byz, step)
         else:
             # --- Mode B: vote on sign(g), momentum on the vote ---
             pre, raw = _split(grads, voted_leaves)
-            raw_votes = tree_vote(raw, cfg.vote_strategy, axes, byz) if raw else {}
+            raw_votes = (tree_vote(raw, cfg.vote_strategy, axes, byz, step)
+                         if raw else {})
             votes = {**pre, **raw_votes}
+            if diagnostics:
+                if raw:
+                    diag["vote_agreement"] = _agreement(raw, raw_votes)
+                    diag["vote_margin"] = _vote_margin(raw, axes, byz, step)
+                else:
+                    # every leaf took the fused vote-in-backward path: the
+                    # wire is not observable here, but the metric keys are
+                    # a contract when diagnostics=True
+                    diag["vote_agreement"] = jnp.float32(jnp.nan)
+                    diag["vote_margin"] = jnp.float32(jnp.nan)
             if beta > 0:
                 u = jax.tree.map(
                     lambda m, vt: beta * m + (1 - beta) * vt.astype(mom_dtype),

@@ -358,11 +358,15 @@ class VoteEngine:
     fault injection perturbs exactly the tensors the trainer votes on.
     `strategy` may be ``VoteStrategy.AUTO``; it resolves per tree against
     the comm cost model (needs the axis sizes, i.e. a trace context).
+    `salt` namespaces the adversary PRNG stream (the Scenario Lab folds a
+    scenario-id hash in here — DESIGN.md §7); pass `step` to the vote
+    entry points so stochastic adversaries redraw each step.
     """
 
     strategy: VoteStrategy
     axes: Tuple[str, ...] = ()
     byz: Optional[ByzantineConfig] = None
+    salt: int = 0
 
     def _resolved(self, n_params: int) -> VoteStrategyImpl:
         data = compat.axis_size("data") if "data" in self.axes else 1
@@ -377,16 +381,19 @@ class VoteEngine:
             return signs
         return self._resolved(signs.size).vote(signs, self.axes)
 
-    def vote(self, values: jax.Array) -> jax.Array:
+    def vote(self, values: jax.Array,
+             step: Optional[jax.Array] = None) -> jax.Array:
         """Replica-local real tensor -> majority of signs, in the input
-        dtype (the trainer's per-leaf entry point)."""
+        dtype (the trainer's per-leaf entry point). `step` feeds the
+        stochastic adversary models' PRNG fold (redraw every step)."""
         shape = values.shape
         s = sc.sign_ternary(values if values.ndim else values.reshape(1))
         if self.byz is not None and self.axes:
-            s = byzantine.apply_adversary(s, self.byz, self.axes)
+            s = byzantine.apply_adversary(s, self.byz, self.axes,
+                                          step=step, salt=self.salt)
         return self.vote_signs(s).reshape(shape).astype(values.dtype)
 
-    def vote_tree(self, tree):
+    def vote_tree(self, tree, step: Optional[jax.Array] = None):
         """Vote every leaf of a pytree (momenta/grads); ±1 tree in the leaf
         dtypes. AUTO resolves once per tree on the total parameter count."""
         if self.strategy == VoteStrategy.AUTO and self.axes:
@@ -397,7 +404,7 @@ class VoteEngine:
                 self, strategy=select_strategy(total, data, pod))
         else:
             eng = self
-        return jax.tree.map(eng.vote, tree)
+        return jax.tree.map(lambda leaf: eng.vote(leaf, step), tree)
 
     def vote_stacked(self, stacked: jax.Array,
                      use_kernels: bool = True) -> jax.Array:

@@ -56,21 +56,33 @@ def straggler_mask_for(axis_names: Sequence[str], n_stale: int,
     return replica_index(axis_names, like=like) < n_stale
 
 
+def count_for_fraction(fraction: float, n_replicas: int) -> int:
+    """Replicas a fraction maps to, with explicit half-up rounding so the
+    boundary regimes land where the paper's figures put them (0.5 of 16
+    -> 8, i.e. *exactly* 50% — the tie regime DESIGN.md §7 pins)."""
+    if not 0.0 <= fraction <= 1.0:
+        raise ValueError(f"fraction {fraction} outside [0, 1]")
+    return min(n_replicas, int(fraction * n_replicas + 0.5))
+
+
 def vote_with_failures(engine, signs: jax.Array,
                        prev_signs: Optional[jax.Array] = None,
-                       n_stale: int = 0) -> jax.Array:
+                       n_stale: int = 0, step=None) -> jax.Array:
     """One aggregation under failures, through the trainer's engine.
 
     Runs inside the manual vote region: substitutes stale votes for the
     first `n_stale` replicas (when `prev_signs` is given), then lets the
-    engine apply its compiled Byzantine model and wire protocol. The paper's
-    point (§3.4) made executable: every failure mode enters as a ≤1-vote
-    perturbation to the same pack → exchange → tally → unpack pipeline.
+    engine apply its compiled Byzantine model and wire protocol — so a
+    straggling adversary perturbs its *stale* vector, exactly as a real
+    stale-then-corrupted worker would. The paper's point (§3.4) made
+    executable: every failure mode enters as a ≤1-vote perturbation to the
+    same pack → exchange → tally → unpack pipeline. `step` feeds the
+    stochastic adversary models' per-step PRNG fold.
     """
     if n_stale and prev_signs is not None:
         mask = straggler_mask_for(engine.axes, n_stale, like=signs)
         signs = simulate_stragglers(signs, prev_signs, mask)
-    return engine.vote(signs)
+    return engine.vote(signs, step)
 
 
 # ---------------------------------------------------------------------------

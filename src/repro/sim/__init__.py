@@ -1,0 +1,23 @@
+"""Scenario Lab: deterministic failure-drill simulation through the real
+VoteEngine wire path (DESIGN.md §7).
+
+    from repro.sim import ScenarioSpec, AdversarySpec, ScenarioRunner
+
+    spec = ScenarioSpec("demo", n_workers=15,
+                        adversary=AdversarySpec("colluding", 0.4))
+    trace = ScenarioRunner(spec).run()
+    print(trace.summary())
+"""
+from repro.sim.scenario import (AdversarySpec, ElasticEvent, ScenarioSpec,
+                                expand_grid, fig4_grid, load_scenarios,
+                                preset_scenarios, scenario_salt)
+from repro.sim.runner import (BACKENDS, ScenarioRunner, ScenarioTrace,
+                              StepTrace, run_scenarios)
+from repro.sim.virtual_mesh import VirtualVoteEngine, virtual_vote
+
+__all__ = [
+    "AdversarySpec", "BACKENDS", "ElasticEvent", "ScenarioRunner",
+    "ScenarioSpec", "ScenarioTrace", "StepTrace", "VirtualVoteEngine",
+    "expand_grid", "fig4_grid", "load_scenarios", "preset_scenarios",
+    "run_scenarios", "scenario_salt", "virtual_vote",
+]

@@ -1,0 +1,288 @@
+"""ScenarioRunner: deterministic failure drills through the vote path.
+
+Executes a :class:`~repro.sim.scenario.ScenarioSpec` on the paper's toy
+objective (the 1000-dim quadratic family of Fig. 1, reduced): every voter
+m holds the true gradient ``x`` plus N(0, sigma^2) noise, keeps per-worker
+SIGNUM momentum (Algorithm 1), and the update applies the majority vote of
+the momenta's signs. What makes it a *failure drill* is everything between
+the local sign and the decision: stale-vote straggler substitution,
+Byzantine perturbation, and elastic voter-set rescale — all through the
+SAME code the trainer compiles (``fault_tolerance.vote_with_failures`` /
+``core.byzantine`` / the VoteEngine strategy stages).
+
+Two interchangeable backends (bit-identical; asserted by tier-2):
+
+* ``virtual`` — the host-count-independent virtual mesh
+  (:mod:`repro.sim.virtual_mesh`): any M on any device count.
+* ``mesh``    — the real thing: a ``shard_map`` over an M-wide 'data'
+  axis calling ``fault_tolerance.vote_with_failures`` on actual mesh
+  replicas (requires M <= local device count; the tier-2 harness runs it
+  on the 8-virtual-device platform).
+
+Every step emits a :class:`StepTrace` (vote margin, fraction of
+coordinates flipped vs the honest-majority oracle, convergence proxy);
+the run digest hashes the raw vote bytes, so "reproducible" means
+bit-identical, not approximately-equal (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro.checkpoint.checkpoint import refit_leading_axis
+from repro.configs.base import VoteStrategy
+from repro.core import sign_compress as sc
+from repro.core.vote_engine import STRATEGIES, VoteEngine
+from repro.distributed.fault_tolerance import (count_for_fraction,
+                                               vote_with_failures)
+from repro.sim.scenario import ScenarioSpec
+from repro.sim.virtual_mesh import VirtualVoteEngine, virtual_vote
+
+BACKENDS = ("virtual", "mesh")
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StepTrace:
+    """One step's structured trace record (schema: DESIGN.md §7)."""
+
+    step: int
+    n_workers: int
+    n_adversaries: int
+    n_stale: int
+    margin: float          # mean |vote count| / M  (1 = unanimous)
+    flip_fraction: float   # coords where vote != honest-majority oracle
+    loss: float            # convergence proxy: 0.5 * mean(x^2) after update
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioTrace:
+    """Full run record: spec + per-step traces + bit-level digest."""
+
+    spec: ScenarioSpec
+    backend: str
+    steps: Tuple[StepTrace, ...]
+    digest: str            # sha256 over every step's raw vote bytes + x
+
+    def summary(self) -> Dict[str, Any]:
+        impl = STRATEGIES[self.spec.strategy]
+        d = self.spec.dim
+        # price the exchange at each step's ACTUAL voter count (elastic
+        # events change it mid-run); payload bytes/replica are
+        # m-independent for every strategy (bits/param is fixed)
+        est = float(np.mean([impl.estimated_time(d, s.n_workers)
+                             for s in self.steps]))
+        return {
+            "scenario": self.spec.name,
+            "strategy": self.spec.strategy.value,
+            "backend": self.backend,
+            "tie_policy": self.spec.tie_policy,
+            "first_loss": self.steps[0].loss,
+            "final_loss": self.steps[-1].loss,
+            "loss_drop": self.steps[0].loss - self.steps[-1].loss,
+            "mean_margin": float(np.mean([s.margin for s in self.steps])),
+            "mean_flip_fraction": float(
+                np.mean([s.flip_fraction for s in self.steps])),
+            "max_flip_fraction": float(
+                np.max([s.flip_fraction for s in self.steps])),
+            "wire_bytes_per_replica": impl.payload_bytes(
+                d, self.spec.n_workers),
+            "est_exchange_time_s": est,
+            "digest": self.digest,
+        }
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"spec": self.spec.to_dict(), "backend": self.backend,
+                "digest": self.digest,
+                "steps": [dataclasses.asdict(s) for s in self.steps],
+                "summary": self.summary()}
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# deterministic keys (scenario id + step folded; DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+def _root_key(spec: ScenarioSpec) -> jax.Array:
+    return jax.random.fold_in(jax.random.PRNGKey(spec.seed), spec.salt)
+
+
+def _noise(spec: ScenarioSpec, step: int, m: int) -> jax.Array:
+    """Per-(scenario, step) gradient noise for m voters — independent of
+    backend, device count and elastic history (shape depends only on the
+    CURRENT voter count)."""
+    key = jax.random.fold_in(jax.random.fold_in(_root_key(spec), 1), step)
+    return jax.random.normal(key, (m, spec.dim), jnp.float32)
+
+
+def _init_x(spec: ScenarioSpec) -> jax.Array:
+    key = jax.random.fold_in(_root_key(spec), 0)
+    return jax.random.normal(key, (spec.dim,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# the runner
+# ---------------------------------------------------------------------------
+
+
+class ScenarioRunner:
+    """Executes one spec; ``run()`` returns the :class:`ScenarioTrace`.
+
+    `backend` is "virtual" (default, host-count independent) or "mesh"
+    (real shard_map collectives; every segment's voter count must fit the
+    local device count). `mesh_style` picks the mesh layout for the mesh
+    backend: "data_model" = an (M, 1) ('data', 'model') mesh, manual over
+    'data' only — the trainer's partial-auto configuration, which on
+    legacy JAX exercises the compat emulation layer; "data_only" = a
+    fully-manual (M,) mesh using the native collective lowerings.
+    """
+
+    def __init__(self, spec: ScenarioSpec, backend: str = "virtual",
+                 mesh_style: str = "data_model"):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+        if mesh_style not in ("data_model", "data_only"):
+            raise ValueError(f"unknown mesh_style {mesh_style!r}")
+        self.spec = spec
+        self.backend = backend
+        self.mesh_style = mesh_style
+        if backend == "mesh":
+            need = max([spec.n_workers] + [e.n_workers for e in spec.elastic])
+            have = len(jax.devices())
+            if need > have:
+                raise ValueError(
+                    f"mesh backend needs {need} devices for "
+                    f"{spec.name!r}, have {have} (use backend='virtual', "
+                    "or XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+
+    # ---- per-segment compiled pieces (rebuilt at elastic boundaries) ----
+
+    def _segment(self, m: int):
+        spec = self.spec
+        byz_cfg = spec.adversary.byz_config(m, spec.seed)
+        byz = byz_cfg if byz_cfg.mode != "none" else None
+        n_stale = count_for_fraction(spec.straggler_fraction, m)
+        veng = VirtualVoteEngine(spec.strategy, byz, spec.salt)
+        beta = spec.momentum
+
+        @jax.jit
+        def prepare(x, v, prev, noise, step):
+            g = x[None, :] + spec.noise_scale * noise
+            v2 = beta * v + (1.0 - beta) * g if beta > 0 else g
+            fresh = sc.sign_ternary(v2)
+            eff = veng.effective_signs(v2, prev, n_stale, step)
+            oracle = virtual_vote(fresh, spec.strategy)
+            counts = jnp.sum(eff.astype(jnp.int32), axis=0)
+            margin = jnp.mean(jnp.abs(counts).astype(jnp.float32)) / m
+            return v2, fresh, eff, oracle, margin
+
+        @jax.jit
+        def finish(x, vote, oracle):
+            flip = jnp.mean((vote != oracle).astype(jnp.float32))
+            x2 = x - spec.learning_rate * vote.astype(jnp.float32)
+            loss = 0.5 * jnp.mean(x2 * x2)
+            return x2, flip, loss
+
+        if self.backend == "mesh":
+            mesh_vote = self._mesh_vote_fn(m, byz, n_stale)
+        else:
+            mesh_vote = None
+        return prepare, finish, mesh_vote, byz_cfg, n_stale
+
+    def _mesh_vote_fn(self, m: int, byz, n_stale: int):
+        """jit(shard_map(vote_with_failures)) over an M-wide 'data' axis —
+        the production wire path on real mesh replicas."""
+        from jax.sharding import Mesh, PartitionSpec as P
+        spec = self.spec
+        devs = np.array(jax.devices()[:m])
+        if self.mesh_style == "data_model":
+            mesh = Mesh(devs.reshape(m, 1), ("data", "model"))
+            manual = {"data"}
+        else:
+            mesh = Mesh(devs, ("data",))
+            manual = {"data"}
+        engine = VoteEngine(strategy=spec.strategy, axes=("data",),
+                            byz=byz, salt=spec.salt)
+
+        def f(vals, prev, step):
+            out = vote_with_failures(engine, vals[0], prev[0],
+                                     n_stale=n_stale, step=step)
+            return out[None]
+
+        sh = compat.shard_map(
+            f, mesh=mesh, in_specs=(P("data"), P("data"), P()),
+            out_specs=P("data"), axis_names=manual, check_vma=False)
+        return jax.jit(sh)
+
+    # ---- the drill ----
+
+    def run(self) -> ScenarioTrace:
+        spec = self.spec
+        x = _init_x(spec)
+        m = spec.workers_at(0)
+        v = jnp.zeros((m, spec.dim), jnp.float32)        # per-worker momentum
+        # last step's locally COMPUTED signs (pre-stale, pre-adversary):
+        # that is what a straggler re-submits; failures then apply to the
+        # substituted vector (vote_with_failures order)
+        prev = jnp.zeros((m, spec.dim), jnp.int8)
+        prepare, finish, mesh_vote, byz_cfg, n_stale = self._segment(m)
+        digest = hashlib.sha256()
+        steps: List[StepTrace] = []
+        for step in range(spec.n_steps):
+            m_now = spec.workers_at(step)
+            if m_now != m:
+                # elastic rescale: per-worker state refits by the
+                # checkpoint rule (truncate / zero-pad axis 0, §6) —
+                # joiners start with zero momentum and an abstaining
+                # stale vector
+                v = jnp.asarray(refit_leading_axis(
+                    np.asarray(v), (m_now, spec.dim)))
+                prev = jnp.asarray(refit_leading_axis(
+                    np.asarray(prev), (m_now, spec.dim)))
+                m = m_now
+                prepare, finish, mesh_vote, byz_cfg, n_stale = \
+                    self._segment(m)
+            noise = _noise(spec, step, m)
+            step_t = jnp.int32(step)
+            v, fresh, eff, oracle, margin = prepare(x, v, prev, noise,
+                                                    step_t)
+            if self.backend == "mesh":
+                # host round-trips keep every array uncommitted: jit
+                # outputs committed to one segment's mesh devices would
+                # conflict with the next segment's (smaller) mesh
+                vote = jnp.asarray(np.asarray(
+                    mesh_vote(np.asarray(v), np.asarray(prev),
+                              np.int32(step)))[0].astype(np.int8))
+            else:
+                vote = virtual_vote(eff, spec.strategy)
+            x, flip, loss = finish(x, vote, oracle)
+            prev = fresh
+            digest.update(np.asarray(vote).tobytes())
+            steps.append(StepTrace(
+                step=step, n_workers=m,
+                n_adversaries=byz_cfg.num_adversaries, n_stale=n_stale,
+                margin=float(margin), flip_fraction=float(flip),
+                loss=float(loss)))
+        digest.update(np.asarray(x, np.float32).tobytes())
+        return ScenarioTrace(spec=spec, backend=self.backend,
+                             steps=tuple(steps), digest=digest.hexdigest())
+
+
+def run_scenarios(specs, backend: str = "virtual",
+                  mesh_style: str = "data_model") -> List[ScenarioTrace]:
+    return [ScenarioRunner(s, backend=backend, mesh_style=mesh_style).run()
+            for s in specs]

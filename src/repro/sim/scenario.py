@@ -1,0 +1,285 @@
+"""Scenario specifications for the failure-drill simulator (DESIGN.md §7).
+
+A :class:`ScenarioSpec` is a complete, serialisable description of one
+failure drill: how many voters, which adversary model at what fraction,
+what fraction of stragglers, an elastic schedule of voter-set rescales,
+which VoteEngine wire strategy, and the tie-break policy the caller
+expects. Specs are frozen dataclasses (hashable, usable as jit static
+args) and round-trip through plain dicts / JSON, so an entire sweep —
+the paper's Fig. 4 grid included — lives in one config file
+(``benchmarks/configs/fig4_grid.json``).
+
+Determinism: every PRNG draw a scenario makes (gradient noise, random /
+blind / colluding adversaries) is keyed by ``(seed + salt(name), step,
+replica index)`` — never by device placement — so a scenario replays
+bit-identically on 1 host or 64 (:func:`scenario_salt`; asserted by the
+tier-2 golden-trace tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import zlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ByzantineConfig, VoteStrategy
+from repro.core import byzantine
+
+#: tie policies a spec may request; "auto" takes the wire format's own
+#: convention (DESIGN.md §5: integer-count wires -> "zero", 1-bit wires
+#: -> "plus_one")
+TIE_POLICIES = ("auto", "zero", "plus_one")
+
+
+def scenario_salt(name: str) -> int:
+    """Stable 31-bit hash of a scenario id, folded into every PRNG key the
+    scenario derives (adversary draws and gradient noise), so two
+    scenarios in one sweep never share an adversary stream. 31 bits so the
+    salt is a valid int32 for ``jax.random.fold_in`` on every version."""
+    return zlib.crc32(name.encode("utf-8")) & 0x7FFFFFFF
+
+
+@dataclasses.dataclass(frozen=True)
+class AdversarySpec:
+    """Which adversary model, at what fraction of the current voter set."""
+
+    mode: str = "none"        # core.byzantine.MODES
+    fraction: float = 0.0     # of the CURRENT voter count (elastic-aware)
+    flip_prob: float = 0.5    # blind mode only
+
+    def __post_init__(self):
+        if self.mode not in byzantine.MODES:
+            raise ValueError(f"unknown adversary mode {self.mode!r}; "
+                             f"have {byzantine.MODES}")
+        if not 0.0 <= self.fraction <= 1.0:
+            raise ValueError(f"adversary fraction {self.fraction} not in "
+                             "[0, 1]")
+        if not 0.0 <= self.flip_prob <= 1.0:
+            raise ValueError(f"flip_prob {self.flip_prob} not in [0, 1]")
+
+    def byz_config(self, n_workers: int, seed: int) -> ByzantineConfig:
+        """The core-layer config for a concrete voter count (the count is
+        re-derived after every elastic event)."""
+        from repro.distributed.fault_tolerance import count_for_fraction
+        honest = self.mode == "none" or self.fraction == 0.0
+        return ByzantineConfig(
+            mode="none" if honest else self.mode,
+            num_adversaries=(0 if honest
+                             else count_for_fraction(self.fraction,
+                                                     n_workers)),
+            seed=seed, flip_prob=self.flip_prob)
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticEvent:
+    """At `step`, rescale the voter set to `n_workers` (shrink = node
+    deaths, grow = nodes joining). Per-worker momentum is refit by the
+    checkpoint rule (truncate / zero-pad, §6): joiners start with zero
+    momentum and an all-zero stale vector — an abstention on the
+    integer-count wire, +1 votes on the 1-bit wires (which cannot encode
+    "abstain"; DESIGN.md §5)."""
+
+    step: int
+    n_workers: int
+    note: str = ""
+
+    def __post_init__(self):
+        if self.step < 0 or self.n_workers < 1:
+            raise ValueError(f"bad elastic event {self}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One deterministic failure drill through the production vote path."""
+
+    name: str
+    n_workers: int = 8
+    n_steps: int = 20
+    dim: int = 256                      # toy-quadratic dimensionality
+    strategy: VoteStrategy = VoteStrategy.PSUM_INT8
+    adversary: AdversarySpec = AdversarySpec()
+    straggler_fraction: float = 0.0     # stale-vote substitution fraction
+    elastic: Tuple[ElasticEvent, ...] = ()
+    tie_break: str = "auto"             # TIE_POLICIES
+    seed: int = 0
+    noise_scale: float = 1.0            # grad noise sigma (0 = deterministic)
+    learning_rate: float = 0.05
+    momentum: float = 0.9               # per-worker (Mode A) beta; 0 = signSGD
+
+    def __post_init__(self):
+        if self.strategy == VoteStrategy.AUTO:
+            raise ValueError("scenarios pin a concrete wire strategy; "
+                             "AUTO is a trainer-side selector")
+        if self.tie_break not in TIE_POLICIES:
+            raise ValueError(f"tie_break {self.tie_break!r} not in "
+                             f"{TIE_POLICIES}")
+        from repro.core.vote_engine import STRATEGIES
+        ties = STRATEGIES[self.strategy].ties
+        if self.tie_break != "auto" and self.tie_break != ties:
+            raise ValueError(
+                f"strategy {self.strategy.value} resolves ties to "
+                f"{ties!r}; a {self.tie_break!r} tie policy would need a "
+                "different wire format (DESIGN.md §5)")
+        if not 0.0 <= self.straggler_fraction <= 1.0:
+            raise ValueError("straggler_fraction not in [0, 1]")
+        if self.n_workers < 1 or self.n_steps < 1 or self.dim < 1:
+            raise ValueError(f"bad scenario sizes in {self.name!r}")
+        steps = [e.step for e in self.elastic]
+        if steps != sorted(steps) or len(set(steps)) != len(steps):
+            raise ValueError("elastic events must be strictly step-sorted")
+
+    # ---- derived ----
+
+    @property
+    def salt(self) -> int:
+        return scenario_salt(self.name)
+
+    @property
+    def tie_policy(self) -> str:
+        """The resolved tie convention ("zero" or "plus_one")."""
+        from repro.core.vote_engine import STRATEGIES
+        return STRATEGIES[self.strategy].ties
+
+    def workers_at(self, step: int) -> int:
+        """Voter count in effect at `step` under the elastic schedule."""
+        n = self.n_workers
+        for ev in self.elastic:
+            if ev.step <= step:
+                n = ev.n_workers
+        return n
+
+    # ---- (de)serialisation ----
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["strategy"] = self.strategy.value
+        d["elastic"] = [dataclasses.asdict(e) for e in self.elastic]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ScenarioSpec":
+        d = dict(d)
+        if "strategy" in d:
+            d["strategy"] = VoteStrategy(d["strategy"])
+        if "adversary" in d and isinstance(d["adversary"], dict):
+            d["adversary"] = AdversarySpec(**d["adversary"])
+        if "elastic" in d:
+            d["elastic"] = tuple(
+                e if isinstance(e, ElasticEvent) else ElasticEvent(**e)
+                for e in d["elastic"])
+        return cls(**d)
+
+
+def load_scenarios(path: str) -> List[ScenarioSpec]:
+    """Scenarios from a JSON config file.
+
+    Accepts either a bare list of spec dicts or ``{"defaults": {...},
+    "scenarios": [...]}`` where each scenario overlays the defaults, plus
+    an optional ``"grid"`` block expanded by :func:`expand_grid`."""
+    with open(path) as f:
+        doc = json.load(f)
+    if isinstance(doc, list):
+        specs = [ScenarioSpec.from_dict(d) for d in doc]
+    else:
+        defaults = doc.get("defaults", {})
+        specs = [ScenarioSpec.from_dict({**defaults, **d})
+                 for d in doc.get("scenarios", [])]
+        if "grid" in doc:
+            specs.extend(expand_grid(doc["grid"], defaults))
+    names = [s.name for s in specs]
+    dupes = sorted({n for n in names if names.count(n) > 1})
+    if dupes:
+        # duplicate names would alias PRNG streams (crc32(name) salt) and
+        # benchmark row keys — a config error, never a silent re-run
+        raise ValueError(f"duplicate scenario names in {path}: {dupes}")
+    return specs
+
+
+def expand_grid(grid: Dict[str, Any],
+                defaults: Optional[Dict[str, Any]] = None
+                ) -> List[ScenarioSpec]:
+    """Cross-product expansion of a Fig.-4-style sweep block:
+
+    ``{"fractions": [...], "modes": [...], "strategies": [...],
+    "base": {...}}`` -> one scenario per (fraction, mode, strategy) cell,
+    named ``<prefix>/<mode>/<strategy>/f<pct>``.
+    """
+    base = {**(defaults or {}), **grid.get("base", {})}
+    prefix = grid.get("prefix", "grid")
+    out, seen = [], set()
+    for mode in grid["modes"]:
+        for strategy in grid["strategies"]:
+            for frac in grid["fractions"]:
+                # fraction 0 is the same honest configuration whatever the
+                # mode, so it collapses to ONE anchor cell per strategy —
+                # every mode's curve shares its origin (same name -> same
+                # PRNG salt -> same baseline trace). %g keeps distinct
+                # nonzero fractions distinct (a rounded-percent name would
+                # collide sub-percent cells and alias their PRNG streams).
+                eff_mode = mode if frac > 0 else "none"
+                name = f"{prefix}/{eff_mode}/{strategy}/f{frac:g}"
+                if name in seen:
+                    continue
+                seen.add(name)
+                out.append(ScenarioSpec.from_dict({
+                    **base,
+                    "name": name,
+                    "strategy": strategy,
+                    "adversary": {"mode": eff_mode,
+                                  "fraction": frac,
+                                  **grid.get("adversary_extra", {})},
+                }))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# preset library — the boundary regimes the follow-up papers study
+# ---------------------------------------------------------------------------
+
+
+def preset_scenarios() -> List[ScenarioSpec]:
+    """Named drills covering the interesting boundary regimes: the paper's
+    <50% guarantee, the exact-50% tie, >50% blind adversaries (vote
+    rightly fails), colluding coalitions, straggler x adversary
+    composition, and a mid-run shrink/regrow."""
+    S = VoteStrategy
+    return [
+        ScenarioSpec("honest/baseline", n_workers=15, strategy=S.PSUM_INT8),
+        ScenarioSpec("adv/sign_flip_25", n_workers=16,
+                     strategy=S.ALLGATHER_1BIT,
+                     adversary=AdversarySpec("sign_flip", 0.25)),
+        ScenarioSpec("adv/tie_at_half", n_workers=16, strategy=S.PSUM_INT8,
+                     noise_scale=0.0,
+                     adversary=AdversarySpec("sign_flip", 0.5)),
+        ScenarioSpec("adv/blind_majority", n_workers=15,
+                     strategy=S.HIERARCHICAL,
+                     adversary=AdversarySpec("blind", 0.6, flip_prob=0.9)),
+        ScenarioSpec("adv/colluding_40", n_workers=15, strategy=S.PSUM_INT8,
+                     adversary=AdversarySpec("colluding", 0.4)),
+        ScenarioSpec("straggle/stale_adversary", n_workers=16,
+                     strategy=S.ALLGATHER_1BIT, straggler_fraction=0.25,
+                     adversary=AdversarySpec("sign_flip", 0.25)),
+        ScenarioSpec("elastic/shrink_regrow", n_workers=8,
+                     strategy=S.PSUM_INT8, n_steps=30,
+                     adversary=AdversarySpec("random", 0.25),
+                     elastic=(ElasticEvent(10, 4, "pod failure"),
+                              ElasticEvent(20, 6, "partial rejoin"))),
+    ]
+
+
+def fig4_grid(n_workers: int = 16, n_steps: int = 25, dim: int = 512,
+              fractions: Sequence[float] = (0.0, 0.125, 0.25, 0.375, 0.5),
+              modes: Sequence[str] = ("sign_flip", "random", "zero",
+                                      "colluding"),
+              strategies: Sequence[str] = ("psum_int8", "allgather_1bit",
+                                           "hierarchical"),
+              ) -> List[ScenarioSpec]:
+    """The paper's Fig. 4 robustness sweep as scenarios: adversary fraction
+    0 -> 0.5 x adversary mode x wire strategy (DESIGN.md §7)."""
+    return expand_grid({
+        "prefix": "fig4",
+        "fractions": list(fractions),
+        "modes": list(modes),
+        "strategies": list(strategies),
+        "base": {"n_workers": n_workers, "n_steps": n_steps, "dim": dim},
+    })

@@ -1,0 +1,121 @@
+"""Virtual mesh: the VoteEngine wire path over a stacked voter dimension.
+
+The Scenario Lab must replay an M-voter drill on however many devices the
+host happens to have (1 laptop CPU or an 8-device harness) and produce
+bit-identical results either way. This module runs the *production* vote
+pipeline — the exact ``VoteStrategyImpl.pack`` / ``tally`` / ``unpack``
+stage methods of ``core.vote_engine`` — with only the **exchange** stage's
+mesh collectives replaced by their mathematically-exact host-side
+equivalents over a stacked leading voter dim:
+
+    psum            ->  sum over the voter dim (cast back to wire dtype)
+    all_gather      ->  the stacked wire IS the gathered tensor
+    psum_scatter    ->  sum over voters, split last dim into M shards
+    tiled re-gather ->  concatenate the per-shard decisions
+
+No aggregation logic is re-implemented: ties, abstentions, padding bits
+and wire dtypes all come from the same code the trainer compiles. The
+tier-2 harness (``tests/tier2/scenario_harness.py``) asserts the virtual
+path is bit-identical to the real ``shard_map`` + collectives path on an
+8-device mesh, for every strategy and failure composition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ByzantineConfig, VoteStrategy
+from repro.core import byzantine, sign_compress as sc
+from repro.core.vote_engine import STRATEGIES, _pad_last
+from repro.distributed.fault_tolerance import simulate_stragglers
+
+
+@functools.partial(jax.jit, static_argnames=("strategy",))
+def virtual_vote(signs: jax.Array, strategy: VoteStrategy) -> jax.Array:
+    """(M, n) stacked int8 signs -> (n,) int8 majority, through the
+    strategy's own pack/tally/unpack stages (exchange virtualised)."""
+    impl = STRATEGIES[strategy]
+    m, n = signs.shape
+
+    if strategy == VoteStrategy.PSUM_INT8:
+        wire = impl.pack(signs, m)                       # (M, n) counts
+        # psum over the vote axes == sum over the voter dim; the mesh op
+        # accumulates in the wire dtype (safe: |sum| <= M <= dtype max)
+        arrived = jnp.sum(wire, axis=0).astype(wire.dtype)
+        return impl.unpack(impl.tally(arrived, m), n, jnp.int8)
+
+    if strategy == VoteStrategy.ALLGATHER_1BIT:
+        wire = impl.pack(signs, m)                       # (M, w) packed
+        # the all-gather hands every replica the stacked wire — which is
+        # exactly what the virtual mesh already holds
+        return impl.unpack(impl.tally(wire, m), n, jnp.int8)
+
+    if strategy == VoteStrategy.HIERARCHICAL:
+        # virtual single-pod mesh: data axis = all M voters, no pod axis.
+        # Mirrors HierarchicalStrategy.vote: pad to PACK * dsize so the
+        # reduce-scatter shards stay word-aligned.
+        padded, _ = _pad_last(signs, sc.PACK * m)
+        wire = impl.pack(padded, m)                      # (M, n_pad) counts
+        # psum_scatter(tiled) over 'data': shard r of the summed counts
+        summed = jnp.sum(wire, axis=0).astype(wire.dtype)
+        shards = summed.reshape(m, padded.shape[-1] // m)
+        decision = impl.tally(shards, m)                 # sign_binary/shard
+        # unpack stage: pack each shard's decision, all-gather (tiled) the
+        # packed words across 'data' = concatenate in replica order
+        packed = sc.pack_signs(decision).reshape(-1)
+        return sc.unpack_signs(packed, jnp.int8)[:n]
+
+    raise ValueError(f"virtual mesh cannot realise {strategy!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class VirtualVoteEngine:
+    """`core.vote_engine.VoteEngine` semantics on a stacked voter dim.
+
+    Mirrors the mesh engine stage for stage: ternary sign extraction, then
+    the compiled Byzantine model (same ``core.byzantine`` transforms, same
+    PRNG keys — replica index = row index), then the strategy wire path.
+    ``vote_with_failures`` composes stale-vote straggler substitution in
+    front, in the same order as ``fault_tolerance.vote_with_failures``.
+    """
+
+    strategy: VoteStrategy
+    byz: Optional[ByzantineConfig] = None
+    salt: int = 0
+
+    def effective_signs(self, values: jax.Array,
+                        prev_signs: Optional[jax.Array] = None,
+                        n_stale: int = 0,
+                        step: Optional[jax.Array] = None) -> jax.Array:
+        """The (M, n) int8 sign tensor that actually reaches the wire:
+        sign extraction -> stale substitution -> adversary perturbation."""
+        signs = sc.sign_ternary(values)
+        if n_stale and prev_signs is not None:
+            m = signs.shape[0]
+            mask = (jnp.arange(m, dtype=jnp.int32) < n_stale)[:, None]
+            signs = simulate_stragglers(signs, prev_signs.astype(signs.dtype),
+                                        mask)
+        if self.byz is not None:
+            signs = byzantine.apply_adversary_stacked(
+                signs, self.byz, step=step, salt=self.salt)
+        return signs
+
+    def vote(self, values: jax.Array,
+             step: Optional[jax.Array] = None) -> jax.Array:
+        """(M, n) stacked replica-local values -> (n,) int8 majority."""
+        return virtual_vote(self.effective_signs(values, step=step),
+                            self.strategy)
+
+    def vote_with_failures(self, values: jax.Array,
+                           prev_signs: Optional[jax.Array] = None,
+                           n_stale: int = 0,
+                           step: Optional[jax.Array] = None
+                           ) -> Tuple[jax.Array, jax.Array]:
+        """One aggregation under failures; returns (vote, effective signs)
+        so trace capture sees exactly what went on the wire."""
+        signs = self.effective_signs(values, prev_signs, n_stale, step)
+        return virtual_vote(signs, self.strategy), signs

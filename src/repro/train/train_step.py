@@ -145,7 +145,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     # byz also passes to the optimizer: non-FSDP leaves vote explicitly and
     # the same replicas must act adversarially on them.
     opt = build_optimizer(opt_cfg, vote_axes, byz=byz,
-                          fused_leaves=fused_leaves)
+                          fused_leaves=fused_leaves,
+                          diagnostics=tcfg.diagnostics)
 
     def loss_of(p, b):
         return M.loss_fn(cfg, p, b, hook=hook, remat=tcfg.remat)

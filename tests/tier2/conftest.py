@@ -1,0 +1,18 @@
+"""tier-2 suite: the Scenario Lab's regression lane (DESIGN.md §7).
+
+Everything under tests/tier2/ carries the ``tier2`` marker automatically,
+so ``pytest -m tier2`` selects exactly this lane (scripts/ci.sh runs it as
+its own stage) while the plain tier-1 invocation still includes it.
+"""
+import os
+
+import pytest
+
+_HERE = os.path.abspath(os.path.dirname(__file__))
+
+
+def pytest_collection_modifyitems(items):
+    # this hook sees the whole session's items; mark only this directory's
+    for item in items:
+        if str(item.fspath).startswith(_HERE):
+            item.add_marker(pytest.mark.tier2)

@@ -1,0 +1,181 @@
+"""Failure-mode composition (satellite coverage):
+
+* straggler substitution x Byzantine perturbation in ONE step — the order
+  is pinned (stale first, then adversary): a stale adversary corrupts its
+  STALE vector, which is observably different from corrupting a fresh one;
+* ``simulate_stragglers`` + ``straggler_mask_for`` through a real (tiny)
+  mesh region, composed with the engine's compiled adversary;
+* ``ElasticPlan`` reshard with Mode-A per-worker momentum truncation /
+  zero-padding round-tripping through ``checkpoint.restore``.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.configs.base import ByzantineConfig, VoteStrategy
+from repro.core import byzantine, sign_compress as sc
+from repro.distributed import fault_tolerance as ft
+from repro.sim import AdversarySpec, ScenarioRunner, ScenarioSpec
+from repro.sim.virtual_mesh import VirtualVoteEngine
+
+
+# ---------------------------------------------------------------------------
+# stale x adversary ordering
+# ---------------------------------------------------------------------------
+
+
+def test_stale_adversary_corrupts_stale_vector():
+    """Replica 0 is both stale and a sign-flipper: what reaches the wire
+    must be -prev[0], not -fresh[0] (and the two differ)."""
+    rng = np.random.default_rng(0)
+    fresh = np.where(rng.integers(0, 2, (4, 40)) == 1, 1, -1).astype(np.int8)
+    prev = np.where(rng.integers(0, 2, (4, 40)) == 1, 1, -1).astype(np.int8)
+    assert (fresh[0] != prev[0]).any()
+    eng = VirtualVoteEngine(VoteStrategy.PSUM_INT8,
+                            ByzantineConfig(mode="sign_flip",
+                                            num_adversaries=1))
+    eff = np.asarray(eng.effective_signs(
+        jnp.asarray(fresh, jnp.float32), jnp.asarray(prev), n_stale=1))
+    np.testing.assert_array_equal(eff[0], -prev[0])      # stale THEN flip
+    np.testing.assert_array_equal(eff[1:], fresh[1:])
+    assert (eff[0] != -fresh[0]).any()                   # != fresh adversary
+
+
+def test_stale_honest_vs_stale_adversary_differ_in_vote():
+    """Same scenario, adversary on/off: with the adversary also straggling
+    the vote must reflect the flipped STALE vector."""
+    signs = np.ones((3, 8), np.int8)
+    prev = -np.ones((3, 8), np.int8)
+    honest = VirtualVoteEngine(VoteStrategy.PSUM_INT8)
+    evil = VirtualVoteEngine(VoteStrategy.PSUM_INT8,
+                             ByzantineConfig(mode="sign_flip",
+                                             num_adversaries=1))
+    v_honest, _ = honest.vote_with_failures(
+        jnp.asarray(signs, jnp.float32), jnp.asarray(prev), n_stale=1)
+    v_evil, _ = evil.vote_with_failures(
+        jnp.asarray(signs, jnp.float32), jnp.asarray(prev), n_stale=1)
+    # 1 stale: honest wire is (-1, +1, +1) -> +1; the evil straggler
+    # flips its STALE -1 back to +1 -> unanimous +1 (same vote, larger
+    # margin)
+    np.testing.assert_array_equal(np.asarray(v_honest), np.ones(8))
+    np.testing.assert_array_equal(np.asarray(v_evil), np.ones(8))
+    # 2 stale: honest wire (-1, -1, +1) -> -1, but with replica 0 evil
+    # the wire is (+1, -1, +1) -> +1 — the composed failure changes the
+    # DECISION, which neither failure does alone
+    v_h2, _ = honest.vote_with_failures(
+        jnp.asarray(signs, jnp.float32), jnp.asarray(prev), n_stale=2)
+    v_e2, _ = evil.vote_with_failures(
+        jnp.asarray(signs, jnp.float32), jnp.asarray(prev), n_stale=2)
+    np.testing.assert_array_equal(np.asarray(v_h2), -np.ones(8))
+    np.testing.assert_array_equal(np.asarray(v_e2), np.ones(8))
+
+
+def test_mesh_region_compose_stale_and_adversary_one_device():
+    """vote_with_failures through a real shard_map region (1-device mesh,
+    partial-auto: the trainer's configuration) composes both failures."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.vote_engine import VoteEngine
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
+    eng = VoteEngine(strategy=VoteStrategy.PSUM_INT8, axes=("data",),
+                     byz=ByzantineConfig(mode="sign_flip",
+                                         num_adversaries=1))
+
+    def f(vals, prev, step):
+        out = ft.vote_with_failures(eng, vals[0], prev[0], n_stale=1,
+                                    step=step)
+        return out[None]
+
+    sh = compat.shard_map(f, mesh=mesh, in_specs=(P("data"), P("data"), P()),
+                          out_specs=P("data"), axis_names={"data"},
+                          check_vma=False)
+    vals = jnp.ones((1, 16), jnp.float32)
+    prev = -jnp.ones((1, 16), jnp.int8)
+    out = np.asarray(jax.jit(sh)(vals, prev, jnp.int32(0)))[0]
+    # M=1, replica 0 stale AND adversarial: vote = -(-1) = +1... the stale
+    # substitution hands -1, the flip makes it +1
+    np.testing.assert_array_equal(out, np.ones(16, np.float32))
+
+
+def test_straggler_mask_and_simulate_compose_pointwise():
+    signs = jnp.asarray(np.arange(12).reshape(4, 3) % 3 - 1, jnp.int8)
+    prev = jnp.asarray(-np.ones((4, 3)), jnp.int8)
+    mask = (jnp.arange(4) < 2)[:, None]
+    out = np.asarray(ft.simulate_stragglers(signs, prev, mask))
+    np.testing.assert_array_equal(out[:2], -np.ones((2, 3)))
+    np.testing.assert_array_equal(out[2:], np.asarray(signs)[2:])
+
+
+# ---------------------------------------------------------------------------
+# ElasticPlan + checkpoint restore round-trip (Mode A momentum)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_rescale_keeps_tp_and_shrinks_data():
+    plan = ft.plan_rescale((4, 2), ("data", "model"), surviving_devices=6)
+    assert plan.new_axes == ("data", "model")
+    assert plan.new_shape == (2, 2)          # largest pow2 data fit
+    assert plan.new_replicas == 2
+    with pytest.raises(ValueError):
+        ft.plan_rescale((4, 8), ("data", "model"), surviving_devices=4)
+
+
+@pytest.mark.parametrize("new_m,kind", [(2, "truncates"), (6, "zero-pads")])
+def test_mode_a_momentum_roundtrip_through_restore(tmp_path, new_m, kind):
+    """Save per-worker (leading vote-axis) momentum for M=4, restore under
+    a rescaled replica count: truncate-or-zero-pad along axis 0, exactly
+    the Scenario Lab's elastic rule (§6)."""
+    from repro.checkpoint import checkpoint as ckpt
+
+    rng = np.random.default_rng(1)
+    params = {"w": rng.normal(size=(8, 3)).astype(np.float32)}
+    mom = {"w": rng.normal(size=(4, 8, 3)).astype(np.float32)}
+    opt = {"count": np.int32(7), "momentum": mom}
+    ckpt.save(str(tmp_path), 7, params, opt)
+
+    like_opt = {"count": jax.ShapeDtypeStruct((), jnp.int32),
+                "momentum": {"w": jax.ShapeDtypeStruct((new_m, 8, 3),
+                                                       jnp.float32)}}
+    _, opt_r, _, meta = ckpt.restore(str(tmp_path), like_opt=like_opt)
+    got = opt_r["momentum"]["w"]
+    assert got.shape == (new_m, 8, 3)
+    keep = min(new_m, 4)
+    np.testing.assert_array_equal(got[:keep], mom["w"][:keep])
+    if new_m > 4:   # joiners start with zero momentum (stale-but-honest)
+        np.testing.assert_array_equal(got[4:], 0.0)
+    assert meta["step"] == 7
+
+
+def test_runner_elastic_refit_matches_checkpoint_rule():
+    """The runner's mid-run rescale applies checkpoint.refit_leading_axis:
+    growing the voter set back must leave survivors' momentum intact and
+    hand joiners zeros — visible as the joiners abstaining if immediately
+    stale (prev_signs zero-padded)."""
+    from repro.checkpoint.checkpoint import refit_leading_axis
+    v = np.arange(12, dtype=np.float32).reshape(4, 3)
+    shrunk = refit_leading_axis(v, (2, 3))
+    np.testing.assert_array_equal(shrunk, v[:2])
+    grown = refit_leading_axis(shrunk, (5, 3))
+    np.testing.assert_array_equal(grown[:2], v[:2])
+    np.testing.assert_array_equal(grown[2:], 0.0)
+    with pytest.raises(ValueError):
+        refit_leading_axis(v, (4, 7))
+
+
+def test_elastic_scenario_digest_invariant_to_backend_shape():
+    """Elastic drill is deterministic and its noise stream depends only on
+    the CURRENT voter count — shrinking at step k and starting at the
+    smaller size agree from that step's noise onward (trace sanity)."""
+    from repro.sim import ElasticEvent
+    spec = ScenarioSpec("el/det", n_workers=6, n_steps=8, dim=48,
+                        adversary=AdversarySpec("random", 0.3),
+                        elastic=(ElasticEvent(4, 3),))
+    t1 = ScenarioRunner(spec).run()
+    t2 = ScenarioRunner(spec).run()
+    assert t1.digest == t2.digest
+    assert [s.n_workers for s in t1.steps] == [6] * 4 + [3] * 4

@@ -1,0 +1,45 @@
+"""Drives tests/tier2/scenario_harness.py in subprocesses.
+
+Two runs: the 8-virtual-device platform (full checks: mesh == virtual
+bit-identity, compat shims, adversary lemma) and a 1-device platform in
+``virtual-only`` mode. The VDIGEST lines of both runs must match exactly
+— the Scenario Lab's "reproducible across host counts" guarantee as a
+string diff.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HARNESS = os.path.join(os.path.dirname(__file__), "scenario_harness.py")
+
+
+def _run(device_count: int, *args: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "..", "src"),
+         env.get("PYTHONPATH", "")])
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={device_count}"
+    proc = subprocess.run([sys.executable, HARNESS, *args], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "scenario harness failed"
+    assert "ALL SCENARIO HARNESS CHECKS PASSED" in proc.stdout
+    return {line.split()[1]: line.split()[2]
+            for line in proc.stdout.splitlines()
+            if line.startswith("VDIGEST ")}
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(1200)
+def test_scenario_harness_8dev_and_host_count_invariance():
+    d8 = _run(8)
+    d1 = _run(1, "virtual-only")
+    assert d8 and set(d8) == set(d1)
+    for name in d8:
+        assert d8[name] == d1[name], (
+            f"{name}: digest differs between 8-device and 1-device "
+            "replays — per-scenario seeding is host-count dependent")

@@ -1,0 +1,99 @@
+"""Deterministic twin of test_strategy_properties.py (runs with or
+without hypothesis): seeded sweep of the same matrix — all three wire
+strategies + the fused Pallas kernel, odd/even voter counts,
+padded/unpadded shapes, f32/bf16 grad dtypes, and the pinned tie-break
+at exactly 50% adversaries.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ByzantineConfig, VoteStrategy
+from repro.core import byzantine, sign_compress as sc
+from repro.kernels import ops
+from repro.sim import virtual_vote
+
+STRATS = (VoteStrategy.PSUM_INT8, VoteStrategy.ALLGATHER_1BIT,
+          VoteStrategy.HIERARCHICAL)
+RNG = np.random.default_rng(42)
+
+
+def _pm1(m, n):
+    return np.where(RNG.integers(0, 2, size=(m, n)) == 1, 1.0, -1.0) \
+        .astype(np.float32)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("m", [1, 2, 3, 4, 8, 9, 15, 16])
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 64, 129])
+def test_matrix_bit_identity(m, n, dtype):
+    x = np.asarray(jnp.asarray(_pm1(m, n), jnp.dtype(dtype)), np.float32)
+    signs = np.asarray(sc.sign_ternary(jnp.asarray(x)))
+    counts = signs.astype(np.int32).sum(axis=0)
+    votes = {s: np.asarray(virtual_vote(jnp.asarray(signs), s))
+             for s in STRATS}
+    np.testing.assert_array_equal(votes[VoteStrategy.PSUM_INT8],
+                                  np.sign(counts).astype(np.int8))
+    packed = np.where(counts >= 0, 1, -1).astype(np.int8)
+    np.testing.assert_array_equal(votes[VoteStrategy.ALLGATHER_1BIT], packed)
+    np.testing.assert_array_equal(votes[VoteStrategy.HIERARCHICAL], packed)
+    fused = np.asarray(ops.bitunpack(
+        ops.fused_majority(jnp.asarray(x, jnp.float32)), n, jnp.int8))
+    np.testing.assert_array_equal(fused, packed)
+    if m % 2 == 1:  # odd M with ±1 inputs cannot tie: ALL bit-identical
+        np.testing.assert_array_equal(votes[VoteStrategy.PSUM_INT8], packed)
+
+
+@pytest.mark.parametrize("m", [2, 4, 8, 16])
+def test_tie_break_at_exactly_half_adversaries(m):
+    """50% sign-flippers against a unanimous electorate: count == 0 on
+    every coordinate. psum_int8 abstains (0); allgather_1bit,
+    hierarchical and the fused kernel resolve +1 (documented divergence,
+    DESIGN.md §5/§7)."""
+    n = 97
+    honest = np.tile(_pm1(1, n), (m, 1))
+    byz_cfg = ByzantineConfig(mode="sign_flip", num_adversaries=m // 2)
+    wire = np.asarray(byzantine.apply_adversary_stacked(
+        jnp.asarray(sc.sign_ternary(jnp.asarray(honest))), byz_cfg))
+    assert (wire.astype(np.int32).sum(axis=0) == 0).all()
+    np.testing.assert_array_equal(
+        np.asarray(virtual_vote(jnp.asarray(wire), VoteStrategy.PSUM_INT8)),
+        np.zeros(n, np.int8))
+    for strat in (VoteStrategy.ALLGATHER_1BIT, VoteStrategy.HIERARCHICAL):
+        np.testing.assert_array_equal(
+            np.asarray(virtual_vote(jnp.asarray(wire), strat)),
+            np.ones(n, np.int8), err_msg=str(strat))
+    np.testing.assert_array_equal(
+        np.asarray(ops.bitunpack(
+            ops.fused_majority(jnp.asarray(wire, jnp.float32)), n,
+            jnp.int8)),
+        np.ones(n, np.int8))
+
+
+def test_one_below_half_cannot_flip_unanimous():
+    """Theorem 2's determinism core on the real wire: with fewer than half
+    the voters flipped, a unanimous electorate's decision survives on
+    every strategy, bit for bit."""
+    m, n = 16, 200
+    honest = np.tile(_pm1(1, n), (m, 1))
+    byz_cfg = ByzantineConfig(mode="sign_flip", num_adversaries=m // 2 - 1)
+    wire = jnp.asarray(byzantine.apply_adversary_stacked(
+        jnp.asarray(sc.sign_ternary(jnp.asarray(honest))), byz_cfg))
+    want = np.asarray(sc.sign_ternary(jnp.asarray(honest[0])))
+    for strat in STRATS:
+        np.testing.assert_array_equal(
+            np.asarray(virtual_vote(wire, strat)), want, err_msg=str(strat))
+
+
+def test_bf16_and_f32_grads_decide_identically():
+    """Same sign pattern in bf16 and f32 gradients -> identical decisions
+    (the wire carries signs; magnitude precision is irrelevant)."""
+    m, n = 8, 130
+    mag = RNG.uniform(0.5, 2.0, size=(m, n)).astype(np.float32)
+    x32 = _pm1(m, n) * mag
+    x16 = jnp.asarray(x32, jnp.bfloat16)
+    for strat in STRATS:
+        v32 = np.asarray(virtual_vote(sc.sign_ternary(jnp.asarray(x32)),
+                                      strat))
+        v16 = np.asarray(virtual_vote(sc.sign_ternary(x16), strat))
+        np.testing.assert_array_equal(v32, v16, err_msg=str(strat))

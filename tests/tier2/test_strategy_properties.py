@@ -1,0 +1,103 @@
+"""Property tests (hypothesis): cross-strategy decision consistency.
+
+All three wire strategies (`psum_int8`, `allgather_1bit`, `hierarchical`)
+and the fused Pallas kernel must produce bit-identical decisions on
+random sign tensors across odd/even voter counts, padded/unpadded shapes
+(n % 32 != 0 exercises the pack padding), and f32/bf16 grad dtypes —
+identical everywhere for odd M (no ties possible with ±1 inputs), and on
+every untied coordinate for even M. The one documented divergence is the
+tie itself (DESIGN.md §5/§7): integer-count wire -> 0 (abstain), 1-bit
+wires -> +1 — pinned here at the paper's boundary regime of EXACTLY 50%
+sign-flipping adversaries.
+
+``hypothesis`` is optional: without it this module skips — the same
+matrix is swept deterministically in test_strategy_consistency.py.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; deterministic "
+    "equivalents live in test_strategy_consistency.py")
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ByzantineConfig, VoteStrategy
+from repro.core import byzantine, sign_compress as sc
+from repro.kernels import ops
+from repro.sim import virtual_vote
+
+STRATS = (VoteStrategy.PSUM_INT8, VoteStrategy.ALLGATHER_1BIT,
+          VoteStrategy.HIERARCHICAL)
+
+
+def assert_decisions_consistent(x: np.ndarray):
+    """The shared oracle: counts decide everything; strategies may only
+    differ on exact ties, and only per their documented convention."""
+    m, n = x.shape
+    signs = np.asarray(sc.sign_ternary(jnp.asarray(x)))
+    counts = signs.astype(np.int32).sum(axis=0)
+    votes = {s: np.asarray(virtual_vote(jnp.asarray(signs), s))
+             for s in STRATS}
+    np.testing.assert_array_equal(votes[VoteStrategy.PSUM_INT8],
+                                  np.sign(counts).astype(np.int8))
+    packed = np.where(counts >= 0, 1, -1).astype(np.int8)
+    np.testing.assert_array_equal(votes[VoteStrategy.ALLGATHER_1BIT], packed)
+    np.testing.assert_array_equal(votes[VoteStrategy.HIERARCHICAL], packed)
+    fused = np.asarray(ops.bitunpack(
+        ops.fused_majority(jnp.asarray(x, jnp.float32)), n, jnp.int8))
+    np.testing.assert_array_equal(fused, packed)
+    if m % 2 == 1:      # odd M, ±1 inputs: no ties -> ALL bit-identical
+        np.testing.assert_array_equal(votes[VoteStrategy.PSUM_INT8], packed)
+
+
+@given(st.integers(1, 12), st.integers(1, 130),
+       st.sampled_from(["float32", "bfloat16"]), st.randoms())
+@settings(max_examples=60, deadline=None)
+def test_strategies_and_kernel_bit_identical(m, n, dtype, rnd):
+    x = np.array([[rnd.choice([-1.0, 1.0]) for _ in range(n)]
+                  for _ in range(m)], np.float32)
+    x = np.asarray(jnp.asarray(x, jnp.dtype(dtype)), np.float32)
+    assert_decisions_consistent(x)
+
+
+@given(st.integers(1, 8), st.integers(1, 96), st.randoms())
+@settings(max_examples=40, deadline=None)
+def test_tie_break_at_exactly_half_adversaries(half_m, n, rnd):
+    """EXACTLY 50% sign-flippers: every coordinate's count is zero. The
+    integer-count wire abstains (0); both 1-bit wires and the fused
+    kernel resolve +1. This is the cross-strategy divergence the suite
+    documents rather than papers over."""
+    m = 2 * half_m
+    honest = np.array([[rnd.choice([-1.0, 1.0]) for _ in range(n)]
+                       for _ in range(m)], np.float32)
+    honest = np.tile(honest[:1], (m, 1))            # unanimous electorate
+    byz_cfg = ByzantineConfig(mode="sign_flip", num_adversaries=half_m)
+    wire = np.asarray(byzantine.apply_adversary_stacked(
+        jnp.asarray(sc.sign_ternary(jnp.asarray(honest))), byz_cfg))
+    assert (wire.astype(np.int32).sum(axis=0) == 0).all()
+    assert np.asarray(
+        virtual_vote(jnp.asarray(wire), VoteStrategy.PSUM_INT8)).sum() == 0
+    for strat in (VoteStrategy.ALLGATHER_1BIT, VoteStrategy.HIERARCHICAL):
+        np.testing.assert_array_equal(
+            np.asarray(virtual_vote(jnp.asarray(wire), strat)),
+            np.ones(n, np.int8), err_msg=str(strat))
+    fused = np.asarray(ops.bitunpack(
+        ops.fused_majority(jnp.asarray(wire, jnp.float32)), n, jnp.int8))
+    np.testing.assert_array_equal(fused, np.ones(n, np.int8))
+
+
+@given(st.integers(2, 10), st.integers(33, 120), st.randoms())
+@settings(max_examples=40, deadline=None)
+def test_padding_never_leaks_into_decisions(m, n, rnd):
+    """Unpadded (n % 32 == 0) and padded slices of the same electorate
+    agree on the common prefix, for every strategy."""
+    x = np.array([[rnd.choice([-1.0, 1.0]) for _ in range(n)]
+                  for _ in range(m)], np.float32)
+    n32 = (n // 32) * 32
+    for s in STRATS:
+        full = np.asarray(virtual_vote(jnp.asarray(
+            sc.sign_ternary(jnp.asarray(x))), s))
+        sliced = np.asarray(virtual_vote(jnp.asarray(
+            sc.sign_ternary(jnp.asarray(x[:, :n32]))), s))
+        np.testing.assert_array_equal(full[:n32], sliced, err_msg=str(s))

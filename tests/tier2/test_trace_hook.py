@@ -1,0 +1,60 @@
+"""The trainer-side trace hook: TrainConfig.diagnostics=True surfaces
+per-step vote diagnostics (agreement with the vote, vote margin) in the
+step metrics — the same schema the Scenario Lab traces record, captured
+from a real train step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (OptimizerConfig, TrainConfig, get_config,
+                                reduced_config)
+from repro.models import model as M
+from repro.train import train_step as TS
+
+
+def test_diagnostics_in_step_metrics():
+    cfg = reduced_config(get_config("glm4-9b"), num_layers=1)
+    tcfg = TrainConfig(global_batch=4, seq_len=16, diagnostics=True,
+                       optimizer=OptimizerConfig(kind="signum_vote",
+                                                 learning_rate=1e-3))
+    art = TS.make_train_step(cfg, tcfg, mesh=None)
+    params, opt = TS.materialize_state(cfg, tcfg, art, jax.random.PRNGKey(0))
+    batch = M.make_batch(cfg, 4, 16, jax.random.PRNGKey(1))
+    _, _, met = art.step_fn(params, opt, batch, jnp.int32(0))
+    assert "vote_agreement" in met and "vote_margin" in met
+    # M=1: every replica agrees with itself; margin = mean |sign| <= 1
+    assert float(met["vote_agreement"]) == 1.0
+    assert 0.0 < float(met["vote_margin"]) <= 1.0
+
+
+def test_diagnostics_keys_present_when_all_leaves_fused():
+    """Mode B with every leaf on the fused vote-in-backward path cannot
+    observe the wire in the optimizer — the metric keys must still exist
+    (NaN), so trace consumers never KeyError."""
+    from repro.configs.base import MomentumMode
+    from repro.core.signum import make_sign_optimizer
+
+    cfg = OptimizerConfig(kind="signsgd_vote",
+                          momentum_mode=MomentumMode.GLOBAL,
+                          learning_rate=1e-3)
+    opt = make_sign_optimizer(cfg, axes=(), voted_leaves=("w",),
+                              diagnostics=True)
+    params = {"w": jnp.ones((4,))}
+    state = opt.init(params)
+    _, _, diag = opt.update({"w": jnp.ones((4,))}, state, params,
+                            jnp.int32(0))
+    assert np.isnan(float(diag["vote_agreement"]))
+    assert np.isnan(float(diag["vote_margin"]))
+
+
+def test_diagnostics_off_by_default():
+    cfg = reduced_config(get_config("glm4-9b"), num_layers=1)
+    tcfg = TrainConfig(global_batch=4, seq_len=16,
+                       optimizer=OptimizerConfig(kind="signum_vote",
+                                                 learning_rate=1e-3))
+    art = TS.make_train_step(cfg, tcfg, mesh=None)
+    params, opt = TS.materialize_state(cfg, tcfg, art, jax.random.PRNGKey(0))
+    batch = M.make_batch(cfg, 4, 16, jax.random.PRNGKey(1))
+    _, _, met = art.step_fn(params, opt, batch, jnp.int32(0))
+    assert "vote_margin" not in met
