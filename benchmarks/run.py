@@ -7,13 +7,20 @@ Prints ``name,value,derived`` CSV rows:
   fig4  Byzantine training robustness sweep           (bench_robustness)
   fig5  communication volume/time vs dense all-reduce (bench_comm)
   fig6  end-to-end step-time speedup model            (bench_speedup)
+  codecs  codec frontier: convergence vs bits/param   (bench_codecs)
   roofline  per-cell terms from the dry-run artifacts (roofline)
+
+``--emit-json FILE`` additionally writes every produced row as JSON —
+the machine-readable bench baseline (e.g. ``--only codecs --emit-json
+BENCH_codecs.json`` seeds the codec trajectory; the CI codec-smoke stage
+writes the same file via ``bench_codecs --smoke``).
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--only fig1,fig5]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -21,20 +28,25 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated module keys (fig1..fig6,roofline)")
+                    help="comma-separated module keys "
+                         "(fig1..fig6,codecs,roofline)")
+    ap.add_argument("--emit-json", dest="json_out", default=None,
+                    help="also write the produced rows to this JSON file")
     args = ap.parse_args()
 
-    from benchmarks import (bench_comm, bench_convergence, bench_noise,
-                            bench_robustness, bench_speedup, roofline)
+    from benchmarks import (bench_codecs, bench_comm, bench_convergence,
+                            bench_noise, bench_robustness, bench_speedup,
+                            roofline)
     suites = {
         "fig1": bench_convergence, "fig2": bench_noise, "fig3": bench_noise,
         "fig4": bench_robustness, "fig5": bench_comm, "fig6": bench_speedup,
-        "roofline": roofline,
+        "codecs": bench_codecs, "roofline": roofline,
     }
     only = set(args.only.split(",")) if args.only else None
     seen_mods = set()
     print("name,value,derived")
     failures = 0
+    collected = []
     for key, mod in suites.items():
         if only and key not in only:
             continue
@@ -44,10 +56,20 @@ def main() -> None:
         try:
             for name, value, derived in mod.rows():
                 print(f"{name},{value:.6g},{derived}", flush=True)
+                collected.append({"name": name, "value": value,
+                                  "derived": derived})
         except Exception:
             failures += 1
             traceback.print_exc()
             print(f"{key}/ERROR,-1,see stderr", flush=True)
+            # the JSON must carry the failure too — a partially failed
+            # sweep must not emit a healthy-looking baseline
+            collected.append({"name": f"{key}/ERROR", "value": -1.0,
+                              "derived": "see stderr"})
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"rows": collected}, f, indent=1)
+        print(f"# wrote {args.json_out}", flush=True)
     sys.exit(1 if failures else 0)
 
 

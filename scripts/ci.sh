@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # CI lanes: the full test suite, the tier-2 Scenario Lab lane, the
 # communication benchmark's smoke pass (VoteEngine wire accounting +
-# fused-kernel-vs-oracle checks), and the Scenario Lab smoke sweep
+# fused-kernel-vs-oracle checks), the Scenario Lab smoke sweep
 # (3 drills x 2 strategies, mesh==virtual bit-identity on the
-# 8-virtual-device host platform, <60 s).
+# 8-virtual-device host platform, <60 s), and the codec smoke sweep
+# (every gradient codec drilled on 8 virtual devices, new codecs
+# asserted mesh==virtual, BENCH_codecs.json baseline written, <10 s).
 #
 #   scripts/ci.sh          # everything
 #   scripts/ci.sh --quick  # skip tests marked slow (the distributed
@@ -32,5 +34,9 @@ python -m benchmarks.bench_comm --smoke
 echo "== scenario lab smoke (8-virtual-device platform) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   python -m benchmarks.bench_robustness --scenario-smoke
+
+echo "== codec smoke (8-virtual-device platform; writes BENCH_codecs.json) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  python -m benchmarks.bench_codecs --smoke
 
 echo "CI OK"

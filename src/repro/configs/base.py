@@ -273,10 +273,31 @@ class OptimizerConfig:
     momentum_mode: MomentumMode = MomentumMode.PER_WORKER
     momentum_dtype: str = "float32"
     error_feedback: bool = False  # beyond-paper EF-sign variant
+    # gradient codec (DESIGN.md §8): sign1bit | ef_sign | ternary2bit |
+    # weighted_vote. "sign1bit" is the paper's wire (bit-identical to the
+    # pre-codec path); error_feedback=True is the legacy spelling of
+    # codec="ef_sign" and resolves to it.
+    codec: str = "sign1bit"
     beta2: float = 0.999          # adam baseline
     eps: float = 1e-8
     warmup_steps: int = 0
     total_steps: int = 0          # 0 = constant lr
+
+    @property
+    def resolved_codec(self) -> str:
+        """The effective codec: explicit `codec`, with the legacy
+        ``error_feedback`` flag mapping the default to ``ef_sign``.
+        Combining the flag with a codec that carries no residual is a
+        config error, never a silent drop of error feedback."""
+        if self.error_feedback and self.codec not in ("sign1bit",
+                                                      "ef_sign"):
+            raise ValueError(
+                f"error_feedback=True conflicts with codec="
+                f"{self.codec!r}: only ef_sign carries an EF residual "
+                "(spell the codec explicitly and drop the legacy flag)")
+        if self.codec != "sign1bit":
+            return self.codec
+        return "ef_sign" if self.error_feedback else "sign1bit"
 
 
 @dataclasses.dataclass(frozen=True)

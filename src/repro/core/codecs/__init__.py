@@ -1,0 +1,48 @@
+"""Gradient Codec subsystem (DESIGN.md §8).
+
+    from repro.core import codecs
+    codec = codecs.get_codec("ef_sign")
+
+Four codecs ship (registry ``CODECS``):
+
+| codec           | encode                      | decode                     | state        |
+|-----------------|-----------------------------|----------------------------|--------------|
+| ``sign1bit``    | raw signs (the paper)       | unweighted majority        | none         |
+| ``ef_sign``     | signs of value + EF residual| unweighted majority        | worker       |
+| ``ternary2bit`` | ternary symbols, 2-bit pack | sign of symbol sum (ties→0)| none         |
+| ``weighted_vote``| raw signs                  | Chair–Varshney weighted    | server       |
+
+``sign1bit`` is pinned bit-identical to the pre-codec wire path; the
+others are the compression/robustness frontier every future compression
+or defense PR plugs into.
+"""
+from repro.core.codecs.base import (GradientCodec, tree_encode,
+                                    tree_feedback)
+from repro.core.codecs.ef_sign import EFSignCodec
+from repro.core.codecs.sign1bit import Sign1BitCodec
+from repro.core.codecs.ternary import TERNARY_WIRE, Ternary2BitCodec
+from repro.core.codecs.weighted import (WeightedVoteCodec, decode_stacked,
+                                        reliability_weights)
+
+CODECS = {c.name: c for c in (Sign1BitCodec(), EFSignCodec(),
+                              Ternary2BitCodec(), WeightedVoteCodec())}
+
+DEFAULT_CODEC = "sign1bit"
+
+
+def get_codec(name: str) -> GradientCodec:
+    if name not in CODECS:
+        raise ValueError(f"unknown codec {name!r}; have {sorted(CODECS)}")
+    return CODECS[name]
+
+
+def list_codecs():
+    return tuple(sorted(CODECS))
+
+
+__all__ = [
+    "CODECS", "DEFAULT_CODEC", "EFSignCodec", "GradientCodec",
+    "Sign1BitCodec", "TERNARY_WIRE", "Ternary2BitCodec",
+    "WeightedVoteCodec", "decode_stacked", "get_codec", "list_codecs",
+    "reliability_weights", "tree_encode", "tree_feedback",
+]

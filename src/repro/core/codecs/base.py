@@ -1,0 +1,112 @@
+"""The GradientCodec interface (DESIGN.md §8).
+
+The paper's wire is one point on a compression/robustness frontier: raw
+1-bit signs with unweighted majority decoding. A :class:`GradientCodec`
+factors that choice out of the vote pipeline so the frontier becomes
+pluggable — what each worker *encodes* onto the wire (signs, error-fed
+signs, abstain-capable ternary symbols) and how the server *decodes* the
+arrivals (unweighted majority, reliability-weighted vote) vary per codec,
+while the VoteEngine's pack → exchange → tally → unpack transport and the
+Byzantine/straggler machinery in front of it stay shared.
+
+A codec owns up to three pieces of state and behaviour:
+
+* **worker state** (``init_state`` / ``encode_leaf`` / ``feedback_leaf``)
+  — per-replica memory carried in the optimizer state beside the momentum
+  (e.g. the EF residual). Shaped like the values it encodes; under Mode A
+  it gets the leading vote-axis dim and survives elastic rescale through
+  ``checkpoint.refit_leading_axis`` exactly like the momentum (§6).
+* **server state** (``init_server_state`` / ``decode_stacked``) — per-
+  voter-set memory the decode rule updates (e.g. reliability estimates).
+  Replicated across the mesh: every chip plays the server, so every chip
+  holds — and identically updates — the same copy.
+* **the wire** (``supported_strategies`` / ``wire_bits``) — which §2
+  strategies can transport this codec's symbols and at what width, which
+  is what the AUTO selector prices.
+
+Implementations are stateless singletons (state lives in the caller's
+trees), safe to close over in jit.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from repro.configs.base import VoteStrategy
+
+
+class GradientCodec(abc.ABC):
+    """One point on the compression/robustness frontier."""
+
+    #: registry key (also the ScenarioSpec / OptimizerConfig spelling)
+    name: str
+    #: wire bits per parameter on the codec's native packed exchange
+    bits_per_param: float
+    #: strategies whose exchange can transport this codec's symbols
+    supported_strategies: Tuple[VoteStrategy, ...]
+    #: True if encode carries per-worker memory (EF residual)
+    worker_state: bool = False
+    #: True if decode carries server-side memory (reliability weights)
+    server_state: bool = False
+
+    # ---- worker side -----------------------------------------------------
+
+    def init_state(self, values: jax.Array) -> Optional[jax.Array]:
+        """Per-worker encode memory for one leaf (None if stateless)."""
+        return None
+
+    def encode_leaf(self, values: jax.Array,
+                    state: Optional[jax.Array]) -> jax.Array:
+        """values -> the tensor whose SIGNS go to the wire (the 'encode
+        input'); stateful codecs fold their memory in here."""
+        return values
+
+    def feedback_leaf(self, encoded: jax.Array, vote: jax.Array,
+                      state: Optional[jax.Array]) -> Optional[jax.Array]:
+        """Post-vote worker-state update (e.g. the EF residual); `encoded`
+        is what encode_leaf returned, `vote` the decoded ±1/0 tensor."""
+        return state
+
+    # ---- server side -----------------------------------------------------
+
+    def init_server_state(self, n_workers: int) -> Dict[str, jax.Array]:
+        """Server-side decode memory for an M-voter set ({} if none).
+
+        All-zero is the uninformed prior for every codec (matches the
+        trainer's zeros-materialised opt state and the §6 elastic rule:
+        refit_leading_axis zero-pads joiners)."""
+        return {}
+
+    def ties(self, strategy: VoteStrategy) -> str:
+        """Decoded tie convention under `strategy` ("zero"/"plus_one")."""
+        from repro.core.vote_engine import STRATEGIES
+        return STRATEGIES[strategy].ties
+
+    def wire_bits(self, strategy: VoteStrategy) -> float:
+        """Wire bits per param this codec puts on `strategy`'s exchange."""
+        from repro.core.vote_engine import STRATEGIES
+        if strategy == VoteStrategy.ALLGATHER_1BIT:
+            return self.bits_per_param
+        return STRATEGIES[strategy].wire_bits_per_param
+
+    def validate_strategy(self, strategy: VoteStrategy) -> None:
+        if strategy not in self.supported_strategies:
+            raise ValueError(
+                f"codec {self.name!r} cannot ride strategy "
+                f"{strategy.value!r}; supported: "
+                f"{tuple(s.value for s in self.supported_strategies)}")
+
+
+def tree_encode(codec: GradientCodec, tree, state_tree):
+    """Map encode_leaf over a pytree (state_tree=None for stateless)."""
+    if not codec.worker_state or state_tree is None:
+        return jax.tree.map(lambda v: codec.encode_leaf(v, None), tree)
+    return jax.tree.map(codec.encode_leaf, tree, state_tree)
+
+
+def tree_feedback(codec: GradientCodec, encoded_tree, votes, state_tree):
+    """Map feedback_leaf over a pytree of (encoded, vote, state)."""
+    return jax.tree.map(codec.feedback_leaf, encoded_tree, votes,
+                        state_tree)

@@ -1,0 +1,61 @@
+"""``ef_sign`` — error-feedback sign compression (EF-signSGD family).
+
+Sign compression is biased: the magnitude information it discards never
+re-enters the update, which is what breaks plain signSGD on adversarially
+scaled coordinates (Karimireddy et al., 2019). Error feedback fixes it
+with one per-worker residual: fold the last step's compression error into
+this step's encode input, so discarded magnitude accumulates until it
+flips a sign and eventually gets through.
+
+Per worker, with `v` the momentum (or gradient) and `e` the residual:
+
+    t      = v + e                        (encode input)
+    wire   = sign(t)                      (same 1-bit symbols as sign1bit)
+    e'     = t - mean|t| * vote           (residual vs what was APPLIED)
+
+The residual is measured against the *decoded vote*, not the local sign —
+the update every worker actually applies — which is this repo's EF-sign
+variant (DESIGN.md §3, now §8): the memory absorbs both the local
+compression error and the vote's disagreement with the local direction.
+
+The wire is bit-identical to ``sign1bit`` (only the encode input
+differs), so every strategy transports it and the decode is the plain
+majority. Worker state `e` is momentum-shaped, lives beside the momentum
+in the optimizer state under the existing ``"error"`` key, and refits
+across elastic rescale by ``checkpoint.refit_leading_axis`` (§6).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import VoteStrategy
+from repro.core.codecs.base import GradientCodec
+
+
+class EFSignCodec(GradientCodec):
+    name = "ef_sign"
+    bits_per_param = 1.0
+    supported_strategies = (VoteStrategy.PSUM_INT8,
+                            VoteStrategy.ALLGATHER_1BIT,
+                            VoteStrategy.HIERARCHICAL)
+    worker_state = True
+
+    def init_state(self, values: jax.Array) -> jax.Array:
+        return jnp.zeros(values.shape, values.dtype)
+
+    def encode_leaf(self, values: jax.Array,
+                    state: Optional[jax.Array]) -> jax.Array:
+        if state is None:
+            return values
+        return state + values
+
+    def feedback_leaf(self, encoded: jax.Array, vote: jax.Array,
+                      state: Optional[jax.Array]) -> jax.Array:
+        # scale = mean|t| per worker: the 1-bit symbol carries no
+        # magnitude, so the residual prices the vote at the tensor's own
+        # mean amplitude (the signum.py EF rule, unchanged)
+        scale = jnp.mean(jnp.abs(encoded))
+        return encoded - scale * vote.astype(encoded.dtype)

@@ -1,0 +1,21 @@
+"""``sign1bit`` — the paper's codec, factored behind the API.
+
+Encode is the identity (the engine takes ternary signs of whatever it is
+handed), decode is the strategy's own unweighted majority; no state on
+either side. Every wire strategy transports it, at the strategy's native
+width. This codec is the refactor's fixed point: routing through it MUST
+be bit-identical to the pre-codec path — the tier-2 golden digest and
+``tests/test_codecs.py`` assert exactly that.
+"""
+from __future__ import annotations
+
+from repro.configs.base import VoteStrategy
+from repro.core.codecs.base import GradientCodec
+
+
+class Sign1BitCodec(GradientCodec):
+    name = "sign1bit"
+    bits_per_param = 1.0
+    supported_strategies = (VoteStrategy.PSUM_INT8,
+                            VoteStrategy.ALLGATHER_1BIT,
+                            VoteStrategy.HIERARCHICAL)

@@ -1,0 +1,111 @@
+"""``weighted_vote`` — reliability-weighted sign decoding (SignSGD-FD).
+
+Park & Lee (arXiv:2402.01340) observe that the server need not count sign
+votes uniformly: if it tracks how often each worker's vote disagrees with
+the decoded direction, it can decode a *weighted* vote that discounts —
+and, past 50% estimated flip rate, actively inverts — unreliable workers.
+This is the Chair–Varshney optimal fusion rule for M binary channels with
+flip probabilities p_m:
+
+    w_m  = log((1 - p_m) / p_m)
+    vote = sign( Σ_m w_m · s_m )          (ties → +1, the 1-bit wire rule)
+
+A consistent sign-flipper drifts to p_m → 1, w_m < 0, and its votes turn
+into evidence *for* the honest direction — gradient-sign decoding turns
+the adversary's own transmissions against it. The estimate p_m is an EMA
+of observed disagreement with the decoded vote, so the defense is learned
+on-line; it converges to the right labelling only while the unweighted
+majority starts out honest (adversary fraction < 1/2 at warm-up —
+Theorem 2's regime; beyond it the roles invert). With equal state across
+workers (the all-zero uninformed prior included) every weight is equal
+and the decode IS the unweighted ``allgather_1bit`` majority, bit for
+bit (`tests/test_codecs.py` pins both properties).
+
+Wire: the codec rides ``allgather_1bit`` unchanged — packed 1-bit signs,
+every chip plays the server — because weighting needs the individual
+votes, which only the gathered wire preserves (a psum destroys them; the
+per-step extra payload is the (M,) state, ~M floats, amortised to ~0
+bits/param). Server state `flip_ema` is an (M,) vector replicated on
+every chip, updated identically everywhere from the gathered wire, and
+refits across elastic rescale by ``checkpoint.refit_leading_axis`` —
+zero-padded joiners enter at the uninformed prior.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import VoteStrategy
+from repro.core.codecs.base import GradientCodec
+
+#: EMA rate of the per-worker disagreement estimate
+RHO = 0.5
+#: flip-probability clip: bounds the weights to ±log((1-eps)/eps) and
+#: keeps the all-zero prior finite
+P_MIN = 0.05
+
+
+def reliability_weights(flip_ema: jax.Array) -> jax.Array:
+    """(M,) flip-rate estimates -> (M,) Chair–Varshney log-odds weights,
+    quantized to multiples of 1/256.
+
+    The quantization is what makes the decode *deterministic in the
+    reduction order*: every weight (and so every term w_m·s_m and every
+    partial sum, |Σ| < 2^16) is an exact float32 multiple of 2^-8, so the
+    weighted sum is exact integer arithmetic however XLA associates it —
+    measured without it, a 12-voter exact tie summed to -1.2e-7 under one
+    lowering and +0.0 under another, silently flipping the tie rule. It
+    also pins the equal-weights decode to the unweighted majority bit for
+    bit (ties included), and costs < 0.2% weight precision — noise next
+    to the EMA's own estimation error."""
+    p = jnp.clip(flip_ema, P_MIN, 1.0 - P_MIN)
+    return jnp.round(jnp.log((1.0 - p) / p) * 256.0) / 256.0
+
+
+def decode_leaf_fixed(stacked: jax.Array, w: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """(M, ...) ±1 signs + (M,) FIXED weights -> ((...) ±1 vote,
+    (M,) per-worker mismatch counts vs that vote).
+
+    THE weighted decode expression — shared by the mesh tally (where
+    every replica holds the gathered stack), the virtual mesh, and the
+    trainer's tree path (weights fixed for the step, mismatch counts
+    aggregated across leaves) — so backend bit-identity holds by
+    construction. Callers must crop bit-pack padding lanes BEFORE calling
+    (padding always agrees with the vote, so counting it would dilute the
+    flip-rate observations)."""
+    wshape = (w.shape[0],) + (1,) * (stacked.ndim - 1)
+    wsum = jnp.sum(w.reshape(wshape) * stacked.astype(jnp.float32), axis=0)
+    vote = jnp.where(wsum >= 0, jnp.int8(1), jnp.int8(-1))
+    mismatch = jnp.sum((stacked != vote[None]).astype(jnp.float32),
+                       axis=tuple(range(1, stacked.ndim)))
+    return vote, mismatch
+
+
+def decode_stacked(stacked: jax.Array, flip_ema: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """(M, ...) ±1 signs + (M,) state -> ((...) ±1 vote, (M,) new state).
+
+    One decode + one EMA update; `stacked` must already be cropped to the
+    true coordinate count (no padding lanes)."""
+    vote, mismatch = decode_leaf_fixed(stacked,
+                                       reliability_weights(flip_ema))
+    n = stacked.size // stacked.shape[0]
+    new_ema = (1.0 - RHO) * flip_ema + RHO * mismatch / n
+    return vote, new_ema
+
+
+class WeightedVoteCodec(GradientCodec):
+    name = "weighted_vote"
+    bits_per_param = 1.0
+    supported_strategies = (VoteStrategy.ALLGATHER_1BIT,)
+    server_state = True
+
+    def init_server_state(self, n_workers: int) -> Dict[str, jax.Array]:
+        # all-zero = uninformed prior: equal weights, unweighted decode
+        return {"flip_ema": jnp.zeros((n_workers,), jnp.float32)}
+
+    def ties(self, strategy: VoteStrategy) -> str:
+        return "plus_one"   # weighted sum >= 0 -> +1 (1-bit wire rule)

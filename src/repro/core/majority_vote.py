@@ -92,6 +92,18 @@ def tree_vote(tree, strategy: VoteStrategy, axes: Sequence[str],
     return engine.vote_tree(tree, step)
 
 
+def tree_vote_codec(tree, strategy: VoteStrategy, axes: Sequence[str],
+                    byz: Optional[ByzantineConfig] = None, step=None,
+                    codec: str = "sign1bit", server_state=None):
+    """Codec-aware :func:`tree_vote` (DESIGN.md §8): returns
+    ``(±1 tree, new server state)``. With the default ``sign1bit`` codec
+    the votes are bit-identical to :func:`tree_vote`; server-stateful
+    codecs (``weighted_vote``) thread their decode memory through."""
+    engine = VoteEngine(strategy=strategy, axes=tuple(axes), byz=byz,
+                        codec=codec)
+    return engine.vote_tree_codec(tree, step, server_state)
+
+
 def tree_mean(tree, axes: Sequence[str]):
     """Dense baseline: psum-mean of gradients over the vote axes."""
     n = num_voters(axes)

@@ -9,8 +9,11 @@ Two sign conventions coexist (DESIGN.md §5):
   paper: a packed bit can only encode two states.
 
 Packing is 32 signs per uint32 word, little-endian within the word. The
-Pallas kernels in ``repro.kernels`` implement the same layout; these jnp
-versions are their oracles and the fallback path.
+ternary codec's 2-bit format (``pack_ternary``) stores 16 symbols per
+uint32 — two's-complement 2-bit fields, so it can encode the abstention
+the 1-bit wire cannot (DESIGN.md §8). The Pallas kernels in
+``repro.kernels`` implement the same layouts; these jnp versions are
+their oracles and the fallback path.
 """
 from __future__ import annotations
 
@@ -20,6 +23,8 @@ import jax
 import jax.numpy as jnp
 
 PACK = 32
+#: ternary symbols per uint32 word (2 bits each; codec ``ternary2bit``)
+PACK2 = 16
 
 
 def sign_ternary(x: jax.Array) -> jax.Array:
@@ -39,12 +44,30 @@ def pad_to_pack(flat: jax.Array, multiple: int = PACK) -> Tuple[jax.Array, int]:
     return flat, n
 
 
+def pad_last(x: jax.Array, multiple: int) -> Tuple[jax.Array, int]:
+    """Zero-pad the LAST dim to a multiple; returns (padded, original_n).
+
+    Routed through ``compat.pad_trailing`` so padding stays safe inside
+    legacy partial-auto shard_map (raw ``jnp.pad``'s constant-pad
+    lowering aborts there) — the same hardening the 1-bit wire's padding
+    already has."""
+    from repro import compat
+    n = x.shape[-1]
+    return compat.pad_trailing(x, (-n) % multiple), n
+
+
 def pack_signs(x: jax.Array) -> jax.Array:
     """x (..., n) any real dtype, n % 32 == 0 -> uint32 (..., n // 32).
 
     bit j of word w encodes sign(x[..., 32*w + j]) >= 0.
     """
-    assert x.shape[-1] % PACK == 0, x.shape
+    if x.shape[-1] % PACK != 0:
+        # a bare assert here vanishes under `python -O`, silently packing
+        # garbage from a misaligned reshape; callers either pre-pad
+        # (pad_last / pad_to_pack) or get told exactly what they sent
+        raise ValueError(
+            f"pack_signs needs last dim % {PACK} == 0, got shape "
+            f"{tuple(x.shape)}; pad with pad_to_pack/pad_last first")
     bits = (x >= 0).astype(jnp.uint32)
     words = bits.reshape(x.shape[:-1] + (x.shape[-1] // PACK, PACK))
     # unrolled shift/OR: an or-reduction is not lowerable by the CPU SPMD
@@ -89,3 +112,51 @@ def packed_majority(packed: jax.Array) -> jax.Array:
 def compression_ratio(dtype: jnp.dtype) -> float:
     """Wire compression vs a dense gradient of `dtype` (per direction)."""
     return jnp.dtype(dtype).itemsize * 8.0
+
+
+# ---------------------------------------------------------------------------
+# ternary 2-bit format (codec ``ternary2bit``; DESIGN.md §8)
+# ---------------------------------------------------------------------------
+#
+# 16 symbols per uint32, 2-bit two's complement per field, little-endian:
+# +1 -> 0b01, -1 -> 0b11, 0 (abstain) -> 0b00. Unlike the 1-bit wire this
+# format carries the ternary sign convention end to end, so an abstaining
+# replica (zero gradient) stays an abstention on the wire and a tied
+# coordinate decodes to 0, exactly like the integer-count strategies.
+
+
+def pack_ternary(s: jax.Array) -> jax.Array:
+    """s (..., n) int8 in {-1, 0, +1}, n % 16 == 0 -> uint32 (..., n // 16).
+
+    bits [2j, 2j+1] of word w encode s[..., 16*w + j] in 2-bit two's
+    complement (the 0b10 pattern is never produced).
+    """
+    if s.shape[-1] % PACK2 != 0:
+        raise ValueError(
+            f"pack_ternary needs last dim % {PACK2} == 0, got shape "
+            f"{tuple(s.shape)}; pad with pad_last first")
+    sym = (s.astype(jnp.int32) & 0x3).astype(jnp.uint32)
+    fields = sym.reshape(s.shape[:-1] + (s.shape[-1] // PACK2, PACK2))
+    acc = jnp.zeros(fields.shape[:-1], jnp.uint32)
+    for j in range(PACK2):   # unrolled shift/OR (SPMD-partitioner-safe)
+        acc = acc | (fields[..., j] << jnp.uint32(2 * j))
+    return acc
+
+
+def unpack_ternary(packed: jax.Array, dtype=jnp.int8) -> jax.Array:
+    """uint32 (..., w) -> (..., 16*w) of {-1, 0, +1} in `dtype`."""
+    shifts = jnp.arange(PACK2, dtype=jnp.uint32) * 2
+    fields = (packed[..., None] >> shifts) & jnp.uint32(0x3)
+    signs = jnp.where(fields == 1, 1,
+                      jnp.where(fields == 3, -1, 0)).astype(dtype)
+    return signs.reshape(packed.shape[:-1] + (packed.shape[-1] * PACK2,))
+
+
+def ternary_majority(packed: jax.Array) -> jax.Array:
+    """(M, w) packed ternary votes -> (w,) packed ternary majority.
+
+    Field-sliced: sum the sign-extended symbols across M workers; the
+    majority is the sign of the sum — abstentions abstain and exact ties
+    decode to 0, matching the integer-count tie convention."""
+    counts = jnp.sum(unpack_ternary(packed, jnp.int32), axis=0)
+    return pack_ternary(jnp.sign(counts).astype(jnp.int8))

@@ -27,8 +27,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ByzantineConfig, MomentumMode, OptimizerConfig
+from repro.core import codecs as codecs_mod
 from repro.core import sign_compress as sc
-from repro.core.majority_vote import num_voters, tree_mean, tree_vote
+from repro.core.majority_vote import (num_voters, tree_mean, tree_vote,
+                                      tree_vote_codec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,17 +100,37 @@ def _vote_margin(local: Dict, axes: Sequence[str],
 def make_sign_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
                         byz: Optional[ByzantineConfig] = None,
                         voted_leaves: Sequence[str] = (),
-                        diagnostics: bool = False) -> Optimizer:
+                        diagnostics: bool = False,
+                        n_vote_replicas: int = 1) -> Optimizer:
     """SIGNUM/signSGD with majority vote.
 
     `axes`: manual mesh axes the vote runs over.
     `voted_leaves`: param names whose gradients arrive pre-voted via the
     fused ZeRO backward (Mode B only).
+    `n_vote_replicas`: static voter count (sizes the server-stateful
+    codecs' decode memory; 1 in the single-process degenerate case).
+
+    The wire is codec-parametric (DESIGN.md §8): `cfg.resolved_codec`
+    selects what goes on it. Worker-side codec memory (the EF residual)
+    lives under ``state["error"]`` — per-worker under Mode A, so it
+    refits across elastic rescale like the momentum (§6); server-side
+    decode memory (the weighted vote's reliability estimates) lives under
+    ``state["codec"]``, replicated.
     """
     beta = cfg.momentum
     mode = cfg.momentum_mode
     mom_dtype = jnp.dtype(cfg.momentum_dtype)
-    ef = cfg.error_feedback
+    codec = codecs_mod.get_codec(cfg.resolved_codec)
+    ef = codec.worker_state
+    if ef and mode != MomentumMode.PER_WORKER:
+        # Mode B votes on raw gradient signs and keeps momentum on the
+        # vote — there is no per-worker encode input for a residual to
+        # fold into. Rejecting the combination beats silently training
+        # as sign1bit with a dead momentum-sized error tree.
+        raise ValueError(
+            f"codec {codec.name!r} carries a per-worker EF residual and "
+            "requires momentum_mode=per_worker (Mode A); Mode B has no "
+            "worker-side encode input (DESIGN.md §3/§8)")
 
     def init(params):
         state = {"count": jnp.zeros((), jnp.int32)}
@@ -118,11 +140,14 @@ def make_sign_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
         if ef:
             state["error"] = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, mom_dtype), params)
+        if codec.server_state:
+            state["codec"] = codec.init_server_state(n_vote_replicas)
         return state
 
     def update(grads, state, params, step):
         eta = lr_at(cfg, step)
         diag = {}
+        cstate = state.get("codec")
         if mode == MomentumMode.PER_WORKER:
             # --- Algorithm 1 verbatim ---
             if beta > 0:
@@ -132,23 +157,30 @@ def make_sign_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
                 state = {**state, "momentum": v}
             else:
                 v = grads
-            if ef:
-                v = jax.tree.map(lambda e, t: e + t, state["error"], v)
-            votes = tree_vote(v, cfg.vote_strategy, axes, byz, step)
-            if ef:
-                scale = jax.tree.map(
-                    lambda t: jnp.mean(jnp.abs(t)), v)
-                state = {**state, "error": jax.tree.map(
-                    lambda t, s, vt: t - s * vt.astype(mom_dtype),
-                    v, scale, votes)}
+            if ef:   # codec encode: fold the residual into the vote input
+                v = codecs_mod.tree_encode(codec, v, state["error"])
+            votes, new_cstate = tree_vote_codec(
+                v, cfg.vote_strategy, axes, byz, step,
+                codec=codec.name, server_state=cstate)
+            if ef:   # codec feedback: residual vs the APPLIED vote
+                state = {**state, "error": codecs_mod.tree_feedback(
+                    codec, v, votes, state["error"])}
+            if codec.server_state:
+                state = {**state, "codec": new_cstate}
             if diagnostics:
                 diag["vote_agreement"] = _agreement(v, votes)
                 diag["vote_margin"] = _vote_margin(v, axes, byz, step)
         else:
             # --- Mode B: vote on sign(g), momentum on the vote ---
             pre, raw = _split(grads, voted_leaves)
-            raw_votes = (tree_vote(raw, cfg.vote_strategy, axes, byz, step)
-                         if raw else {})
+            if raw:
+                raw_votes, new_cstate = tree_vote_codec(
+                    raw, cfg.vote_strategy, axes, byz, step,
+                    codec=codec.name, server_state=cstate)
+                if codec.server_state:
+                    state = {**state, "codec": new_cstate}
+            else:
+                raw_votes = {}
             votes = {**pre, **raw_votes}
             if diagnostics:
                 if raw:
@@ -244,8 +276,10 @@ def make_dense_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
 def build_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
                     byz: Optional[ByzantineConfig] = None,
                     fused_leaves: Sequence[str] = (),
-                    diagnostics: bool = False) -> Optimizer:
+                    diagnostics: bool = False,
+                    n_vote_replicas: int = 1) -> Optimizer:
     if cfg.kind in ("signum_vote", "signsgd_vote"):
         return make_sign_optimizer(cfg, axes, byz, voted_leaves=fused_leaves,
-                                   diagnostics=diagnostics)
+                                   diagnostics=diagnostics,
+                                   n_vote_replicas=n_vote_replicas)
     return make_dense_optimizer(cfg, axes, mean_leaves=fused_leaves)

@@ -323,23 +323,41 @@ STRATEGIES: Dict[VoteStrategy, VoteStrategyImpl] = {
 # ---------------------------------------------------------------------------
 
 
-def select_strategy(n_params: int, data_size: int,
-                    pod_size: int = 1) -> VoteStrategy:
+def select_strategy(n_params: int, data_size: int, pod_size: int = 1,
+                    codec: str = "sign1bit") -> VoteStrategy:
     """Cheapest concrete strategy under the alpha-beta comm model for this
-    mesh shape and parameter count. Deterministic and static (compile-time);
-    single-replica meshes degenerate to PSUM_INT8 (no wire traffic at all).
+    mesh shape, parameter count and codec. Deterministic and static
+    (compile-time); single-replica meshes degenerate to PSUM_INT8 (no wire
+    traffic at all). Codec-aware (DESIGN.md §8): candidates are the
+    codec's supported transports and the gathered exchange is priced at
+    the codec's symbol width (2 bits/param for ``ternary2bit``), so AUTO
+    under a wider codec tips toward the count wires earlier.
     """
+    from repro.core import codecs as codecs_mod
+    c = codecs_mod.get_codec(codec)
+    candidates = c.supported_strategies
     if data_size * pod_size <= 1:
-        return VoteStrategy.PSUM_INT8
-    times = {k: s.estimated_time(n_params, data_size, pod_size)
-             for k, s in STRATEGIES.items()}
+        return (VoteStrategy.PSUM_INT8
+                if VoteStrategy.PSUM_INT8 in candidates else candidates[0])
+    times = {}
+    for k in candidates:
+        s = STRATEGIES[k]
+        b = s.ring_bytes(n_params, data_size, pod_size)
+        # the gathered exchange is linear in the symbol width; the count
+        # wires carry int8 counts whatever the codec symbols were
+        scale = (c.bits_per_param / s.wire_bits_per_param
+                 if k == VoteStrategy.ALLGATHER_1BIT else 1.0)
+        times[k] = comm_model.collective_time(
+            b["ici"] * scale, b["dci"] * scale,
+            n_collectives=int(b["n_collectives"])).time_s
     return min(times, key=times.get)
 
 
 def resolve_strategy(strategy: VoteStrategy, n_params: int,
-                     data_size: int, pod_size: int = 1) -> VoteStrategy:
+                     data_size: int, pod_size: int = 1,
+                     codec: str = "sign1bit") -> VoteStrategy:
     if strategy == VoteStrategy.AUTO:
-        return select_strategy(n_params, data_size, pod_size)
+        return select_strategy(n_params, data_size, pod_size, codec)
     return strategy
 
 
@@ -361,25 +379,89 @@ class VoteEngine:
     `salt` namespaces the adversary PRNG stream (the Scenario Lab folds a
     scenario-id hash in here — DESIGN.md §7); pass `step` to the vote
     entry points so stochastic adversaries redraw each step.
+    `codec` selects the gradient codec (DESIGN.md §8): what the workers
+    encode onto the wire and how the tally decodes it. The default
+    ``sign1bit`` is the paper's raw-sign majority and keeps every legacy
+    entry point bit-identical; stateful codecs (``weighted_vote``) thread
+    their server state through the ``*_codec`` entry points.
     """
 
     strategy: VoteStrategy
     axes: Tuple[str, ...] = ()
     byz: Optional[ByzantineConfig] = None
     salt: int = 0
+    codec: str = "sign1bit"
+
+    def _codec(self):
+        from repro.core import codecs as codecs_mod
+        return codecs_mod.get_codec(self.codec)
 
     def _resolved(self, n_params: int) -> VoteStrategyImpl:
         data = compat.axis_size("data") if "data" in self.axes else 1
         pod = compat.axis_size("pod") if "pod" in self.axes else 1
-        return STRATEGIES[resolve_strategy(self.strategy, n_params, data, pod)]
+        return STRATEGIES[resolve_strategy(self.strategy, n_params, data,
+                                           pod, codec=self.codec)]
 
     # ---- voting ----
 
     def vote_signs(self, signs: jax.Array) -> jax.Array:
-        """Replica-local int8 signs (..., n) -> int8 majority (..., n)."""
+        """Replica-local int8 signs (..., n) -> int8 majority (..., n).
+
+        Stateless path: codecs with server state must go through
+        :meth:`vote_signs_codec` (this raises if one is configured)."""
         if not self.axes:
             return signs
+        if self.codec != "sign1bit":
+            vote, _ = self.vote_signs_codec(signs)
+            return vote
         return self._resolved(signs.size).vote(signs, self.axes)
+
+    def vote_signs_codec(self, signs: jax.Array, server_state=None):
+        """Codec-aware vote: int8 signs -> (int8 majority, new server
+        state). For stateless codecs the state passes through unchanged
+        (``{}`` when none was given)."""
+        c = self._codec()
+        state = server_state if server_state is not None else {}
+        if not self.axes:
+            return signs, state
+        strat = self._resolved(signs.size)
+        c.validate_strategy(strat.kind)
+        if c.name == "ternary2bit" \
+                and strat.kind == VoteStrategy.ALLGATHER_1BIT:
+            from repro.core.codecs.ternary import TERNARY_WIRE
+            return TERNARY_WIRE.vote(signs, self.axes), state
+        if c.server_state:
+            if not state:
+                raise ValueError(
+                    f"codec {c.name!r} needs its server state threaded "
+                    "through vote_signs_codec (init_server_state)")
+            from repro.core.codecs import weighted
+            impl = STRATEGIES[VoteStrategy.ALLGATHER_1BIT]
+            m = num_voters(self.axes)
+            n = signs.shape[-1]
+            arrived = impl.exchange(impl.pack(signs, m), self.axes)
+            # crop the bit-pack padding lanes BEFORE decoding: padding
+            # always agrees with the vote, so counting it would dilute
+            # the flip-rate observations by n/32w
+            stacked = sc.unpack_signs(arrived, jnp.int8)[..., :n]
+            vote, new_ema = weighted.decode_stacked(stacked,
+                                                    state["flip_ema"])
+            return vote, {**state, "flip_ema": new_ema}
+        return strat.vote(signs, self.axes), state
+
+    def vote_codec(self, values: jax.Array,
+                   step: Optional[jax.Array] = None, server_state=None):
+        """Codec-aware per-leaf entry point: replica-local real tensor ->
+        (majority in the input dtype, new server state). Mirrors ``vote``
+        — sign extraction, then the compiled adversary, then the codec
+        wire — so failure drills exercise codecs on the production path."""
+        shape = values.shape
+        s = sc.sign_ternary(values if values.ndim else values.reshape(1))
+        if self.byz is not None and self.axes:
+            s = byzantine.apply_adversary(s, self.byz, self.axes,
+                                          step=step, salt=self.salt)
+        vote, new_state = self.vote_signs_codec(s, server_state)
+        return vote.reshape(shape).astype(values.dtype), new_state
 
     def vote(self, values: jax.Array,
              step: Optional[jax.Array] = None) -> jax.Array:
@@ -406,6 +488,59 @@ class VoteEngine:
             eng = self
         return jax.tree.map(lambda leaf: eng.vote(leaf, step), tree)
 
+    def vote_tree_codec(self, tree, step: Optional[jax.Array] = None,
+                        server_state=None):
+        """Codec-aware tree vote: (±1 tree in leaf dtypes, new server
+        state). AUTO resolves once per tree (codec-aware). Server-stateful
+        codecs decode every leaf under this step's weights and fold ONE
+        aggregate reliability update across the whole tree — the per-step
+        server observation is the worker's full transmission, not one
+        leaf."""
+        c = self._codec()
+        if self.strategy == VoteStrategy.AUTO and self.axes:
+            total = sum(l.size for l in jax.tree.leaves(tree))
+            data = compat.axis_size("data") if "data" in self.axes else 1
+            pod = compat.axis_size("pod") if "pod" in self.axes else 1
+            eng = dataclasses.replace(
+                self, strategy=select_strategy(total, data, pod,
+                                               codec=self.codec))
+        else:
+            eng = self
+        state = server_state if server_state is not None else {}
+        if not c.server_state or not self.axes:
+            votes = jax.tree.map(
+                lambda leaf: eng.vote_codec(leaf, step)[0], tree)
+            return votes, state
+        # weighted decode with weights FIXED for the step, one EMA update
+        # (same validation as the per-leaf entry point: no silent
+        # transport substitution when the configured wire can't carry
+        # the codec)
+        c.validate_strategy(eng.strategy)
+        from repro.core.codecs import weighted
+        impl = STRATEGIES[VoteStrategy.ALLGATHER_1BIT]
+        m = num_voters(self.axes)
+        w = weighted.reliability_weights(state["flip_ema"])
+        leaves, treedef = jax.tree.flatten(tree)
+        votes, mismatch, total_n = [], jnp.zeros_like(w), 0
+        for leaf in leaves:
+            shape = leaf.shape
+            s = sc.sign_ternary(leaf if leaf.ndim else leaf.reshape(1))
+            if self.byz is not None:
+                s = byzantine.apply_adversary(s, self.byz, self.axes,
+                                              step=step, salt=self.salt)
+            n = s.shape[-1]
+            arrived = impl.exchange(impl.pack(s, m), self.axes)
+            # crop padding lanes before decoding (see vote_signs_codec)
+            stacked = sc.unpack_signs(arrived, jnp.int8)[..., :n]
+            vote, mis = weighted.decode_leaf_fixed(stacked, w)
+            mismatch = mismatch + mis
+            total_n += stacked.size // stacked.shape[0]
+            votes.append(vote.reshape(shape).astype(leaf.dtype))
+        new_ema = ((1.0 - weighted.RHO) * state["flip_ema"]
+                   + weighted.RHO * mismatch / total_n)
+        return (jax.tree.unflatten(treedef, votes),
+                {**state, "flip_ema": new_ema})
+
     def vote_stacked(self, stacked: jax.Array,
                      use_kernels: bool = True) -> jax.Array:
         """Host-local simulation path: (M, n) real values from M simulated
@@ -426,12 +561,15 @@ class VoteEngine:
     def comm_bytes(self, n_params: int, data_size: int, pod_size: int = 1,
                    grad_bytes: int = 2) -> Dict[str, float]:
         """Analytic per-chip collective bytes for one vote vs a dense
-        all-reduce of the same gradient (ring terms)."""
+        all-reduce of the same gradient (ring terms). Codec-aware: the
+        gathered exchange scales with the codec's symbol width."""
         strat = STRATEGIES[resolve_strategy(
-            self.strategy, n_params, data_size, pod_size)]
+            self.strategy, n_params, data_size, pod_size, codec=self.codec)]
         d = float(n_params)
         m = data_size * pod_size
         dense = 2 * d * grad_bytes * (m - 1) / m        # ring all-reduce
         vote = strat.ring_bytes(n_params, data_size, pod_size)["total"]
+        if strat.kind == VoteStrategy.ALLGATHER_1BIT:
+            vote *= self._codec().bits_per_param / strat.wire_bits_per_param
         return {"dense_allreduce": dense, "vote": vote,
                 "ratio": dense / vote if vote else float("inf")}

@@ -85,6 +85,21 @@ def vote_with_failures(engine, signs: jax.Array,
     return engine.vote(signs, step)
 
 
+def codec_vote_with_failures(engine, signs: jax.Array,
+                             prev_signs: Optional[jax.Array] = None,
+                             n_stale: int = 0, step=None,
+                             server_state=None):
+    """Codec-aware :func:`vote_with_failures`: same failure composition
+    (stale substitution, then the engine's compiled adversary, then the
+    wire), decoded through the engine's gradient codec (DESIGN.md §8).
+    Returns ``(vote, new_server_state)`` so stateful decoders (the
+    weighted vote's reliability estimates) thread through the drill."""
+    if n_stale and prev_signs is not None:
+        mask = straggler_mask_for(engine.axes, n_stale, like=signs)
+        signs = simulate_stragglers(signs, prev_signs, mask)
+    return engine.vote_codec(signs, step, server_state)
+
+
 # ---------------------------------------------------------------------------
 # elastic rescale
 # ---------------------------------------------------------------------------

@@ -13,10 +13,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import (bitpack as _bp, fused_vote as _fv,
-                           signum_update as _su, vote as _vt)
+                           signum_update as _su, ternary_pack as _tp,
+                           vote as _vt)
 
 PACK = 32
+PACK2 = 16
 TILE = 8 * 128 * PACK  # elements per (ROWS, WORDS*32) block
+TILE2 = 8 * 128 * PACK2  # elements per (ROWS, WORDS*16) ternary block
 
 
 def _interpret() -> bool:
@@ -69,6 +72,35 @@ def majority(packed: jax.Array) -> jax.Array:
     if rem:
         packed = jnp.pad(packed, ((0, 0), (0, rem)))
     return _vt.majority_packed(packed, interpret=_interpret())[:w]
+
+
+def ternary_pack(s: jax.Array) -> jax.Array:
+    """Any-shape ternary sign array -> (ceil(n/16),) uint32 of packed 2-bit
+    symbols (padding fields are 0 = abstain)."""
+    flat = s.reshape(-1).astype(jnp.int32)
+    n = flat.shape[0]
+    rem = (-n) % TILE2
+    if rem:
+        flat = jnp.pad(flat, (0, rem))
+    packed = _tp.ternary_pack_2d(flat.reshape(-1, 128 * PACK2),
+                                 interpret=_interpret())
+    return packed.reshape(-1)[: -(-n // PACK2)]
+
+
+def ternary_unpack(packed: jax.Array, n: int, dtype=jnp.int8) -> jax.Array:
+    """(w,) uint32 -> (n,) {-1,0,+1} `dtype` (first n of 16*w)."""
+    from repro.core import sign_compress as sc
+    return sc.unpack_ternary(packed, dtype)[:n]
+
+
+def ternary_majority(packed: jax.Array) -> jax.Array:
+    """(M, w) uint32 packed ternary -> (w,) packed ternary majority
+    (abstentions abstain, ties -> 0)."""
+    m, w = packed.shape
+    rem = (-w) % _tp.WBLOCK
+    if rem:
+        packed = jnp.pad(packed, ((0, 0), (0, rem)))
+    return _tp.ternary_tally_packed(packed, interpret=_interpret())[:w]
 
 
 def momentum_sign_pack(g: jax.Array, m: jax.Array, beta: float

@@ -34,6 +34,23 @@ def fused_majority(x: jax.Array) -> jax.Array:
     return sc.packed_majority(sc.pack_signs(x))
 
 
+def ternary_pack(s: jax.Array) -> jax.Array:
+    """(rows, 16*w) int in {-1,0,+1} -> (rows, w) uint32; 2-bit fields,
+    +1 -> 0b01, -1 -> 0b11, abstain -> 0b00 (codec ``ternary2bit``)."""
+    return sc.pack_ternary(s.astype(jnp.int8))
+
+
+def ternary_unpack(packed: jax.Array, dtype=jnp.int8) -> jax.Array:
+    """(rows, w) uint32 -> (rows, 16*w) of {-1,0,+1} in `dtype`."""
+    return sc.unpack_ternary(packed, dtype)
+
+
+def ternary_majority(packed: jax.Array) -> jax.Array:
+    """(M, w) packed ternary -> (w,) packed ternary majority (sign of the
+    symbol sum: abstentions abstain, ties -> 0)."""
+    return sc.ternary_majority(packed)
+
+
 def momentum_sign_pack(g: jax.Array, m: jax.Array, beta: float
                        ) -> tuple[jax.Array, jax.Array]:
     """SIGNUM worker-side hot loop: m' = beta*m + (1-beta)*g;

@@ -13,11 +13,12 @@ from repro.sim.scenario import (AdversarySpec, ElasticEvent, ScenarioSpec,
                                 preset_scenarios, scenario_salt)
 from repro.sim.runner import (BACKENDS, ScenarioRunner, ScenarioTrace,
                               StepTrace, run_scenarios)
-from repro.sim.virtual_mesh import VirtualVoteEngine, virtual_vote
+from repro.sim.virtual_mesh import (VirtualVoteEngine, virtual_vote,
+                                    virtual_vote_codec)
 
 __all__ = [
     "AdversarySpec", "BACKENDS", "ElasticEvent", "ScenarioRunner",
     "ScenarioSpec", "ScenarioTrace", "StepTrace", "VirtualVoteEngine",
     "expand_grid", "fig4_grid", "load_scenarios", "preset_scenarios",
-    "run_scenarios", "scenario_salt", "virtual_vote",
+    "run_scenarios", "scenario_salt", "virtual_vote", "virtual_vote_codec",
 ]

@@ -38,12 +38,15 @@ import numpy as np
 from repro import compat
 from repro.checkpoint.checkpoint import refit_leading_axis
 from repro.configs.base import VoteStrategy
+from repro.core import codecs as codecs_mod
 from repro.core import sign_compress as sc
 from repro.core.vote_engine import STRATEGIES, VoteEngine
-from repro.distributed.fault_tolerance import (count_for_fraction,
+from repro.distributed.fault_tolerance import (codec_vote_with_failures,
+                                               count_for_fraction,
                                                vote_with_failures)
 from repro.sim.scenario import ScenarioSpec
-from repro.sim.virtual_mesh import VirtualVoteEngine, virtual_vote
+from repro.sim.virtual_mesh import (VirtualVoteEngine, virtual_vote,
+                                    virtual_vote_codec)
 
 BACKENDS = ("virtual", "mesh")
 
@@ -77,15 +80,23 @@ class ScenarioTrace:
 
     def summary(self) -> Dict[str, Any]:
         impl = STRATEGIES[self.spec.strategy]
+        codec = codecs_mod.get_codec(self.spec.codec)
         d = self.spec.dim
         # price the exchange at each step's ACTUAL voter count (elastic
         # events change it mid-run); payload bytes/replica are
-        # m-independent for every strategy (bits/param is fixed)
-        est = float(np.mean([impl.estimated_time(d, s.n_workers)
-                             for s in self.steps]))
+        # m-independent for every strategy (bits/param is fixed). The
+        # gathered exchange scales with the codec's symbol width (§8).
+        wire_scale = (codec.bits_per_param / impl.wire_bits_per_param
+                      if self.spec.strategy == VoteStrategy.ALLGATHER_1BIT
+                      else 1.0)
+        est = wire_scale * float(
+            np.mean([impl.estimated_time(d, s.n_workers)
+                     for s in self.steps]))
         return {
             "scenario": self.spec.name,
             "strategy": self.spec.strategy.value,
+            "codec": self.spec.codec,
+            "bits_per_param": codec.wire_bits(self.spec.strategy),
             "backend": self.backend,
             "tie_policy": self.spec.tie_policy,
             "first_loss": self.steps[0].loss,
@@ -96,8 +107,8 @@ class ScenarioTrace:
                 np.mean([s.flip_fraction for s in self.steps])),
             "max_flip_fraction": float(
                 np.max([s.flip_fraction for s in self.steps])),
-            "wire_bytes_per_replica": impl.payload_bytes(
-                d, self.spec.n_workers),
+            "wire_bytes_per_replica": d * codec.wire_bits(
+                self.spec.strategy) / 8.0,
             "est_exchange_time_s": est,
             "digest": self.digest,
         }
@@ -173,22 +184,33 @@ class ScenarioRunner:
 
     def _segment(self, m: int):
         spec = self.spec
+        codec = codecs_mod.get_codec(spec.codec)
         byz_cfg = spec.adversary.byz_config(m, spec.seed)
         byz = byz_cfg if byz_cfg.mode != "none" else None
         n_stale = count_for_fraction(spec.straggler_fraction, m)
-        veng = VirtualVoteEngine(spec.strategy, byz, spec.salt)
+        veng = VirtualVoteEngine(spec.strategy, byz, spec.salt,
+                                 codec=spec.codec)
         beta = spec.momentum
+        has_ef = codec.worker_state
 
         @jax.jit
-        def prepare(x, v, prev, noise, step):
+        def prepare(x, v, err, prev, cstate, noise, step):
             g = x[None, :] + spec.noise_scale * noise
             v2 = beta * v + (1.0 - beta) * g if beta > 0 else g
-            fresh = sc.sign_ternary(v2)
-            eff = veng.effective_signs(v2, prev, n_stale, step)
-            oracle = virtual_vote(fresh, spec.strategy)
+            # codec encode: fold the EF residual into the vote input (§8);
+            # t == v2 for residual-free codecs, so the legacy path is
+            # bit-identical
+            t = err + v2 if has_ef else v2
+            fresh = sc.sign_ternary(t)
+            eff = veng.effective_signs(t, prev, n_stale, step)
+            # honest-majority oracle through the SAME codec decode; state
+            # is read-only here — the oracle must not advance the
+            # reliability EMA
+            oracle, _ = virtual_vote_codec(fresh, spec.strategy,
+                                           spec.codec, cstate)
             counts = jnp.sum(eff.astype(jnp.int32), axis=0)
             margin = jnp.mean(jnp.abs(counts).astype(jnp.float32)) / m
-            return v2, fresh, eff, oracle, margin
+            return v2, t, fresh, eff, oracle, margin
 
         @jax.jit
         def finish(x, vote, oracle):
@@ -197,17 +219,27 @@ class ScenarioRunner:
             loss = 0.5 * jnp.mean(x2 * x2)
             return x2, flip, loss
 
+        @jax.jit
+        def ef_feedback(t, vote):
+            # per-worker residual vs the APPLIED vote (codec feedback_leaf
+            # semantics, vmapped over the stacked voter dim)
+            scale = jnp.mean(jnp.abs(t), axis=1, keepdims=True)
+            return t - scale * vote[None, :].astype(t.dtype)
+
         if self.backend == "mesh":
             mesh_vote = self._mesh_vote_fn(m, byz, n_stale)
         else:
             mesh_vote = None
-        return prepare, finish, mesh_vote, byz_cfg, n_stale
+        return prepare, finish, ef_feedback, mesh_vote, byz_cfg, n_stale
 
     def _mesh_vote_fn(self, m: int, byz, n_stale: int):
         """jit(shard_map(vote_with_failures)) over an M-wide 'data' axis —
-        the production wire path on real mesh replicas."""
+        the production wire path on real mesh replicas. Codec-parametric:
+        non-default codecs route through ``codec_vote_with_failures``,
+        server-stateful ones thread their replicated decode memory."""
         from jax.sharding import Mesh, PartitionSpec as P
         spec = self.spec
+        codec = codecs_mod.get_codec(spec.codec)
         devs = np.array(jax.devices()[:m])
         if self.mesh_style == "data_model":
             mesh = Mesh(devs.reshape(m, 1), ("data", "model"))
@@ -216,7 +248,32 @@ class ScenarioRunner:
             mesh = Mesh(devs, ("data",))
             manual = {"data"}
         engine = VoteEngine(strategy=spec.strategy, axes=("data",),
-                            byz=byz, salt=spec.salt)
+                            byz=byz, salt=spec.salt, codec=spec.codec)
+
+        if codec.server_state:
+            def f_state(vals, prev, step, cstate):
+                out, new_state = codec_vote_with_failures(
+                    engine, vals[0], prev[0], n_stale=n_stale, step=step,
+                    server_state=cstate)
+                return out[None], new_state
+
+            sh = compat.shard_map(
+                f_state, mesh=mesh,
+                in_specs=(P("data"), P("data"), P(), P()),
+                out_specs=(P("data"), P()), axis_names=manual,
+                check_vma=False)
+            return jax.jit(sh)
+
+        if spec.codec != "sign1bit":
+            def f_codec(vals, prev, step):
+                out, _ = codec_vote_with_failures(
+                    engine, vals[0], prev[0], n_stale=n_stale, step=step)
+                return out[None]
+
+            sh = compat.shard_map(
+                f_codec, mesh=mesh, in_specs=(P("data"), P("data"), P()),
+                out_specs=P("data"), axis_names=manual, check_vma=False)
+            return jax.jit(sh)
 
         def f(vals, prev, step):
             out = vote_with_failures(engine, vals[0], prev[0],
@@ -232,44 +289,67 @@ class ScenarioRunner:
 
     def run(self) -> ScenarioTrace:
         spec = self.spec
+        codec = codecs_mod.get_codec(spec.codec)
         x = _init_x(spec)
         m = spec.workers_at(0)
         v = jnp.zeros((m, spec.dim), jnp.float32)        # per-worker momentum
+        # codec worker state: the EF residual, stacked like the momentum
+        err = jnp.zeros((m, spec.dim), jnp.float32)
+        # codec server state: replicated decode memory (reliability EMA)
+        cstate = (codec.init_server_state(m) if codec.server_state else {})
         # last step's locally COMPUTED signs (pre-stale, pre-adversary):
         # that is what a straggler re-submits; failures then apply to the
         # substituted vector (vote_with_failures order)
         prev = jnp.zeros((m, spec.dim), jnp.int8)
-        prepare, finish, mesh_vote, byz_cfg, n_stale = self._segment(m)
+        prepare, finish, ef_feedback, mesh_vote, byz_cfg, n_stale = \
+            self._segment(m)
         digest = hashlib.sha256()
         steps: List[StepTrace] = []
         for step in range(spec.n_steps):
             m_now = spec.workers_at(step)
             if m_now != m:
-                # elastic rescale: per-worker state refits by the
-                # checkpoint rule (truncate / zero-pad axis 0, §6) —
-                # joiners start with zero momentum and an abstaining
-                # stale vector
+                # elastic rescale: per-worker state — momentum, EF
+                # residual, stale vector, reliability EMA — refits by the
+                # checkpoint rule (truncate / zero-pad axis 0, §6):
+                # joiners start with zero momentum, zero residual, an
+                # abstaining stale vector, and the uninformed-prior weight
                 v = jnp.asarray(refit_leading_axis(
                     np.asarray(v), (m_now, spec.dim)))
+                err = jnp.asarray(refit_leading_axis(
+                    np.asarray(err), (m_now, spec.dim)))
                 prev = jnp.asarray(refit_leading_axis(
                     np.asarray(prev), (m_now, spec.dim)))
+                cstate = {k: jnp.asarray(refit_leading_axis(
+                    np.asarray(a), (m_now,) + tuple(a.shape[1:])))
+                    for k, a in cstate.items()}
                 m = m_now
-                prepare, finish, mesh_vote, byz_cfg, n_stale = \
-                    self._segment(m)
+                prepare, finish, ef_feedback, mesh_vote, byz_cfg, \
+                    n_stale = self._segment(m)
             noise = _noise(spec, step, m)
             step_t = jnp.int32(step)
-            v, fresh, eff, oracle, margin = prepare(x, v, prev, noise,
-                                                    step_t)
+            v, t, fresh, eff, oracle, margin = prepare(x, v, err, prev,
+                                                       cstate, noise,
+                                                       step_t)
             if self.backend == "mesh":
                 # host round-trips keep every array uncommitted: jit
                 # outputs committed to one segment's mesh devices would
                 # conflict with the next segment's (smaller) mesh
-                vote = jnp.asarray(np.asarray(
-                    mesh_vote(np.asarray(v), np.asarray(prev),
-                              np.int32(step)))[0].astype(np.int8))
+                args = (np.asarray(t), np.asarray(prev), np.int32(step))
+                if codec.server_state:
+                    out, new_state = mesh_vote(
+                        *args, {k: np.asarray(a) for k, a in
+                                cstate.items()})
+                    cstate = {k: jnp.asarray(np.asarray(a))
+                              for k, a in new_state.items()}
+                else:
+                    out = mesh_vote(*args)
+                vote = jnp.asarray(np.asarray(out)[0].astype(np.int8))
             else:
-                vote = virtual_vote(eff, spec.strategy)
+                vote, cstate = virtual_vote_codec(eff, spec.strategy,
+                                                  spec.codec, cstate)
             x, flip, loss = finish(x, vote, oracle)
+            if codec.worker_state:
+                err = ef_feedback(t, vote)
             prev = fresh
             digest.update(np.asarray(vote).tobytes())
             steps.append(StepTrace(

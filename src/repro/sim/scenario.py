@@ -105,6 +105,7 @@ class ScenarioSpec:
     noise_scale: float = 1.0            # grad noise sigma (0 = deterministic)
     learning_rate: float = 0.05
     momentum: float = 0.9               # per-worker (Mode A) beta; 0 = signSGD
+    codec: str = "sign1bit"             # gradient codec (DESIGN.md §8)
 
     def __post_init__(self):
         if self.strategy == VoteStrategy.AUTO:
@@ -113,13 +114,15 @@ class ScenarioSpec:
         if self.tie_break not in TIE_POLICIES:
             raise ValueError(f"tie_break {self.tie_break!r} not in "
                              f"{TIE_POLICIES}")
-        from repro.core.vote_engine import STRATEGIES
-        ties = STRATEGIES[self.strategy].ties
+        from repro.core import codecs as codecs_mod
+        c = codecs_mod.get_codec(self.codec)   # raises on unknown codec
+        c.validate_strategy(self.strategy)
+        ties = c.ties(self.strategy)
         if self.tie_break != "auto" and self.tie_break != ties:
             raise ValueError(
-                f"strategy {self.strategy.value} resolves ties to "
-                f"{ties!r}; a {self.tie_break!r} tie policy would need a "
-                "different wire format (DESIGN.md §5)")
+                f"codec {self.codec!r} over {self.strategy.value} resolves "
+                f"ties to {ties!r}; a {self.tie_break!r} tie policy would "
+                "need a different wire format (DESIGN.md §5/§8)")
         if not 0.0 <= self.straggler_fraction <= 1.0:
             raise ValueError("straggler_fraction not in [0, 1]")
         if self.n_workers < 1 or self.n_steps < 1 or self.dim < 1:
@@ -136,9 +139,10 @@ class ScenarioSpec:
 
     @property
     def tie_policy(self) -> str:
-        """The resolved tie convention ("zero" or "plus_one")."""
-        from repro.core.vote_engine import STRATEGIES
-        return STRATEGIES[self.strategy].ties
+        """The resolved tie convention ("zero" or "plus_one") — the
+        codec's, which may override the wire strategy's (§8)."""
+        from repro.core import codecs as codecs_mod
+        return codecs_mod.get_codec(self.codec).ties(self.strategy)
 
     def workers_at(self, step: int) -> int:
         """Voter count in effect at `step` under the elastic schedule."""
@@ -202,33 +206,44 @@ def expand_grid(grid: Dict[str, Any],
 
     ``{"fractions": [...], "modes": [...], "strategies": [...],
     "base": {...}}`` -> one scenario per (fraction, mode, strategy) cell,
-    named ``<prefix>/<mode>/<strategy>/f<pct>``.
+    named ``<prefix>/<mode>/<strategy>/f<pct>``. An optional ``"codecs"``
+    list adds a codec axis (§8); its cells are named
+    ``<prefix>/<codec>/<mode>/<strategy>/f<pct>`` so the codec-less grid
+    keeps its historical names (and PRNG salts).
     """
     base = {**(defaults or {}), **grid.get("base", {})}
     prefix = grid.get("prefix", "grid")
+    codecs_axis = grid.get("codecs")
     out, seen = [], set()
-    for mode in grid["modes"]:
-        for strategy in grid["strategies"]:
-            for frac in grid["fractions"]:
-                # fraction 0 is the same honest configuration whatever the
-                # mode, so it collapses to ONE anchor cell per strategy —
-                # every mode's curve shares its origin (same name -> same
-                # PRNG salt -> same baseline trace). %g keeps distinct
-                # nonzero fractions distinct (a rounded-percent name would
-                # collide sub-percent cells and alias their PRNG streams).
-                eff_mode = mode if frac > 0 else "none"
-                name = f"{prefix}/{eff_mode}/{strategy}/f{frac:g}"
-                if name in seen:
-                    continue
-                seen.add(name)
-                out.append(ScenarioSpec.from_dict({
-                    **base,
-                    "name": name,
-                    "strategy": strategy,
-                    "adversary": {"mode": eff_mode,
-                                  "fraction": frac,
-                                  **grid.get("adversary_extra", {})},
-                }))
+    for codec in (codecs_axis or [None]):
+        for mode in grid["modes"]:
+            for strategy in grid["strategies"]:
+                for frac in grid["fractions"]:
+                    # fraction 0 is the same honest configuration whatever
+                    # the mode, so it collapses to ONE anchor cell per
+                    # (codec, strategy) — every mode's curve shares its
+                    # origin (same name -> same PRNG salt -> same baseline
+                    # trace). %g keeps distinct nonzero fractions distinct
+                    # (a rounded-percent name would collide sub-percent
+                    # cells and alias their PRNG streams).
+                    eff_mode = mode if frac > 0 else "none"
+                    cell = f"{eff_mode}/{strategy}/f{frac:g}"
+                    name = (f"{prefix}/{codec}/{cell}" if codec
+                            else f"{prefix}/{cell}")
+                    if name in seen:
+                        continue
+                    seen.add(name)
+                    doc = {
+                        **base,
+                        "name": name,
+                        "strategy": strategy,
+                        "adversary": {"mode": eff_mode,
+                                      "fraction": frac,
+                                      **grid.get("adversary_extra", {})},
+                    }
+                    if codec:
+                        doc["codec"] = codec
+                    out.append(ScenarioSpec.from_dict(doc))
     return out
 
 

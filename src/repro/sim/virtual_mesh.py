@@ -72,6 +72,47 @@ def virtual_vote(signs: jax.Array, strategy: VoteStrategy) -> jax.Array:
     raise ValueError(f"virtual mesh cannot realise {strategy!r}")
 
 
+@functools.partial(jax.jit, static_argnames=("strategy", "codec"))
+def virtual_vote_codec(signs: jax.Array, strategy: VoteStrategy,
+                       codec: str = "sign1bit", server_state=None):
+    """(M, n) stacked int8 signs -> ((n,) int8 majority, new server state)
+    through the codec's wire stages (DESIGN.md §8), exchange virtualised
+    exactly like :func:`virtual_vote`. Stateless codecs pass the state
+    through (``{}`` when none was given)."""
+    state = server_state if server_state is not None else {}
+    m, n = signs.shape
+
+    if codec in ("sign1bit", "ef_sign"):
+        # identical wire to the plain majority: only the encode input
+        # (caller-side) differs
+        return virtual_vote(signs, strategy), state
+
+    if codec == "ternary2bit":
+        if strategy == VoteStrategy.PSUM_INT8:
+            # ternary symbols ARE the counts psum already sums
+            return virtual_vote(signs, strategy), state
+        from repro.core.codecs.ternary import TERNARY_WIRE
+        wire = TERNARY_WIRE.pack(signs, m)       # (M, w) 2-bit packed
+        # the all-gather hands every replica the stacked wire — which is
+        # exactly what the virtual mesh already holds
+        return TERNARY_WIRE.unpack(TERNARY_WIRE.tally(wire, m), n,
+                                   jnp.int8), state
+
+    if codec == "weighted_vote":
+        from repro.core.codecs import weighted
+        impl = STRATEGIES[VoteStrategy.ALLGATHER_1BIT]
+        wire = impl.pack(signs, m)               # (M, w) 1-bit packed
+        # crop the padding lanes before decoding, exactly like the mesh
+        # tally: padding always agrees with the vote and would dilute
+        # the flip-rate observations
+        stacked = sc.unpack_signs(wire, jnp.int8)[:, :n]
+        vote, new_ema = weighted.decode_stacked(stacked,
+                                                state["flip_ema"])
+        return vote, {**state, "flip_ema": new_ema}
+
+    raise ValueError(f"virtual mesh cannot realise codec {codec!r}")
+
+
 @dataclasses.dataclass(frozen=True)
 class VirtualVoteEngine:
     """`core.vote_engine.VoteEngine` semantics on a stacked voter dim.
@@ -86,6 +127,7 @@ class VirtualVoteEngine:
     strategy: VoteStrategy
     byz: Optional[ByzantineConfig] = None
     salt: int = 0
+    codec: str = "sign1bit"
 
     def effective_signs(self, values: jax.Array,
                         prev_signs: Optional[jax.Array] = None,

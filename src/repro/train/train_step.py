@@ -104,6 +104,7 @@ class StepArtifacts:
     vote_axes: Tuple[str, ...]
     fused_leaves: Tuple[str, ...]
     vote_strategy: Optional[VoteStrategy] = None  # resolved (never AUTO)
+    codec: str = "sign1bit"            # resolved gradient codec (§8)
 
 
 # ---------------------------------------------------------------------------
@@ -125,13 +126,20 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     sizes = _mesh_axis_sizes(mesh) if mesh is not None else {}
     n_votes = int(np.prod([sizes.get(a, 1) for a in vote_axes])) if mesh else 1
 
-    # AUTO resolves here, once, against the comm cost model — mesh shape and
-    # param count are static, so the whole step compiles against one wire
-    # protocol and the dry-run records which one won.
+    # AUTO resolves here, once, against the comm cost model — mesh shape,
+    # param count and codec are static, so the whole step compiles against
+    # one wire protocol and the dry-run records which one won. The codec
+    # restricts the candidate set and prices the gathered exchange at its
+    # symbol width (DESIGN.md §8).
+    codec_name = opt_cfg.resolved_codec
     resolved = resolve_strategy(opt_cfg.vote_strategy, cfg.param_count(),
-                                sizes.get("data", 1), sizes.get("pod", 1))
+                                sizes.get("data", 1), sizes.get("pod", 1),
+                                codec=codec_name)
     if resolved != opt_cfg.vote_strategy:
         opt_cfg = dataclasses.replace(opt_cfg, vote_strategy=resolved)
+    if is_sign:
+        from repro.core import codecs as codecs_mod
+        codecs_mod.get_codec(codec_name).validate_strategy(resolved)
 
     specs = shd.param_specs(shapes, fsdp=tcfg.fsdp, mesh_shape=sizes or None)
     fused = tcfg.fsdp and mesh is not None
@@ -146,7 +154,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     # the same replicas must act adversarially on them.
     opt = build_optimizer(opt_cfg, vote_axes, byz=byz,
                           fused_leaves=fused_leaves,
-                          diagnostics=tcfg.diagnostics)
+                          diagnostics=tcfg.diagnostics,
+                          n_vote_replicas=n_votes)
 
     def loss_of(p, b):
         return M.loss_fn(cfg, p, b, hook=hook, remat=tcfg.remat)
@@ -228,7 +237,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
             step_fn=jax.jit(local_step), param_specs=specs,
             param_shard_specs={k: P() for k in specs}, opt_specs=None,
             batch_spec=None, n_vote_replicas=1, vote_axes=(),
-            fused_leaves=fused_leaves, vote_strategy=resolved)
+            fused_leaves=fused_leaves, vote_strategy=resolved,
+            codec=codec_name)
 
     manual = vote_axes
     p_manual = {k: _manual_only(s, manual) for k, s in specs.items()}
@@ -269,7 +279,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
         step_fn=step_fn, param_specs=specs, param_shard_specs=p_manual,
         opt_specs=opt_manual, batch_spec=batch_spec,
         n_vote_replicas=n_votes, vote_axes=vote_axes,
-        fused_leaves=fused_leaves, vote_strategy=resolved)
+        fused_leaves=fused_leaves, vote_strategy=resolved,
+        codec=codec_name)
 
 
 # ---------------------------------------------------------------------------
@@ -298,22 +309,30 @@ def abstract_state(cfg: ModelConfig, tcfg: TrainConfig, art: StepArtifacts,
 
     mom_dt = jnp.dtype(opt_cfg.momentum_dtype)
     opt_state: Dict[str, Any] = {"count": mk((), jnp.int32, P())}
+    is_sign = opt_cfg.kind in ("signum_vote", "signsgd_vote")
     needs_mom = (opt_cfg.momentum > 0
                  and opt_cfg.kind in ("signum_vote", "signsgd_vote", "sgdm",
                                       "adam"))
-    if opt_cfg.kind in ("signum_vote", "signsgd_vote") and needs_mom:
+
+    def momentum_like():
         if per_worker:
-            opt_state["momentum"] = {
-                k: mk((art.n_vote_replicas,) + v, mom_dt,
-                      P(art.vote_axes or None, *art.param_specs[k]))
+            return {k: mk((art.n_vote_replicas,) + v, mom_dt,
+                          P(art.vote_axes or None, *art.param_specs[k]))
+                    for k, v in shapes.items()}
+        return {k: mk(v, mom_dt, art.param_specs[k])
                 for k, v in shapes.items()}
-        else:
-            opt_state["momentum"] = {
-                k: mk(v, mom_dt, art.param_specs[k])
-                for k, v in shapes.items()}
-        if opt_cfg.error_feedback:
-            opt_state["error"] = dict(opt_state["momentum"])
-    elif opt_cfg.kind in ("sgdm", "adam"):
+
+    if is_sign and needs_mom:
+        opt_state["momentum"] = momentum_like()
+    if is_sign:
+        from repro.core import codecs as codecs_mod
+        codec = codecs_mod.get_codec(opt_cfg.resolved_codec)
+        if codec.worker_state:   # EF residual: momentum-shaped (§8)
+            opt_state["error"] = momentum_like()
+        if codec.server_state:   # decode memory: replicated (M,) vector
+            opt_state["codec"] = {
+                "flip_ema": mk((art.n_vote_replicas,), jnp.float32, P())}
+    if opt_cfg.kind in ("sgdm", "adam"):
         opt_state["m"] = {k: mk(v, jnp.float32, art.param_specs[k])
                           for k, v in shapes.items()}
         if opt_cfg.kind == "adam":

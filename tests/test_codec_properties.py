@@ -1,0 +1,110 @@
+"""Property-based tests (hypothesis) for the Gradient Codec subsystem:
+
+* ternary 2-bit pack/unpack roundtrip for arbitrary ternary patterns,
+* ternary majority == sign of the symbol sum (abstentions and exact ties
+  included) and the Pallas tally kernel bit-identical to the oracle,
+* EF reconstruction identity: after feedback, residual + scale·vote
+  rebuilds the encode input exactly (nothing is silently dropped),
+* weighted decode degenerates to the unweighted majority under any equal
+  reliability state, and is invariant to relabelling workers together
+  with their reliability estimates.
+
+``hypothesis`` is optional: without it this module skips (tier-1 covers
+the same invariants deterministically in tests/test_codecs.py).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; deterministic "
+    "equivalents live in test_codecs.py")
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import VoteStrategy
+from repro.core import codecs, sign_compress as sc
+from repro.core.codecs import weighted as wv
+from repro.kernels import ops
+from repro.sim import virtual_vote
+
+ternary_arrays = st.integers(1, 200).flatmap(
+    lambda n: st.lists(st.sampled_from([-1, 0, 1]), min_size=n, max_size=n))
+
+
+@given(ternary_arrays)
+@settings(max_examples=200, deadline=None)
+def test_ternary_pack_unpack_roundtrip(syms):
+    s = np.asarray(syms, np.int8)
+    padded, n = sc.pad_last(jnp.asarray(s), sc.PACK2)
+    back = np.asarray(sc.unpack_ternary(sc.pack_ternary(padded)))[:n]
+    np.testing.assert_array_equal(back, s)
+
+
+@given(st.integers(1, 16), st.integers(1, 80), st.randoms())
+@settings(max_examples=100, deadline=None)
+def test_ternary_majority_is_sign_of_symbol_sum(m, n, rnd):
+    s = np.array([[rnd.choice([-1, 0, 1]) for _ in range(n)]
+                  for _ in range(m)], np.int8)
+    pad = (-n) % sc.PACK2
+    packed = jnp.asarray(np.stack(
+        [np.asarray(sc.pack_ternary(jnp.asarray(np.pad(r, (0, pad)))))
+         for r in s]))
+    got = np.asarray(sc.unpack_ternary(sc.ternary_majority(packed)))[:n]
+    np.testing.assert_array_equal(got, np.sign(s.astype(np.int32).sum(0)))
+    # Pallas tally kernel == jnp oracle on the same stack
+    got_k = np.asarray(ops.ternary_majority(packed))
+    np.testing.assert_array_equal(
+        got_k, np.asarray(sc.ternary_majority(packed)))
+
+
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=64),
+       st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=64))
+@settings(max_examples=100, deadline=None)
+def test_ef_feedback_reconstruction_identity(vals, res):
+    """e' = t - scale*vote  =>  e' + scale*vote rebuilds t (up to one
+    rounding of the subtract-then-add): the residual accounts for what
+    the wire dropped."""
+    n = min(len(vals), len(res))
+    v = jnp.asarray(np.asarray(vals[:n], np.float32))
+    e = jnp.asarray(np.asarray(res[:n], np.float32))
+    c = codecs.get_codec("ef_sign")
+    t = c.encode_leaf(v, e)
+    vote = jnp.sign(t)
+    e2 = c.feedback_leaf(t, vote, e)
+    scale = float(jnp.mean(jnp.abs(t)))
+    np.testing.assert_allclose(np.asarray(e2 + scale * vote),
+                               np.asarray(t), rtol=1e-5,
+                               atol=2e-4 * max(scale, 1.0))
+
+
+@given(st.integers(2, 12), st.integers(1, 100),
+       st.floats(0.0, 0.45), st.randoms())
+@settings(max_examples=100, deadline=None)
+def test_weighted_equal_state_matches_unweighted_majority(m, n, prior, rnd):
+    s = np.array([[rnd.choice([-1, 1]) for _ in range(n)]
+                  for _ in range(m)], np.int8)
+    vote, _ = wv.decode_stacked(
+        jnp.asarray(s), jnp.full((m,), prior, jnp.float32))
+    want = np.asarray(virtual_vote(jnp.asarray(s),
+                                   VoteStrategy.ALLGATHER_1BIT))
+    np.testing.assert_array_equal(np.asarray(vote), want)
+
+
+@given(st.integers(2, 10), st.integers(1, 60), st.randoms())
+@settings(max_examples=100, deadline=None)
+def test_weighted_decode_ignores_coin_flip_worker(m, n, rnd):
+    """A worker at estimated flip rate EXACTLY 1/2 has log-odds weight
+    log(1) = 0: whatever it transmits, appending it cannot change the
+    decode (the Chair–Varshney rule prices a coin flip at zero
+    information)."""
+    s = np.array([[rnd.choice([-1, 1]) for _ in range(n)]
+                  for _ in range(m)], np.int8)
+    ema = np.asarray([rnd.uniform(0.1, 0.9) for _ in range(m)], np.float32)
+    v1, _ = wv.decode_stacked(jnp.asarray(s), jnp.asarray(ema))
+    noise_row = np.array([[rnd.choice([-1, 1]) for _ in range(n)]], np.int8)
+    v2, _ = wv.decode_stacked(
+        jnp.asarray(np.concatenate([s, noise_row])),
+        jnp.asarray(np.concatenate([ema, [0.5]]).astype(np.float32)))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))

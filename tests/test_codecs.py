@@ -1,0 +1,404 @@
+"""Gradient Codec subsystem acceptance tests (deterministic, tier-1;
+hypothesis twins live in test_codec_properties.py).
+
+Covers: the pack_signs shape guard (a ValueError, not an -O-erasable
+assert), the ternary 2-bit wire format (roundtrip, tie/abstain semantics,
+Pallas kernel vs jnp oracle), the codec registry and strategy validation,
+the sign1bit fixed point (codec API == pre-codec wire path, bit for bit),
+EF encode/feedback round-trips and accumulation, the weighted decode
+(equal weights == unweighted majority; learned weights decode through
+adversarial majorities; flip-rate estimates separate honest from
+adversarial), codec-aware AUTO selection, and codec state surviving the
+checkpoint elastic-refit rule beside the momentum.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import refit_leading_axis
+from repro.configs.base import OptimizerConfig, VoteStrategy
+from repro.core import codecs, sign_compress as sc
+from repro.core.codecs import weighted as wv
+from repro.core.vote_engine import select_strategy
+from repro.kernels import ops, ref
+from repro.sim import virtual_vote, virtual_vote_codec
+
+RNG = np.random.default_rng(7)
+STRATS = (VoteStrategy.PSUM_INT8, VoteStrategy.ALLGATHER_1BIT,
+          VoteStrategy.HIERARCHICAL)
+
+
+def _signs(m, n, ternary=True):
+    lo = -1 if ternary else 0
+    s = RNG.integers(lo, 2, size=(m, n)).astype(np.int8)
+    if not ternary:
+        s = np.where(s == 0, -1, 1).astype(np.int8)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# satellite: pack_signs shape guard (survives python -O)
+# ---------------------------------------------------------------------------
+
+
+def test_pack_signs_rejects_misaligned_shape_with_message():
+    with pytest.raises(ValueError, match=r"\(3, 33\)"):
+        sc.pack_signs(jnp.zeros((3, 33)))
+    # the sanctioned routes: 1-D pad_to_pack and N-D pad_last
+    padded, n = sc.pad_to_pack(jnp.ones((33,)))
+    assert n == 33 and sc.pack_signs(padded).shape == (2,)
+    padded, n = sc.pad_last(jnp.ones((3, 33)), sc.PACK)
+    assert n == 33 and sc.pack_signs(padded).shape == (3, 2)
+
+
+def test_pack_ternary_rejects_misaligned_shape_with_message():
+    with pytest.raises(ValueError, match=r"\(9,\)"):
+        sc.pack_ternary(jnp.zeros((9,), jnp.int8))
+
+
+def test_pack_conventions_disagree_exactly_on_zero():
+    """The 1-bit pack binarises (sign_binary: 0 -> +1); the 2-bit pack
+    keeps the ternary convention (0 -> abstain) — the two wire formats'
+    defining difference (DESIGN.md §5/§8)."""
+    x = jnp.asarray([1.0, -1.0, 0.0, -2.0] * 8)           # 32 values
+    b = sc.unpack_signs(sc.pack_signs(x))[: 4]
+    np.testing.assert_array_equal(np.asarray(b), [1, -1, 1, -1])
+    t = sc.unpack_ternary(sc.pack_ternary(sc.sign_ternary(x)[:32]))[:4]
+    np.testing.assert_array_equal(np.asarray(t), [1, -1, 0, -1])
+
+
+# ---------------------------------------------------------------------------
+# ternary 2-bit wire format
+# ---------------------------------------------------------------------------
+
+
+def test_ternary_roundtrip_deterministic():
+    s = _signs(5, 64)
+    back = np.asarray(sc.unpack_ternary(sc.pack_ternary(jnp.asarray(s))))
+    np.testing.assert_array_equal(back, s)
+
+
+def test_ternary_majority_ties_and_abstentions_yield_zero():
+    s = np.zeros((4, 16), np.int8)
+    s[:2, 0], s[2:, 0] = 1, -1          # exact tie -> 0
+    s[:, 1] = 0                          # unanimous abstention -> 0
+    s[:3, 2], s[3, 2] = 1, -1            # 3 v 1 -> +1
+    s[0, 3] = -1                         # single vote among abstainers -> -1
+    maj = np.asarray(sc.unpack_ternary(
+        sc.ternary_majority(sc.pack_ternary(jnp.asarray(s)))))
+    np.testing.assert_array_equal(maj[:4], [0, 0, 1, -1])
+
+
+@pytest.mark.parametrize("m,n", [(1, 16), (4, 100), (9, 5000)])
+def test_ternary_kernels_match_oracle(m, n):
+    """Pallas ternary pack + tally == the sign_compress jnp oracles."""
+    s = _signs(m, n)
+    flat = s[0]
+    got_p = np.asarray(ops.ternary_pack(jnp.asarray(flat)))
+    pad = (-n) % sc.PACK2
+    want_p = np.asarray(ref.ternary_pack(
+        jnp.asarray(np.pad(flat, (0, pad))[None]))[0])
+    np.testing.assert_array_equal(got_p, want_p)
+    packed = np.stack([np.asarray(sc.pack_ternary(jnp.asarray(
+        np.pad(r, (0, pad))))) for r in s])
+    got_m = np.asarray(ops.ternary_majority(jnp.asarray(packed)))
+    want_m = np.asarray(ref.ternary_majority(jnp.asarray(packed)))
+    np.testing.assert_array_equal(got_m, want_m)
+    # and the decoded majority is the sign of the symbol sum
+    dec = np.asarray(sc.unpack_ternary(jnp.asarray(want_m)))[:n]
+    np.testing.assert_array_equal(dec, np.sign(s.astype(np.int32).sum(0)))
+
+
+# ---------------------------------------------------------------------------
+# registry / config plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_registry_and_validation():
+    assert codecs.list_codecs() == ("ef_sign", "sign1bit", "ternary2bit",
+                                    "weighted_vote")
+    with pytest.raises(ValueError, match="unknown codec"):
+        codecs.get_codec("morse")
+    with pytest.raises(ValueError, match="cannot ride"):
+        codecs.get_codec("weighted_vote").validate_strategy(
+            VoteStrategy.PSUM_INT8)
+    with pytest.raises(ValueError, match="cannot ride"):
+        codecs.get_codec("ternary2bit").validate_strategy(
+            VoteStrategy.HIERARCHICAL)
+    # tie conventions: codec overrides the wire's where it carries abstain
+    assert codecs.get_codec("ternary2bit").ties(
+        VoteStrategy.ALLGATHER_1BIT) == "zero"
+    assert codecs.get_codec("weighted_vote").ties(
+        VoteStrategy.ALLGATHER_1BIT) == "plus_one"
+    assert codecs.get_codec("sign1bit").ties(
+        VoteStrategy.ALLGATHER_1BIT) == "plus_one"
+    assert codecs.get_codec("sign1bit").ties(
+        VoteStrategy.PSUM_INT8) == "zero"
+
+
+def test_resolved_codec_maps_legacy_error_feedback_flag():
+    assert OptimizerConfig().resolved_codec == "sign1bit"
+    assert OptimizerConfig(error_feedback=True).resolved_codec == "ef_sign"
+    assert OptimizerConfig(codec="ternary2bit").resolved_codec \
+        == "ternary2bit"
+    # redundant but consistent spelling
+    assert OptimizerConfig(codec="ef_sign",
+                           error_feedback=True).resolved_codec == "ef_sign"
+    # the legacy flag combined with a residual-free codec is a config
+    # error, never a silent drop of error feedback
+    with pytest.raises(ValueError, match="conflicts with codec"):
+        OptimizerConfig(codec="weighted_vote",
+                        error_feedback=True).resolved_codec
+
+
+def test_auto_selector_is_codec_aware():
+    n = 1 << 30
+    # sign1bit keeps the legacy selection exactly
+    assert select_strategy(n, 16) == select_strategy(n, 16, codec="sign1bit")
+    # weighted can only ride the gathered wire
+    assert select_strategy(n, 16, codec="weighted_vote") \
+        == VoteStrategy.ALLGATHER_1BIT
+    assert select_strategy(n, 1, codec="weighted_vote") \
+        == VoteStrategy.ALLGATHER_1BIT
+    # ternary never resolves to hierarchical (1-bit rebroadcast would
+    # destroy abstention), and its 2x gathered payload tips the balance
+    # to psum at bandwidth scale
+    for data in (2, 8, 16, 64):
+        s = select_strategy(n, data, codec="ternary2bit")
+        assert s in codecs.get_codec("ternary2bit").supported_strategies
+
+
+# ---------------------------------------------------------------------------
+# sign1bit is a fixed point of the refactor
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", STRATS)
+def test_sign1bit_codec_path_bit_identical_to_plain_vote(strategy):
+    signs = jnp.asarray(_signs(8, 130))
+    want = np.asarray(virtual_vote(signs, strategy))
+    got, state = virtual_vote_codec(signs, strategy, "sign1bit")
+    np.testing.assert_array_equal(np.asarray(got), want)
+    assert state == {}
+
+
+def test_ternary_over_psum_is_bit_identical_to_sign1bit():
+    """Ternary symbols ARE the counts psum sums: over that wire the codec
+    changes nothing, so the digests must agree bit for bit."""
+    signs = jnp.asarray(_signs(8, 100))
+    a, _ = virtual_vote_codec(signs, VoteStrategy.PSUM_INT8, "sign1bit")
+    b, _ = virtual_vote_codec(signs, VoteStrategy.PSUM_INT8, "ternary2bit")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ternary_allgather_keeps_abstention_the_1bit_wire_loses():
+    """The defining divergence: an abstaining coordinate stays 0 on the
+    2-bit wire but binarises to +1 on the 1-bit wire."""
+    signs = np.zeros((4, 32), np.int8)          # everyone abstains
+    one, _ = virtual_vote_codec(jnp.asarray(signs),
+                                VoteStrategy.ALLGATHER_1BIT, "sign1bit")
+    two, _ = virtual_vote_codec(jnp.asarray(signs),
+                                VoteStrategy.ALLGATHER_1BIT, "ternary2bit")
+    assert np.asarray(one).tolist() == [1] * 32
+    assert np.asarray(two).tolist() == [0] * 32
+
+
+# ---------------------------------------------------------------------------
+# EF codec
+# ---------------------------------------------------------------------------
+
+
+def test_ef_encode_feedback_roundtrip():
+    """feedback returns t - scale*vote, so encode(next) rebuilds exactly
+    t + v_next - scale*vote — the residual re-enters in full."""
+    c = codecs.get_codec("ef_sign")
+    v = jnp.asarray([0.1, -0.2, 0.3, -0.4])
+    e0 = c.init_state(v)
+    t = c.encode_leaf(v, e0)
+    np.testing.assert_allclose(np.asarray(t), np.asarray(v))
+    vote = jnp.sign(t)
+    e1 = c.feedback_leaf(t, vote, e0)
+    want = np.asarray(t) - np.mean(np.abs(np.asarray(t))) \
+        * np.sign(np.asarray(t))
+    np.testing.assert_allclose(np.asarray(e1), want, rtol=1e-6)
+    t2 = c.encode_leaf(v, e1)
+    np.testing.assert_allclose(np.asarray(t2), want + np.asarray(v),
+                               rtol=1e-6)
+
+
+def test_ef_memory_accumulates_suppressed_coordinate():
+    """A coordinate whose magnitude is far below the mean loses every
+    round to the scale — its residual grows until its sign still gets
+    through; with a vote that keeps disagreeing, the memory keeps
+    growing instead of being silently dropped (the EF guarantee)."""
+    c = codecs.get_codec("ef_sign")
+    v = jnp.asarray([1e-3, 1.0, -1.0, 1.0])
+    e = c.init_state(v)
+    hostile = jnp.asarray([-1.0, 1.0, -1.0, 1.0])   # vote against coord 0
+    mags = []
+    for _ in range(5):
+        t = c.encode_leaf(v, e)
+        e = c.feedback_leaf(t, hostile, e)
+        mags.append(float(e[0]))
+    assert all(b > a for a, b in zip(mags, mags[1:])), mags
+
+
+def test_ef_requires_mode_a():
+    """Mode B has no worker-side encode input for a residual to fold
+    into — requesting EF there is a config error, never a silent
+    sign1bit run with a dead error tree."""
+    from repro.configs.base import MomentumMode
+    from repro.core.signum import build_optimizer
+    cfg = OptimizerConfig(kind="signsgd_vote", codec="ef_sign",
+                          momentum_mode=MomentumMode.GLOBAL)
+    with pytest.raises(ValueError, match="per_worker"):
+        build_optimizer(cfg, axes=())
+
+
+def test_trainer_ef_state_matches_codec_math():
+    """The optimizer's "error" state is the codec's feedback output (the
+    legacy error_feedback flag routes through the codec layer)."""
+    from repro.core.signum import build_optimizer
+    cfg = OptimizerConfig(kind="signum_vote", momentum=0.0,
+                          learning_rate=0.1, codec="ef_sign")
+    opt = build_optimizer(cfg, axes=())
+    p = {"w": jnp.zeros((4,))}
+    state = opt.init(p)
+    assert "error" in state
+    g = {"w": jnp.asarray([0.1, -0.2, 0.3, -0.4])}
+    _, state, _ = opt.update(g, state, p, jnp.int32(0))
+    c = codecs.get_codec("ef_sign")
+    t = g["w"]
+    want = c.feedback_leaf(t, jnp.sign(t), None)
+    np.testing.assert_allclose(np.asarray(state["error"]["w"]),
+                               np.asarray(want), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# weighted codec
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_equal_state_is_unweighted_majority():
+    """With any equal flip_ema (the all-zero prior included) the weights
+    are equal and the decode == allgather_1bit's majority, bit for bit —
+    exact ties included (weighted sum 0 -> +1)."""
+    signs = _signs(8, 200, ternary=False)
+    signs[:4, :8], signs[4:, :8] = 1, -1        # engineered exact ties
+    want = np.asarray(virtual_vote(jnp.asarray(signs),
+                                   VoteStrategy.ALLGATHER_1BIT))
+    for prior in (0.0, 0.3):
+        vote, new = wv.decode_stacked(
+            jnp.asarray(signs), jnp.full((8,), prior, jnp.float32))
+        np.testing.assert_array_equal(np.asarray(vote)[:200], want)
+    assert np.asarray(new).shape == (8,)
+
+
+def test_weighted_decode_survives_learned_adversarial_majority():
+    """The SignSGD-FD headline: with flip rates already learned, the
+    decode recovers the honest direction even when 5 of 8 workers flip —
+    a regime where the unweighted majority is wrong on every coordinate."""
+    truth = np.where(RNG.integers(0, 2, 64) == 1, 1, -1).astype(np.int8)
+    signs = np.tile(truth, (8, 1))
+    signs[:5] *= -1                              # 5/8 adversarial majority
+    plain = np.asarray(virtual_vote(jnp.asarray(signs),
+                                    VoteStrategy.ALLGATHER_1BIT))
+    np.testing.assert_array_equal(plain, -truth)  # majority IS the attack
+    ema = jnp.asarray([0.95] * 5 + [0.05] * 3, jnp.float32)
+    vote, _ = wv.decode_stacked(jnp.asarray(signs), ema)
+    np.testing.assert_array_equal(np.asarray(vote), truth)
+
+
+def test_weighted_ema_not_diluted_by_padding_lanes():
+    """Regression: flip-rate observations must be measured on the true
+    coordinates only. Bit-pack padding lanes always agree with the vote,
+    so counting them scaled every disagreement by n/32w — at dim 100 a
+    perfect flipper's observed rate came out 0.78x the truth."""
+    from repro.configs.base import VoteStrategy
+    from repro.sim import virtual_vote_codec
+    n = 100                                     # 128 packed lanes
+    truth = np.where(RNG.integers(0, 2, n) == 1, 1, -1).astype(np.int8)
+    signs = np.tile(truth, (8, 1))
+    signs[0] *= -1                              # one perfect flipper
+    state = {"flip_ema": jnp.zeros((8,), jnp.float32)}
+    _, new = virtual_vote_codec(jnp.asarray(signs),
+                                VoteStrategy.ALLGATHER_1BIT,
+                                "weighted_vote", state)
+    ema = np.asarray(new["flip_ema"])
+    np.testing.assert_allclose(ema[0], wv.RHO * 1.0, rtol=1e-6)
+    np.testing.assert_allclose(ema[1:], 0.0, atol=1e-7)
+
+
+def test_weighted_ema_separates_adversaries_from_honest():
+    """Running the decode a few steps from the uninformed prior, constant
+    sign-flippers accumulate a higher flip estimate than honest voters
+    (while the honest majority holds, Theorem 2's regime)."""
+    truth = np.where(RNG.integers(0, 2, 256) == 1, 1, -1).astype(np.int8)
+    ema = jnp.zeros((8,), jnp.float32)
+    for _ in range(6):
+        signs = np.tile(truth, (8, 1))
+        signs[:3] *= -1                          # 3/8 flippers
+        _, ema = wv.decode_stacked(jnp.asarray(signs), ema)
+    ema = np.asarray(ema)
+    assert ema[:3].min() > 0.8 and ema[3:].max() < 0.2, ema
+    # ...and by then the adversaries' weights are negative (inverted)
+    w = np.asarray(wv.reliability_weights(jnp.asarray(ema)))
+    assert (w[:3] < 0).all() and (w[3:] > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# codec state beside the momentum: checkpoint elastic refit (§6)
+# ---------------------------------------------------------------------------
+
+
+def test_codec_state_survives_refit_leading_axis():
+    """EF residual (per-worker, momentum-shaped) and the weighted codec's
+    flip_ema refit by the same truncate-or-zero-pad rule as Mode A
+    momentum: shrink keeps the survivors' memory, growth admits joiners
+    at the zero prior."""
+    err = RNG.normal(size=(8, 16)).astype(np.float32)
+    down = refit_leading_axis(err, (5, 16))
+    np.testing.assert_array_equal(down, err[:5])
+    up = refit_leading_axis(down, (8, 16))
+    np.testing.assert_array_equal(up[:5], err[:5])
+    np.testing.assert_array_equal(up[5:], 0.0)
+
+    ema = np.asarray([0.9, 0.8, 0.1, 0.2], np.float32)
+    grown = refit_leading_axis(ema, (6,))
+    np.testing.assert_array_equal(grown[:4], ema)
+    np.testing.assert_array_equal(grown[4:], 0.0)  # uninformed prior
+    # the zero prior decodes exactly like every other equal prior
+    s = jnp.asarray(_signs(6, 64, ternary=False))
+    v0, _ = wv.decode_stacked(s, jnp.zeros((6,), jnp.float32))
+    v3, _ = wv.decode_stacked(s, jnp.full((6,), 0.3, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v3))
+
+
+def test_trainer_weighted_state_lives_beside_momentum():
+    """abstract_state exposes the codec server state with the momentum —
+    the shape checkpoint.restore would refit on elastic rescale."""
+    from repro.configs.base import TrainConfig, get_config, reduced_config
+    from repro.train import train_step as TS
+    cfg = reduced_config(get_config("glm4-9b"), num_layers=1)
+    tcfg = TrainConfig(
+        global_batch=4, seq_len=16,
+        optimizer=OptimizerConfig(kind="signum_vote", codec="weighted_vote",
+                                  vote_strategy=VoteStrategy.AUTO))
+    art = TS.make_train_step(cfg, tcfg, mesh=None)
+    assert art.codec == "weighted_vote"
+    assert art.vote_strategy == VoteStrategy.ALLGATHER_1BIT
+    _, opt_abs = TS.abstract_state(cfg, tcfg, art)
+    assert set(opt_abs) >= {"momentum", "codec"}
+    assert opt_abs["codec"]["flip_ema"].shape == (art.n_vote_replicas,)
+
+    tcfg_ef = dataclasses.replace(
+        tcfg, optimizer=OptimizerConfig(kind="signum_vote",
+                                        codec="ef_sign"))
+    art_ef = TS.make_train_step(cfg, tcfg_ef, mesh=None)
+    _, opt_ef = TS.abstract_state(cfg, tcfg_ef, art_ef)
+    assert set(opt_ef) >= {"momentum", "error"}
+    for k, leaf in opt_ef["error"].items():
+        assert leaf.shape == opt_ef["momentum"][k].shape

@@ -66,6 +66,20 @@ def harness_specs():
                      straggler_fraction=0.125,
                      elastic=(ElasticEvent(3, 4, "pod loss"),
                               ElasticEvent(6, 6, "rejoin"))),
+        # codec axis (DESIGN.md §8): every non-default codec through the
+        # same mesh==virtual and host-count-invariance gauntlet
+        ScenarioSpec("h8/ef_flip_stale", n_workers=8, n_steps=6, dim=100,
+                     strategy=S.ALLGATHER_1BIT, codec="ef_sign",
+                     adversary=AdversarySpec("sign_flip", 0.25),
+                     straggler_fraction=0.25),
+        ScenarioSpec("h8/ternary_random", n_workers=8, n_steps=6, dim=90,
+                     strategy=S.ALLGATHER_1BIT, codec="ternary2bit",
+                     adversary=AdversarySpec("random", 0.375)),
+        ScenarioSpec("h8/weighted_flip_elastic", n_workers=8, n_steps=8,
+                     dim=96, strategy=S.ALLGATHER_1BIT,
+                     codec="weighted_vote",
+                     adversary=AdversarySpec("sign_flip", 0.375),
+                     elastic=(ElasticEvent(4, 6, "pod loss"),)),
     ]
 
 

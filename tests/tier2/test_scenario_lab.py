@@ -175,6 +175,20 @@ def test_golden_trace_digest():
         f"intentional, re-pin GOLDEN_DIGEST to {t.digest}")
 
 
+def test_golden_trace_through_explicit_sign1bit_codec():
+    """The codec refactor's no-op proof (DESIGN.md §8): requesting the
+    sign1bit codec EXPLICITLY routes the drill through the codec API and
+    must reproduce the pre-codec golden digest unchanged — the default
+    wire path and the codec path are one path."""
+    spec = ScenarioSpec.from_dict(
+        {**GOLDEN_SPEC.to_dict(), "codec": "sign1bit"})
+    assert spec == GOLDEN_SPEC          # default codec == explicit codec
+    t = ScenarioRunner(spec).run()
+    assert t.digest == GOLDEN_DIGEST, (
+        "sign1bit through the codec API diverged from the pre-codec "
+        f"wire path: {t.digest}")
+
+
 # ---------------------------------------------------------------------------
 # vote semantics through scenarios
 # ---------------------------------------------------------------------------
@@ -280,6 +294,103 @@ def test_presets_all_run():
         t = ScenarioRunner(small).run()
         assert len(t.steps) == small.n_steps
         assert np.isfinite([s.loss for s in t.steps]).all()
+
+
+def test_codec_spec_roundtrips_and_validates():
+    spec = ScenarioSpec("cod/io", n_workers=9, codec="ternary2bit",
+                        strategy=VoteStrategy.ALLGATHER_1BIT,
+                        tie_break="zero")
+    back = ScenarioSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert back == spec and back.codec == "ternary2bit"
+    assert back.tie_policy == "zero"    # codec overrides the 1-bit wire
+    with pytest.raises(ValueError, match="unknown codec"):
+        ScenarioSpec("bad", codec="morse")
+    with pytest.raises(ValueError, match="cannot ride"):
+        ScenarioSpec("bad", codec="weighted_vote",
+                     strategy=VoteStrategy.PSUM_INT8)
+    with pytest.raises(ValueError, match="cannot ride"):
+        ScenarioSpec("bad", codec="ternary2bit",
+                     strategy=VoteStrategy.HIERARCHICAL)
+    # a tie policy the codec's wire cannot realise is rejected
+    with pytest.raises(ValueError):
+        ScenarioSpec("bad", codec="ternary2bit",
+                     strategy=VoteStrategy.ALLGATHER_1BIT,
+                     tie_break="plus_one")
+
+
+def test_codec_grid_axis_expansion():
+    specs = expand_grid({
+        "prefix": "cg", "fractions": [0.0, 0.25], "modes": ["sign_flip"],
+        "strategies": ["allgather_1bit"],
+        "codecs": ["sign1bit", "ef_sign", "ternary2bit", "weighted_vote"],
+        "base": {"n_workers": 8, "n_steps": 3, "dim": 32}})
+    assert len(specs) == 4 * 2
+    assert {s.codec for s in specs} == {"sign1bit", "ef_sign",
+                                        "ternary2bit", "weighted_vote"}
+    assert all(s.name.startswith("cg/") for s in specs)
+    # the codec-less grid keeps its historical names (and PRNG salts)
+    legacy = expand_grid({"prefix": "cg", "fractions": [0.25],
+                          "modes": ["sign_flip"],
+                          "strategies": ["allgather_1bit"],
+                          "base": {"n_workers": 8, "n_steps": 3,
+                                   "dim": 32}})
+    assert legacy[0].name == "cg/sign_flip/allgather_1bit/f0.25"
+
+
+def test_ternary_codec_tie_at_half_abstains_on_the_1bit_exchange():
+    """At exactly 50% sign-flippers the sign1bit 1-bit wire marches +1
+    (ties binarise); the ternary codec on the SAME exchange abstains —
+    the 2-bit field carries what the 1-bit wire cannot (§8)."""
+    def run(codec):
+        spec = ScenarioSpec(f"codtie/{codec}", n_workers=16, n_steps=4,
+                            dim=64, strategy=VoteStrategy.ALLGATHER_1BIT,
+                            codec=codec, noise_scale=0.0,
+                            adversary=AdversarySpec("sign_flip", 0.5))
+        return ScenarioRunner(spec).run()
+    t1 = run("sign1bit")
+    assert t1.steps[-1].loss != t1.steps[0].loss      # ties -> +1, x moves
+    t2 = run("ternary2bit")
+    losses = [s.loss for s in t2.steps]
+    assert losses.count(losses[0]) == len(losses)     # abstains, x frozen
+    assert all(s.margin == 0.0 for s in t2.steps)
+
+
+def test_ef_codec_changes_trajectory_but_not_the_wire_format():
+    """ef_sign rides the identical wire (same bits/param, same tie rule)
+    yet the residual changes what gets encoded from step 2 on."""
+    base = dict(n_workers=15, n_steps=6, dim=128,
+                strategy=VoteStrategy.ALLGATHER_1BIT)
+    t_plain = ScenarioRunner(ScenarioSpec("efx/a", **base)).run()
+    t_ef = ScenarioRunner(
+        ScenarioSpec("efx/a", codec="ef_sign", **base)).run()
+    s_plain, s_ef = t_plain.summary(), t_ef.summary()
+    assert s_plain["bits_per_param"] == s_ef["bits_per_param"] == 1.0
+    assert s_plain["tie_policy"] == s_ef["tie_policy"] == "plus_one"
+    assert t_plain.digest != t_ef.digest
+    assert np.isfinite([s.loss for s in t_ef.steps]).all()
+
+
+def test_weighted_codec_learns_down_the_adversaries():
+    """Under 37.5% sign-flippers the weighted decode's flip fraction (vs
+    the honest oracle) collapses once the reliability EMA has one step of
+    observations — the SignSGD-FD defense through the production drill
+    path. The window is the gradient-dominated phase: near the optimum
+    noise swamps the honest signs, every worker's disagreement estimate
+    converges, and the discrimination (rightly) washes out."""
+    base = dict(n_workers=16, n_steps=8, dim=512,
+                strategy=VoteStrategy.ALLGATHER_1BIT,
+                adversary=AdversarySpec("sign_flip", 0.375))
+    t_plain = ScenarioRunner(ScenarioSpec("wdef/x", **base)).run()
+    t_w = ScenarioRunner(
+        ScenarioSpec("wdef/x", codec="weighted_vote", **base)).run()
+    # step 0 decodes from the uninformed prior: identical to plain
+    assert t_w.steps[0].flip_fraction == t_plain.steps[0].flip_fraction
+    learned = slice(1, 6)
+    plain_flip = float(np.mean(
+        [s.flip_fraction for s in t_plain.steps[learned]]))
+    w_flip = float(np.mean([s.flip_fraction for s in t_w.steps[learned]]))
+    assert w_flip < 0.6 * plain_flip, (w_flip, plain_flip)
+    assert np.isfinite([s.loss for s in t_w.steps]).all()
 
 
 def test_virtual_vote_matches_ref_oracle():
