@@ -32,7 +32,8 @@ import numpy as np
 
 from repro.configs.base import VoteStrategy, get_config
 from repro.core.vote_engine import (STRATEGIES, VoteEngine, select_strategy)
-from repro.distributed.comm_model import collective_time
+from repro.distributed import comm_model
+from repro.distributed.comm_model import collective_time, schedule_time
 from repro.kernels import ops, ref
 
 FP32_BITS = 32.0
@@ -45,6 +46,40 @@ def _time(fn, *args, iters=5):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters
+
+
+def alpha_beta_rows(n_small: int = 1 << 15, n_big: int = 1 << 18,
+                    m_workers: int = 8):
+    """Back out the α–β constants empirically: fit t(n) = α + β·n over
+    the fused vote kernel at two sizes on this host — the same two-point
+    fit one runs against real collective timings on hardware — and
+    report the fitted α next to the model's ``ALPHA_ICI``. The per-
+    message α is what makes L leaf-sized messages cost more than one
+    flat message of the same bytes (``comm_model.schedule_time``); a
+    model with α = 0 prices both the same and silently biases the AUTO
+    selector toward chatty schedules."""
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.normal(size=(m_workers, n_big))
+                     .astype(np.float32))
+    t_small = _time(lambda: ops.fused_majority(xs[:, :n_small]))
+    t_big = _time(lambda: ops.fused_majority(xs))
+    beta = max(t_big - t_small, 0.0) / (n_big - n_small)
+    alpha = max(t_small - beta * n_small, 0.0)
+    # the bias, priced: a 100-leaf schedule vs one flat message of the
+    # same total bytes under the analytic model
+    n, leaves = 1 << 22, 100
+    one = collective_time(n / 8.0).time_s
+    many = schedule_time([(n / 8.0 / leaves, 0.0, 1)] * leaves).time_s
+    return [
+        ("fig5/alpha_hat_us", alpha * 1e6,
+         f"host per-launch latency from t(n)=a+b*n fit at n={n_small} vs "
+         f"{n_big} (model ALPHA_ICI={comm_model.ALPHA_ICI * 1e6:g} us)"),
+        ("fig5/beta_hat_ps_per_param", beta * 1e12,
+         f"host per-param slope of the fused vote kernel (M={m_workers})"),
+        ("fig5/leafwise_latency_tax", many / one,
+         f"{leaves} leaf messages vs one flat buffer, same bytes: the "
+         "alpha term schedule_time now prices per message"),
+    ]
 
 
 def wire_rows(n_params: int, data_size: int = 16, pod_size: int = 1,
@@ -104,6 +139,7 @@ def rows():
     out.append(("fig5/vote25M_15workers_ms", t_vote * 1e3,
                 "staged popcount majority kernel (after packed all-gather)"))
     out.append(("fig5/apply25M_ms", t_apply * 1e3, "fused unpack+update"))
+    out.extend(alpha_beta_rows())
     return out
 
 
@@ -152,6 +188,16 @@ def smoke() -> int:
         failures += 1
     else:
         print("fig5/smoke/engine_fused_vs_jnp,1,bit-identical", flush=True)
+
+    # the alpha-beta fix: a schedule of L messages must price strictly
+    # above one message of the same total bytes (per-message latency)
+    for name, value, derived in alpha_beta_rows(n_small=1 << 14,
+                                                n_big=1 << 16):
+        print(f"{name},{value:.6g},{derived}", flush=True)
+        if name.endswith("leafwise_latency_tax") and value <= 1.0:
+            print("FAIL: schedule_time prices L messages <= 1 message "
+                  "(alpha term lost)", file=sys.stderr)
+            failures += 1
     return failures
 
 

@@ -1,0 +1,400 @@
+"""VotePlan frontier: the bucketed flat-buffer wire vs the leaf-wise vote.
+
+The leaf-wise path runs one pack/exchange/tally/unpack round — and one
+fused-kernel launch — per tensor; the VotePlan (DESIGN.md §9) collapses
+the model into one flat buffer cut into ``bucket_bytes`` buckets. This
+benchmark sweeps that axis on the quickstart model (reduced glm4, the
+model every example trains):
+
+* ``rows()`` (the ``benchmarks.run`` driver path) — the REAL distributed
+  train step on 8 virtual devices in a subprocess, leaf-wise
+  (``bucket_bytes=0``) vs a bucket_bytes sweep, reporting per-step
+  wall-clock and the compiled schedule size.
+* ``--smoke`` — the CI lane (scripts/ci.sh plan-smoke stage, <10 s):
+  1. the sign1bit single-bucket plan MUST reproduce the committed
+     golden-trace digest bit for bit (RuntimeError on drift — survives
+     ``python -O``);
+  2. a mixed-codec plan (ternary embeddings + sign1bit body) replayed on
+     the mesh backend and asserted bit-identical to the virtual walk;
+  3. a 1→32-bucket sweep over the quickstart model's own leaf manifest
+     through the stacked kernel path: asserts the bucketed path issues
+     exactly ``plan.n_buckets ≤ ceil(n·bits/(8·bucket_bytes))`` fused
+     launches where the leaf-wise baseline launches once per leaf, and
+     records wall-clock for both;
+  4. the 8-device harness (jit(shard_map) over an 8-wide 'data' axis,
+     the production wire): per-step wall-clock of the bucketed schedule
+     vs the leaf-wise baseline, votes asserted bit-identical.
+  Writes the machine-readable baseline ``BENCH_vote_plan.json``.
+
+Usage:
+    python -m benchmarks.bench_vote_plan            # LM sweep (subprocess)
+    python -m benchmarks.bench_vote_plan --smoke    # CI smoke + JSON
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+_JSON_DEFAULT = "BENCH_vote_plan.json"
+
+#: bucket_bytes sweep for the full train-step lane (0 = leaf-wise)
+SWEEP_BUCKET_BYTES = [0, 65536, 16384, 4096]
+
+_WORKER = textwrap.dedent("""
+    import os, time
+    # append, so a caller's unrelated XLA_FLAGS (dump dirs etc.) survive
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()
+    import json, sys
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro import compat
+    from repro.configs.base import (OptimizerConfig, TrainConfig,
+                                    VoteStrategy, get_config,
+                                    reduced_config)
+    from repro.models import model as M
+    from repro.train import train_step as TS
+
+    sweep = json.loads(sys.argv[1])
+    mesh = compat.make_mesh((8, 1), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
+    out = {}
+    for bucket_bytes in sweep:
+        cfg = reduced_config(get_config("glm4-9b"), num_layers=2)
+        tcfg = TrainConfig(
+            global_batch=8, seq_len=32,
+            optimizer=OptimizerConfig(
+                kind="signum_vote", learning_rate=3e-3,
+                vote_strategy=VoteStrategy.ALLGATHER_1BIT,
+                bucket_bytes=bucket_bytes))
+        art = TS.make_train_step(cfg, tcfg, mesh=mesh)
+        params, opt = TS.materialize_state(cfg, tcfg, art,
+                                           jax.random.PRNGKey(0), mesh)
+        batch = M.make_batch(cfg, 8, 32, jax.random.PRNGKey(1))
+        batch = jax.tree.map(lambda a: jax.device_put(
+            np.asarray(a), NamedSharding(mesh, P("data"))), batch)
+        params, opt, met = art.step_fn(params, opt, batch,
+                                       jnp.int32(0))   # compile + warm
+        jax.block_until_ready(params)
+        t0 = time.perf_counter()
+        for i in range(1, 6):
+            params, opt, met = art.step_fn(params, opt, batch,
+                                           jnp.int32(i))
+        jax.block_until_ready(params)
+        out[str(bucket_bytes)] = {
+            "step_ms": (time.perf_counter() - t0) / 5 * 1e3,
+            "loss": float(met["loss"]),
+            "n_buckets": art.plan.n_buckets if art.plan else 0,
+            "n_leaves": len(art.param_specs)}
+    print("RESULT " + json.dumps(out))
+""")
+
+
+def rows():
+    """Per-step wall-clock of the 8-device train step, leaf-wise vs the
+    bucket_bytes sweep (the acceptance quantity, on the real harness)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    proc = subprocess.run(
+        [sys.executable, "-c", _WORKER, json.dumps(SWEEP_BUCKET_BYTES)],
+        env=env, capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        return [("vote_plan/error", -1.0, proc.stderr[-200:])]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][0]
+    res = json.loads(line[len("RESULT "):])
+    base = res.get("0")
+    out = []
+    for bb, r in res.items():
+        label = "leafwise" if bb == "0" else f"bb{bb}"
+        sched = (f"{r['n_buckets']} buckets" if r["n_buckets"]
+                 else f"one vote round per leaf ({r['n_leaves']} leaves)")
+        rel = (f"; {r['step_ms'] / base['step_ms']:.2f}x leafwise"
+               if base and bb != "0" else "")
+        out.append((f"vote_plan/{label}/step_ms", r["step_ms"],
+                    f"{sched}, loss {r['loss']:.2f}{rel} "
+                    "(8-dev train step, quickstart model)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# smoke mode (scripts/ci.sh plan-smoke stage)
+# ---------------------------------------------------------------------------
+
+
+def _quickstart_manifest(scale: int = 4):
+    """The quickstart model's own leaf structure, dims divided by `scale`
+    so the smoke drill stays fast while keeping the real leaf-size
+    spread (embeddings >> norm scales)."""
+    from repro.configs.base import get_config, reduced_config
+    cfg = reduced_config(get_config("glm4-9b"), num_layers=2)
+    shapes = {}
+    for k, s in cfg.param_shapes().items():
+        n = 1
+        for d in s:
+            n *= d
+        shapes[k] = (max(1, n // scale),)
+    return shapes
+
+
+def _time(fn, iters=5):
+    """Best-of-iters wall-clock (min cuts CPU scheduling noise, which on
+    a loaded CI host dwarfs the quantity under test)."""
+    import jax
+    jax.block_until_ready(fn())          # compile + warm
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def smoke_rows():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import VoteStrategy
+    from repro.core import vote_plan as vp
+    from repro.kernels import ops
+    from repro.sim import (AdversarySpec, PlanSpec, ScenarioRunner,
+                           ScenarioSpec)
+
+    out = []
+
+    # ---- 1. the fixed point: single-bucket sign1bit == golden digest ----
+    # the pinned constants live with the tier-2 tests (one source of
+    # truth for re-pinning); tests/ is not a package, so load by path
+    import importlib.util
+    golden_path = os.path.join(os.path.dirname(__file__), "..", "tests",
+                               "tier2", "test_scenario_lab.py")
+    gspec = importlib.util.spec_from_file_location("_golden", golden_path)
+    gmod = importlib.util.module_from_spec(gspec)
+    gspec.loader.exec_module(gmod)
+    GOLDEN_SPEC, GOLDEN_DIGEST = gmod.GOLDEN_SPEC, gmod.GOLDEN_DIGEST
+    single = ScenarioSpec.from_dict({
+        **GOLDEN_SPEC.to_dict(),
+        "plan": {"bucket_bytes": 1 << 20}})
+    t = ScenarioRunner(single).run()
+    # RuntimeError, not assert: the acceptance bar must survive `python -O`
+    if t.digest != GOLDEN_DIGEST:
+        raise RuntimeError(
+            "single-bucket sign1bit VotePlan drifted from the golden "
+            f"trace ({t.digest[:12]} != {GOLDEN_DIGEST[:12]})")
+    out.append(("vote_plan-smoke/golden_single_bucket", 1.0,
+                f"bit-identical to the legacy wire ({t.digest[:12]})"))
+
+    # ---- 2. mixed-codec plan: mesh == virtual ----
+    mixed = ScenarioSpec(
+        "plan-smoke/mixed", n_workers=8, n_steps=5, dim=256,
+        strategy=VoteStrategy.ALLGATHER_1BIT,
+        adversary=AdversarySpec("colluding", 0.375),
+        plan=PlanSpec(bucket_bytes=8,
+                      leaves=(("embed.table", 96), ("body.w", 160)),
+                      codec_map=(("embed*", "ternary2bit"),
+                                 ("*", "sign1bit"))))
+    tv = ScenarioRunner(mixed, backend="virtual").run()
+    tm = ScenarioRunner(mixed, backend="mesh").run()
+    if tv.digest != tm.digest:
+        raise RuntimeError(
+            f"mixed-codec plan diverged between mesh and virtual "
+            f"({tv.digest[:12]} != {tm.digest[:12]})")
+    out.append(("vote_plan-smoke/mixed_mesh_eq_virtual", 1.0,
+                f"ternary embed + sign1bit body, "
+                f"{tv.summary()['plan_buckets']} buckets "
+                f"({tv.digest[:12]})"))
+
+    # ---- 3. launches-per-bucket sweep on the quickstart manifest ----
+    shapes = _quickstart_manifest()
+    n_leaves = len(shapes)
+    total = sum(s[0] for s in shapes.values())
+    m_workers = 8
+    rng = np.random.default_rng(0)
+    stacked = jnp.asarray(rng.normal(size=(m_workers, total))
+                          .astype(np.float32))
+    # leaf-wise baseline: one fused launch per leaf
+    one_leaf_plans = [
+        vp.build_plan({k: s}, bucket_bytes=1 << 30,
+                      strategy=VoteStrategy.ALLGATHER_1BIT)
+        for k, s in shapes.items()]
+
+    def leafwise():
+        outs, off = [], 0
+        for p in one_leaf_plans:
+            outs.append(vp.plan_vote_stacked(
+                p, stacked[:, off:off + p.n_params]))
+            off += p.n_params
+        return jnp.concatenate(outs)
+
+    ops.reset_launch_counts()
+    base_votes = leafwise()
+    base_launch = ops.launch_counts().get("fused_majority", 0)
+    if base_launch != n_leaves:
+        raise RuntimeError(
+            f"leaf-wise baseline launched {base_launch}x for "
+            f"{n_leaves} leaves")
+    t_leaf = _time(leafwise)
+    out.append(("vote_plan-smoke/leafwise_launches", float(base_launch),
+                f"one fused launch per leaf ({n_leaves} leaves, "
+                f"{total} params, {t_leaf * 1e3:.2f} ms/vote)"))
+
+    for k in (1, 4, 32):
+        bucket_bytes = -(-total // (8 * k))      # ceil: k nominal buckets
+        plan = vp.build_plan(shapes, bucket_bytes=bucket_bytes,
+                             strategy=VoteStrategy.ALLGATHER_1BIT)
+        bound = -(-total // (8 * bucket_bytes))  # ceil(n*bits/(8*bb))
+        ops.reset_launch_counts()
+        votes = vp.plan_vote_stacked(plan, stacked)
+        got = ops.launch_counts().get("fused_majority", 0)
+        if got != plan.n_buckets or got > bound:
+            raise RuntimeError(
+                f"bucketed path launched {got}x for {plan.n_buckets} "
+                f"buckets (bound {bound})")
+        if not np.array_equal(np.asarray(votes), np.asarray(base_votes)):
+            raise RuntimeError(
+                f"bucketed votes != leaf-wise votes at {k} buckets")
+        t_plan = _time(lambda: vp.plan_vote_stacked(plan, stacked))
+        out.append((
+            f"vote_plan-smoke/buckets{plan.n_buckets}_ms", t_plan * 1e3,
+            f"one fused launch per bucket ({got} launches <= bound "
+            f"{bound}; {t_leaf / t_plan:.1f}x leafwise kernel path)"))
+
+    # ---- 4. the 8-device harness: per-step wire wall-clock ----
+    out.extend(_mesh_harness_rows(shapes, stacked))
+    return out
+
+
+def _mesh_harness_rows(shapes, stacked):
+    """jit(shard_map) over the 8-wide 'data' axis — the production wire
+    on the 8-device harness: leaf-wise schedule (one engine vote round
+    per leaf) vs the bucketed plan, bit-identical votes required.
+
+    Both wires are measured; the hard wall-clock gate sits on the
+    DEFAULT strategy (``psum_int8``, OptimizerConfig's default), where
+    the per-round overhead the plan amortises dominates. The gathered
+    wire's per-round cost is tally-bound on the CPU emulation (the
+    bit-sliced popcount is identical work either way), so its row is
+    recorded without a gate — on real hardware that wire is where the
+    per-collective latency term lives, which the α–β schedule cost in
+    the analytic rows prices."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro import compat
+    from repro.configs.base import VoteStrategy
+    from repro.core import vote_plan as vp
+    from repro.core.vote_engine import STRATEGIES
+
+    m = 8
+    if len(jax.devices()) < m:
+        raise RuntimeError("plan smoke needs the 8-virtual-device "
+                           "platform (run via scripts/ci.sh or with "
+                           "XLA_FLAGS=--xla_force_host_platform_device_"
+                           "count=8)")
+    total = stacked.shape[1]
+    signs = jnp.sign(stacked).astype(jnp.int8)
+    mesh = Mesh(np.array(jax.devices()[:m]), ("data",))
+    rows_ = []
+    for strategy, gated in ((VoteStrategy.PSUM_INT8, True),
+                            (VoteStrategy.ALLGATHER_1BIT, False)):
+        plan = vp.build_plan(shapes, bucket_bytes=-(-total // (8 * 4)),
+                             strategy=strategy)
+        impl = STRATEGIES[strategy]
+        slots = plan.leaves
+
+        def leafwise(vals):
+            v = vals[0]
+            outs = [impl.vote(v[s.offset:s.offset + s.length], ("data",))
+                    for s in slots]
+            return jnp.concatenate(outs)[None]
+
+        def bucketed(vals):
+            v, _ = vp.plan_vote_signs(plan, vals[0], ("data",))
+            return v[None]
+
+        fns = {}
+        for name, f in (("leafwise", leafwise), ("bucketed", bucketed)):
+            sh = compat.shard_map(f, mesh=mesh, in_specs=(P("data"),),
+                                  out_specs=P("data"), axis_names={"data"},
+                                  check_vma=False)
+            fns[name] = jax.jit(sh)
+        v_leaf = fns["leafwise"](signs)
+        v_plan = fns["bucketed"](signs)
+        if not np.array_equal(np.asarray(v_leaf), np.asarray(v_plan)):
+            raise RuntimeError(
+                f"8-dev harness [{strategy.value}]: bucketed votes != "
+                "leaf-wise")
+        t_leaf = _time(lambda: fns["leafwise"](signs))
+        t_plan = _time(lambda: fns["bucketed"](signs))
+        s = strategy.value
+        rows_.append((
+            f"vote_plan-smoke/harness8/{s}/leafwise_ms", t_leaf * 1e3,
+            f"one vote round per leaf ({len(slots)} rounds) on the "
+            "8-device mesh"))
+        rows_.append((
+            f"vote_plan-smoke/harness8/{s}/bucketed_ms", t_plan * 1e3,
+            f"{plan.n_buckets} bucket rounds, votes bit-identical; "
+            f"{t_leaf / t_plan:.2f}x leafwise per step"))
+        # per-step wall-clock no worse than leaf-wise (slack so a loaded
+        # CI host cannot flake the lane; the JSON records the ratio)
+        if gated and t_plan > t_leaf * 1.25:
+            raise RuntimeError(
+                f"bucketed wire slower than leaf-wise on the 8-dev "
+                f"harness [{s}] ({t_plan * 1e3:.2f} ms vs "
+                f"{t_leaf * 1e3:.2f} ms)")
+    return rows_
+
+
+def emit_json(rs, path: str) -> None:
+    """Same ``{"rows": [...]}`` schema as ``benchmarks.run --emit-json``,
+    so the committed baseline diffs cleanly row by row."""
+    doc = {"rows": [{"name": n, "value": v, "derived": d}
+                    for n, v, d in rs]}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast plan sweep + golden/mesh==virtual asserts "
+                         "(CI lane, <10 s)")
+    ap.add_argument("--emit-json", dest="json_out", nargs="?",
+                    const=_JSON_DEFAULT, default=None,
+                    help=f"write rows as JSON (default {_JSON_DEFAULT})")
+    args = ap.parse_args()
+
+    if args.smoke:
+        # force the 8-virtual-device platform before jax initialises,
+        # APPENDING so a caller's unrelated XLA_FLAGS survive
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count=8").strip()
+        rs = smoke_rows()
+        if args.json_out is None:        # CI smoke always seeds the JSON
+            args.json_out = _JSON_DEFAULT
+    else:
+        rs = rows()
+    print("name,value,derived")
+    for name, value, derived in rs:
+        print(f"{name},{value:.6g},{derived}", flush=True)
+    if args.json_out:
+        emit_json(rs, args.json_out)
+        print(f"# wrote {args.json_out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,18 +29,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module keys "
-                         "(fig1..fig6,codecs,roofline)")
+                         "(fig1..fig6,codecs,vote_plan,roofline)")
     ap.add_argument("--emit-json", dest="json_out", default=None,
                     help="also write the produced rows to this JSON file")
     args = ap.parse_args()
 
     from benchmarks import (bench_codecs, bench_comm, bench_convergence,
                             bench_noise, bench_robustness, bench_speedup,
-                            roofline)
+                            bench_vote_plan, roofline)
     suites = {
         "fig1": bench_convergence, "fig2": bench_noise, "fig3": bench_noise,
         "fig4": bench_robustness, "fig5": bench_comm, "fig6": bench_speedup,
-        "codecs": bench_codecs, "roofline": roofline,
+        "codecs": bench_codecs, "vote_plan": bench_vote_plan,
+        "roofline": roofline,
     }
     only = set(args.only.split(",")) if args.only else None
     seen_mods = set()

@@ -3,9 +3,13 @@
 # communication benchmark's smoke pass (VoteEngine wire accounting +
 # fused-kernel-vs-oracle checks), the Scenario Lab smoke sweep
 # (3 drills x 2 strategies, mesh==virtual bit-identity on the
-# 8-virtual-device host platform, <60 s), and the codec smoke sweep
+# 8-virtual-device host platform, <60 s), the codec smoke sweep
 # (every gradient codec drilled on 8 virtual devices, new codecs
-# asserted mesh==virtual, BENCH_codecs.json baseline written, <10 s).
+# asserted mesh==virtual, BENCH_codecs.json baseline written, <10 s),
+# and the vote-plan smoke (golden single-bucket fixed point, per-bucket
+# kernel-launch accounting, 8-dev harness wall-clock gate; the
+# companion mixed-codec host-count-invariance drill runs in the tier-2
+# lane via tests/tier2/test_plan_drills.py).
 #
 #   scripts/ci.sh          # everything
 #   scripts/ci.sh --quick  # skip tests marked slow (the distributed
@@ -38,5 +42,16 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 echo "== codec smoke (8-virtual-device platform; writes BENCH_codecs.json) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   python -m benchmarks.bench_codecs --smoke
+
+echo "== vote-plan smoke (8-virtual-device platform; writes BENCH_vote_plan.json) =="
+# golden single-bucket fixed point, mixed-codec plan mesh==virtual,
+# one-fused-launch-per-bucket accounting, 8-dev harness wall-clock gate
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  python -m benchmarks.bench_vote_plan --smoke
+# (the companion tier-2 drill — host-count invariance of a mixed-codec
+# plan, ternary embeddings + sign1bit body, under a 0.375 colluding
+# adversary — lives in tests/tier2/test_plan_drills.py and already runs
+# in the tier-2 lane above; re-invoking it here would double its
+# multi-minute subprocess replays)
 
 echo "CI OK"

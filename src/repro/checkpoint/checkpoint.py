@@ -141,6 +141,28 @@ def refit_leading_axis(saved: np.ndarray, want_shape: Tuple[int, ...]
         f"cannot reshard saved {saved.shape} -> wanted {want_shape}")
 
 
+def refit_tree_leading_axis(saved_tree: Any, want_shapes: Any) -> Any:
+    """:func:`refit_leading_axis` over a whole (possibly nested dict)
+    tree of per-worker state.
+
+    `want_shapes` mirrors `saved_tree`'s structure with target shape
+    tuples at the leaves. This is the one rule every per-worker buffer
+    rescales by — Mode A momentum, the codec layer's EF residual, the
+    weighted vote's (M,) flip-rate EMA, and a VotePlan's per-leaf state
+    trees alike (§6/§8/§9): truncate leavers, zero-pad joiners, never
+    silently reshape anything else. The Scenario Lab applies it at every
+    elastic event so a simulated shrink/regrow exercises exactly the
+    checkpoint-restore semantics."""
+    if isinstance(saved_tree, dict):
+        missing = set(saved_tree) ^ set(want_shapes)
+        if missing:
+            raise ValueError(
+                f"refit tree structure mismatch on keys {sorted(missing)}")
+        return {k: refit_tree_leading_axis(v, want_shapes[k])
+                for k, v in saved_tree.items()}
+    return refit_leading_axis(np.asarray(saved_tree), tuple(want_shapes))
+
+
 def restore(ckpt_dir: str, like_params: Any = None, like_opt: Any = None,
             shardings: Optional[Any] = None
             ) -> Tuple[Any, Any, Dict, Dict]:

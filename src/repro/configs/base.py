@@ -278,10 +278,30 @@ class OptimizerConfig:
     # pre-codec path); error_feedback=True is the legacy spelling of
     # codec="ef_sign" and resolves to it.
     codec: str = "sign1bit"
+    # VotePlan (DESIGN.md §9): >0 flattens the explicitly-voted leaves
+    # into one wire buffer cut into buckets of this many payload bytes
+    # (one vote round per bucket); 0 keeps the leaf-wise path (the
+    # default — flattening forfeits per-leaf 'model' shardings, see
+    # core/vote_plan.py).
+    bucket_bytes: int = 0
+    # per-leaf codec assignment for the plan: ((glob, codec), ...) with
+    # first-match-wins; unmatched leaves take `resolved_codec`. E.g.
+    # (("embed*", "ternary2bit"), ("*", "sign1bit")). Requires
+    # bucket_bytes > 0 (validated below).
+    codec_map: Tuple[Tuple[str, str], ...] = ()
     beta2: float = 0.999          # adam baseline
     eps: float = 1e-8
     warmup_steps: int = 0
     total_steps: int = 0          # 0 = constant lr
+
+    def __post_init__(self):
+        if self.codec_map and self.bucket_bytes <= 0:
+            # the map only applies to the VotePlan wire; accepting it
+            # with the plan disabled would silently train every leaf on
+            # `codec` instead of the mapped codecs
+            raise ValueError(
+                "codec_map needs bucket_bytes > 0 (per-leaf codecs ride "
+                "the bucketed VotePlan wire, DESIGN.md §9)")
 
     @property
     def resolved_codec(self) -> str:

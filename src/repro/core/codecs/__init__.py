@@ -16,8 +16,7 @@ Four codecs ship (registry ``CODECS``):
 others are the compression/robustness frontier every future compression
 or defense PR plugs into.
 """
-from repro.core.codecs.base import (GradientCodec, tree_encode,
-                                    tree_feedback)
+from repro.core.codecs.base import GradientCodec
 from repro.core.codecs.ef_sign import EFSignCodec
 from repro.core.codecs.sign1bit import Sign1BitCodec
 from repro.core.codecs.ternary import TERNARY_WIRE, Ternary2BitCodec
@@ -44,5 +43,5 @@ __all__ = [
     "CODECS", "DEFAULT_CODEC", "EFSignCodec", "GradientCodec",
     "Sign1BitCodec", "TERNARY_WIRE", "Ternary2BitCodec",
     "WeightedVoteCodec", "decode_stacked", "get_codec", "list_codecs",
-    "reliability_weights", "tree_encode", "tree_feedback",
+    "reliability_weights",
 ]

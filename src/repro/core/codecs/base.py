@@ -99,14 +99,6 @@ class GradientCodec(abc.ABC):
                 f"{tuple(s.value for s in self.supported_strategies)}")
 
 
-def tree_encode(codec: GradientCodec, tree, state_tree):
-    """Map encode_leaf over a pytree (state_tree=None for stateless)."""
-    if not codec.worker_state or state_tree is None:
-        return jax.tree.map(lambda v: codec.encode_leaf(v, None), tree)
-    return jax.tree.map(codec.encode_leaf, tree, state_tree)
-
-
-def tree_feedback(codec: GradientCodec, encoded_tree, votes, state_tree):
-    """Map feedback_leaf over a pytree of (encoded, vote, state)."""
-    return jax.tree.map(codec.feedback_leaf, encoded_tree, votes,
-                        state_tree)
+# The tree-level encode/feedback folds live with their only caller,
+# `core.signum.make_sign_optimizer` — since the VotePlan codec map (§9)
+# they are per-leaf-codec-aware dict folds, not whole-tree maps.

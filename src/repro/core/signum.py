@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from repro.configs.base import ByzantineConfig, MomentumMode, OptimizerConfig
 from repro.core import codecs as codecs_mod
 from repro.core import sign_compress as sc
+from repro.core import vote_plan as vp
 from repro.core.majority_vote import (num_voters, tree_mean, tree_vote,
                                       tree_vote_codec)
 
@@ -101,7 +102,8 @@ def make_sign_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
                         byz: Optional[ByzantineConfig] = None,
                         voted_leaves: Sequence[str] = (),
                         diagnostics: bool = False,
-                        n_vote_replicas: int = 1) -> Optimizer:
+                        n_vote_replicas: int = 1,
+                        plan: Optional[vp.VotePlan] = None) -> Optimizer:
     """SIGNUM/signSGD with majority vote.
 
     `axes`: manual mesh axes the vote runs over.
@@ -109,28 +111,44 @@ def make_sign_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
     fused ZeRO backward (Mode B only).
     `n_vote_replicas`: static voter count (sizes the server-stateful
     codecs' decode memory; 1 in the single-process degenerate case).
+    `plan`: optional :class:`~repro.core.vote_plan.VotePlan` (§9) — the
+    explicitly-voted leaves go to the wire as one flat bucketed buffer
+    instead of leaf by leaf; per-leaf codecs come from the plan's map.
 
     The wire is codec-parametric (DESIGN.md §8): `cfg.resolved_codec`
     selects what goes on it. Worker-side codec memory (the EF residual)
     lives under ``state["error"]`` — per-worker under Mode A, so it
     refits across elastic rescale like the momentum (§6); server-side
     decode memory (the weighted vote's reliability estimates) lives under
-    ``state["codec"]``, replicated.
+    ``state["codec"]``, replicated. Under a plan with a codec map the
+    residual tree holds ONLY the leaves mapped to a worker-state codec.
     """
     beta = cfg.momentum
     mode = cfg.momentum_mode
     mom_dtype = jnp.dtype(cfg.momentum_dtype)
     codec = codecs_mod.get_codec(cfg.resolved_codec)
-    ef = codec.worker_state
+    ef_leaves = (plan.worker_state_leaves if plan is not None
+                 else None)   # None = legacy single-codec rule
+    ef = (bool(ef_leaves) if plan is not None else codec.worker_state)
+    server_state = (plan.has_server_state if plan is not None
+                    else codec.server_state)
     if ef and mode != MomentumMode.PER_WORKER:
         # Mode B votes on raw gradient signs and keeps momentum on the
         # vote — there is no per-worker encode input for a residual to
         # fold into. Rejecting the combination beats silently training
         # as sign1bit with a dead momentum-sized error tree.
         raise ValueError(
-            f"codec {codec.name!r} carries a per-worker EF residual and "
-            "requires momentum_mode=per_worker (Mode A); Mode B has no "
+            f"codec {codec.name if plan is None else ef_leaves!r} carries "
+            "a per-worker EF residual and requires "
+            "momentum_mode=per_worker (Mode A); Mode B has no "
             "worker-side encode input (DESIGN.md §3/§8)")
+
+    leaf_codec_names = plan.leaf_codecs() if plan is not None else None
+
+    def _leaf_codec(name: str):
+        if leaf_codec_names is None:
+            return codec
+        return codecs_mod.get_codec(leaf_codec_names[name])
 
     def init(params):
         state = {"count": jnp.zeros((), jnp.int32)}
@@ -138,11 +156,40 @@ def make_sign_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
             state["momentum"] = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, mom_dtype), params)
         if ef:
-            state["error"] = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, mom_dtype), params)
-        if codec.server_state:
-            state["codec"] = codec.init_server_state(n_vote_replicas)
+            state["error"] = {
+                k: jnp.zeros(p.shape, mom_dtype) for k, p in params.items()
+                if ef_leaves is None or k in ef_leaves}
+        if server_state:
+            state["codec"] = (plan.init_server_state(n_vote_replicas)
+                              if plan is not None
+                              else codec.init_server_state(n_vote_replicas))
         return state
+
+    def encode(tree, err):
+        # codec encode: fold each EF leaf's residual into the vote input
+        # (identity for residual-free leaves/codecs)
+        return {k: _leaf_codec(k).encode_leaf(v, err.get(k))
+                for k, v in tree.items()}
+
+    def feedback(encoded, votes, err):
+        # codec feedback: residual vs the APPLIED vote, EF leaves only
+        return {k: _leaf_codec(k).feedback_leaf(encoded[k], votes[k], e)
+                for k, e in err.items()}
+
+    def _vote(tree, step, cstate):
+        """Dispatch the explicit vote: bucketed plan walk or leaf-wise."""
+        if plan is not None:
+            return vp.plan_tree_vote(plan, tree, axes, byz, step,
+                                     server_state=cstate,
+                                     diagnostics=diagnostics)
+        votes, new_cstate = tree_vote_codec(
+            tree, cfg.vote_strategy, axes, byz, step,
+            codec=codec.name, server_state=cstate)
+        diag = {}
+        if diagnostics:
+            diag["vote_agreement"] = _agreement(tree, votes)
+            diag["vote_margin"] = _vote_margin(tree, axes, byz, step)
+        return votes, new_cstate, diag
 
     def update(grads, state, params, step):
         eta = lr_at(cfg, step)
@@ -157,41 +204,30 @@ def make_sign_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
                 state = {**state, "momentum": v}
             else:
                 v = grads
-            if ef:   # codec encode: fold the residual into the vote input
-                v = codecs_mod.tree_encode(codec, v, state["error"])
-            votes, new_cstate = tree_vote_codec(
-                v, cfg.vote_strategy, axes, byz, step,
-                codec=codec.name, server_state=cstate)
-            if ef:   # codec feedback: residual vs the APPLIED vote
-                state = {**state, "error": codecs_mod.tree_feedback(
-                    codec, v, votes, state["error"])}
-            if codec.server_state:
+            if ef:
+                v = encode(v, state["error"])
+            votes, new_cstate, diag = _vote(v, step, cstate)
+            if ef:
+                state = {**state, "error": feedback(v, votes,
+                                                    state["error"])}
+            if server_state:
                 state = {**state, "codec": new_cstate}
-            if diagnostics:
-                diag["vote_agreement"] = _agreement(v, votes)
-                diag["vote_margin"] = _vote_margin(v, axes, byz, step)
         else:
             # --- Mode B: vote on sign(g), momentum on the vote ---
             pre, raw = _split(grads, voted_leaves)
             if raw:
-                raw_votes, new_cstate = tree_vote_codec(
-                    raw, cfg.vote_strategy, axes, byz, step,
-                    codec=codec.name, server_state=cstate)
-                if codec.server_state:
+                raw_votes, new_cstate, diag = _vote(raw, step, cstate)
+                if server_state:
                     state = {**state, "codec": new_cstate}
             else:
                 raw_votes = {}
             votes = {**pre, **raw_votes}
-            if diagnostics:
-                if raw:
-                    diag["vote_agreement"] = _agreement(raw, raw_votes)
-                    diag["vote_margin"] = _vote_margin(raw, axes, byz, step)
-                else:
-                    # every leaf took the fused vote-in-backward path: the
-                    # wire is not observable here, but the metric keys are
-                    # a contract when diagnostics=True
-                    diag["vote_agreement"] = jnp.float32(jnp.nan)
-                    diag["vote_margin"] = jnp.float32(jnp.nan)
+            if diagnostics and not raw:
+                # every leaf took the fused vote-in-backward path: the
+                # wire is not observable here, but the metric keys are
+                # a contract when diagnostics=True
+                diag["vote_agreement"] = jnp.float32(jnp.nan)
+                diag["vote_margin"] = jnp.float32(jnp.nan)
             if beta > 0:
                 u = jax.tree.map(
                     lambda m, vt: beta * m + (1 - beta) * vt.astype(mom_dtype),
@@ -277,9 +313,11 @@ def build_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
                     byz: Optional[ByzantineConfig] = None,
                     fused_leaves: Sequence[str] = (),
                     diagnostics: bool = False,
-                    n_vote_replicas: int = 1) -> Optimizer:
+                    n_vote_replicas: int = 1,
+                    plan: Optional[vp.VotePlan] = None) -> Optimizer:
     if cfg.kind in ("signum_vote", "signsgd_vote"):
         return make_sign_optimizer(cfg, axes, byz, voted_leaves=fused_leaves,
                                    diagnostics=diagnostics,
-                                   n_vote_replicas=n_vote_replicas)
+                                   n_vote_replicas=n_vote_replicas,
+                                   plan=plan)
     return make_dense_optimizer(cfg, axes, mean_leaves=fused_leaves)

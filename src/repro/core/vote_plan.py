@@ -1,0 +1,479 @@
+"""VotePlan: the flat-buffer bucketed vote pipeline (DESIGN.md §9).
+
+The leaf-wise vote (`VoteEngine.vote_tree`) runs one pack → exchange →
+tally → unpack round — and one kernel launch — per tensor, pays bit-pack
+padding on every small leaf, and prices L leaf messages as if they were
+one. A :class:`VotePlan` is the classic DDP-style fix, built once at
+trace time from the static parameter shapes:
+
+* **layout manifest** — flatten the gradient tree into ONE contiguous
+  sign buffer with a deterministic layout (leaf → offset/length/shape/
+  dtype, leaves sorted by name, grouped by codec);
+* **codec map** — a first-match glob map over leaf names
+  (``(("embed*", "ternary2bit"), ("*", "sign1bit"))``) assigns each leaf
+  a gradient codec (§8); each codec's leaves form one contiguous group;
+* **bucket schedule** — each group is cut into fixed-size buckets of
+  ``bucket_bytes`` wire payload (bucket length rounded UP to the pack
+  alignment so every bucket but each group's ragged last one is
+  pad-free: ONE padded lane set per codec group — one model-wide for
+  the common single-codec plan — and per group the bucket count never
+  exceeds ``ceil(group_n·bits / (8·bucket_bytes))``);
+* **per-bucket strategy** — ``VoteStrategy.AUTO`` prices the WHOLE
+  schedule per candidate wire through the latency-aware α–β model
+  (``comm_model.schedule_time``: one α term per bucket message, which is
+  what the per-leaf path silently omitted) and picks the cheapest.
+
+Execution (:func:`plan_vote_signs`) walks the static schedule, driving
+the SAME :class:`~repro.core.vote_engine.VoteStrategyImpl` stage methods
+the leaf-wise engine compiles — one uniform bucket vote per schedule
+entry — so the ``sign1bit`` single-bucket plan is bit-identical to the
+legacy wire (the tier-2 golden digest is asserted through it). Wire
+statistics (vote margin / agreement, the weighted codec's flip-rate EMA
+observations) are computed once over the flat buffer's true coordinates,
+never over padding lanes and never diluted leaf-by-leaf.
+
+The plan votes replica-local signs inside the manual vote region; it
+deliberately does NOT touch the fused ZeRO-3 backward path (those leaves
+vote inside the reduce-scatter) and is opt-in via
+``OptimizerConfig.bucket_bytes`` — flattening concatenates leaves, which
+forfeits their auto 'model' shardings, so the leaf-wise path stays the
+default for TP-sharded giants (see vote_engine's module docstring).
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ByzantineConfig, VoteStrategy
+from repro.core import byzantine, sign_compress as sc
+from repro.core.vote_engine import STRATEGIES, num_voters
+from repro.distributed import comm_model
+
+#: base bucket alignment: lcm of the 1-bit pack (32/word) and the ternary
+#: 2-bit pack (16/word) — an aligned bucket enters every wire pad-free
+ALIGN = 32
+
+
+# ---------------------------------------------------------------------------
+# the static plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """One leaf's slice of the flat buffer (offsets are global)."""
+
+    name: str
+    offset: int
+    length: int
+    shape: Tuple[int, ...]
+    dtype: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One schedule entry: a uniform vote over flat[start:start+length]."""
+
+    codec: str
+    strategy: VoteStrategy
+    start: int
+    length: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanGroup:
+    """All leaves sharing one codec: a contiguous run of the flat buffer."""
+
+    codec: str
+    strategy: VoteStrategy          # resolved, never AUTO
+    start: int
+    total: int
+    leaves: Tuple[LeafSlot, ...]
+    buckets: Tuple[Bucket, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class VotePlan:
+    """The trace-time layout manifest + bucket schedule (hashable/static)."""
+
+    groups: Tuple[PlanGroup, ...]
+    bucket_bytes: int
+    n_params: int
+
+    @property
+    def buckets(self) -> Tuple[Bucket, ...]:
+        return tuple(b for g in self.groups for b in g.buckets)
+
+    @property
+    def leaves(self) -> Tuple[LeafSlot, ...]:
+        return tuple(s for g in self.groups for s in g.leaves)
+
+    @property
+    def n_buckets(self) -> int:
+        return sum(len(g.buckets) for g in self.groups)
+
+    @property
+    def has_server_state(self) -> bool:
+        from repro.core import codecs as codecs_mod
+        return any(codecs_mod.get_codec(g.codec).server_state
+                   for g in self.groups)
+
+    @property
+    def worker_state_leaves(self) -> Tuple[str, ...]:
+        """Leaf names whose codec carries per-worker memory (EF residual)."""
+        from repro.core import codecs as codecs_mod
+        return tuple(s.name for g in self.groups for s in g.leaves
+                     if codecs_mod.get_codec(g.codec).worker_state)
+
+    def leaf_codecs(self) -> Dict[str, str]:
+        return {s.name: g.codec for g in self.groups for s in g.leaves}
+
+    def init_server_state(self, n_workers: int) -> Dict[str, jax.Array]:
+        """Union of the schedule's codec server states ({} if stateless)."""
+        from repro.core import codecs as codecs_mod
+        state: Dict[str, jax.Array] = {}
+        for g in self.groups:
+            state.update(codecs_mod.get_codec(g.codec)
+                         .init_server_state(n_workers))
+        return state
+
+    # ---- accounting ----
+
+    def schedule_cost(self, data_size: int, pod_size: int = 1) -> float:
+        """α–β wall-clock of the full bucket schedule (one latency term
+        per bucket message — the quantity AUTO minimised)."""
+        return _schedule_time(self.buckets, data_size, pod_size)
+
+
+# ---------------------------------------------------------------------------
+# building
+# ---------------------------------------------------------------------------
+
+
+def resolve_codec_map(names: Sequence[str],
+                      codec_map: Sequence[Tuple[str, str]],
+                      default_codec: str = "sign1bit") -> Dict[str, str]:
+    """First matching glob wins; unmatched leaves take `default_codec`.
+    Every mapped codec name is validated against the registry."""
+    from repro.core import codecs as codecs_mod
+    for pat, codec in codec_map:
+        codecs_mod.get_codec(codec)          # raises on unknown codec
+        if not pat:
+            raise ValueError("empty glob pattern in codec_map")
+    out = {}
+    for name in names:
+        for pat, codec in codec_map:
+            if fnmatch.fnmatchcase(name, pat):
+                out[name] = codec
+                break
+        else:
+            out[name] = default_codec
+    return out
+
+
+def _bucket_elems(bucket_bytes: int, bits_per_param: float,
+                  align: int) -> int:
+    """Bucket length in coordinates: `bucket_bytes` of wire payload,
+    rounded UP to `align` so non-ragged buckets are pad-free and the
+    bucket count stays ≤ ceil(n·bits / (8·bucket_bytes))."""
+    elems = max(1, int(bucket_bytes * 8 / bits_per_param))
+    return -(-elems // align) * align
+
+
+def _group_align(strategy: VoteStrategy, data_size: int) -> int:
+    # hierarchical pads each vote to PACK * data_size (its reduce-scatter
+    # shards must stay word-aligned); aligning buckets to that keeps the
+    # one-padded-lane-set guarantee on every wire
+    if strategy == VoteStrategy.HIERARCHICAL:
+        return ALIGN * max(data_size, 1)
+    return ALIGN
+
+
+def _message_parts(codec_bits: float, strategy: VoteStrategy, length: int,
+                   data_size: int, pod_size: int
+                   ) -> Tuple[float, float, int]:
+    """(ici bytes, dci bytes, collective count) of one bucket message."""
+    impl = STRATEGIES[strategy]
+    b = impl.ring_bytes(length, data_size, pod_size)
+    scale = (codec_bits / impl.wire_bits_per_param
+             if strategy == VoteStrategy.ALLGATHER_1BIT else 1.0)
+    return b["ici"] * scale, b["dci"] * scale, int(b["n_collectives"])
+
+
+def _schedule_time(buckets: Sequence[Bucket], data_size: int,
+                   pod_size: int) -> float:
+    from repro.core import codecs as codecs_mod
+    return comm_model.schedule_time(
+        _message_parts(codecs_mod.get_codec(b.codec).bits_per_param,
+                       b.strategy, b.length, data_size, pod_size)
+        for b in buckets).time_s
+
+
+def _resolve_group_strategy(codec_name: str, strategy: VoteStrategy,
+                            total: int, bucket_bytes: int,
+                            data_size: int, pod_size: int) -> VoteStrategy:
+    """Concrete strategy for one codec group. AUTO prices each candidate
+    wire's WHOLE bucket schedule (bucket count × per-message α + β·bytes)
+    instead of one leaf-sized message, so many small buckets can tip the
+    choice toward fewer/wider-count wires."""
+    from repro.core import codecs as codecs_mod
+    codec = codecs_mod.get_codec(codec_name)
+    if strategy != VoteStrategy.AUTO:
+        codec.validate_strategy(strategy)
+        return strategy
+    candidates = codec.supported_strategies
+    if data_size * pod_size <= 1:
+        return (VoteStrategy.PSUM_INT8
+                if VoteStrategy.PSUM_INT8 in candidates else candidates[0])
+    times = {}
+    for cand in candidates:
+        buckets = _cut_buckets(codec_name, cand, 0, total, bucket_bytes,
+                               data_size)
+        times[cand] = _schedule_time(buckets, data_size, pod_size)
+    return min(times, key=times.get)
+
+
+def _cut_buckets(codec_name: str, strategy: VoteStrategy, start: int,
+                 total: int, bucket_bytes: int, data_size: int
+                 ) -> Tuple[Bucket, ...]:
+    from repro.core import codecs as codecs_mod
+    bits = codecs_mod.get_codec(codec_name).bits_per_param
+    elems = _bucket_elems(bucket_bytes, bits,
+                          _group_align(strategy, data_size))
+    out = []
+    off = 0
+    while off < total:
+        length = min(elems, total - off)
+        out.append(Bucket(codec=codec_name, strategy=strategy,
+                          start=start + off, length=length))
+        off += length
+    return tuple(out)
+
+
+def build_plan(shapes: Dict[str, Tuple[int, ...]], *, bucket_bytes: int,
+               codec_map: Sequence[Tuple[str, str]] = (),
+               default_codec: str = "sign1bit",
+               strategy: VoteStrategy = VoteStrategy.AUTO,
+               data_size: int = 1, pod_size: int = 1,
+               dtypes: Optional[Dict[str, str]] = None) -> VotePlan:
+    """Build the static plan for a tree of `shapes` (leaf name → shape).
+
+    Deterministic: leaves are laid out in sorted-name order, grouped by
+    their resolved codec (groups ordered by first appearance in that
+    order), so the same shapes + config always produce the same manifest
+    on every host.
+    """
+    if bucket_bytes <= 0:
+        raise ValueError(f"bucket_bytes must be positive, got {bucket_bytes}")
+    names = sorted(shapes)
+    if not names:
+        raise ValueError("cannot build a VotePlan over an empty tree")
+    leaf_codec = resolve_codec_map(names, codec_map, default_codec)
+    codec_order = []
+    for name in names:
+        if leaf_codec[name] not in codec_order:
+            codec_order.append(leaf_codec[name])
+    groups = []
+    offset = 0
+    for codec_name in codec_order:
+        members = [n for n in names if leaf_codec[n] == codec_name]
+        slots, start = [], offset
+        for n in members:
+            shape = tuple(shapes[n])
+            length = 1
+            for d in shape:
+                length *= d
+            slots.append(LeafSlot(
+                name=n, offset=offset, length=length, shape=shape,
+                dtype=(dtypes or {}).get(n, "float32")))
+            offset += length
+        total = offset - start
+        resolved = _resolve_group_strategy(codec_name, strategy, total,
+                                           bucket_bytes, data_size, pod_size)
+        groups.append(PlanGroup(
+            codec=codec_name, strategy=resolved, start=start, total=total,
+            leaves=tuple(slots),
+            buckets=_cut_buckets(codec_name, resolved, start, total,
+                                 bucket_bytes, data_size)))
+    return VotePlan(groups=tuple(groups), bucket_bytes=bucket_bytes,
+                    n_params=offset)
+
+
+# ---------------------------------------------------------------------------
+# flatten / unflatten (the layout round-trip)
+# ---------------------------------------------------------------------------
+
+
+def flatten_signs(plan: VotePlan, tree) -> jax.Array:
+    """Tree of replica-local values → (n_params,) int8 ternary signs in
+    manifest order (sign extraction per leaf, then concatenation — both
+    elementwise, so bit-identical to the leaf-wise sign path)."""
+    parts = []
+    for slot in plan.leaves:
+        leaf = tree[slot.name]
+        if tuple(leaf.shape) != slot.shape:
+            raise ValueError(
+                f"leaf {slot.name!r} has shape {tuple(leaf.shape)}, plan "
+                f"manifest says {slot.shape}")
+        parts.append(sc.sign_ternary(leaf).reshape(-1))
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def unflatten_votes(plan: VotePlan, flat: jax.Array, tree) -> Dict:
+    """(n_params,) flat votes → tree of leaf-shaped votes in each leaf's
+    own dtype (the inverse of :func:`flatten_signs`)."""
+    out = {}
+    for slot in plan.leaves:
+        leaf = tree[slot.name]
+        out[slot.name] = (flat[slot.offset:slot.offset + slot.length]
+                          .reshape(slot.shape).astype(leaf.dtype))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# execution: the mesh walk
+# ---------------------------------------------------------------------------
+
+
+def _bucket_vote_mesh(bucket: Bucket, signs: jax.Array,
+                      axes: Tuple[str, ...],
+                      w: Optional[jax.Array]):
+    """One bucket through the production stage methods. Returns
+    (votes int8 (length,), mismatch (M,) or None, true length)."""
+    impl = STRATEGIES[bucket.strategy]
+    if bucket.codec == "ternary2bit" \
+            and bucket.strategy == VoteStrategy.ALLGATHER_1BIT:
+        from repro.core.codecs.ternary import TERNARY_WIRE
+        return TERNARY_WIRE.vote(signs, axes), None, bucket.length
+    if bucket.codec == "weighted_vote":
+        from repro.core.codecs import weighted
+        m = num_voters(axes)
+        arrived = impl.exchange(impl.pack(signs, m), axes)
+        # crop the bit-pack padding lanes BEFORE decoding: padding always
+        # agrees with the vote and would dilute the flip observations
+        stacked = sc.unpack_signs(arrived, jnp.int8)[..., :bucket.length]
+        vote, mis = weighted.decode_leaf_fixed(stacked, w)
+        return vote, mis, bucket.length
+    # sign1bit / ef_sign (identical wire) / ternary over the count wire
+    return impl.vote(signs, axes), None, bucket.length
+
+
+def plan_vote_signs(plan: VotePlan, flat_signs: jax.Array,
+                    axes: Tuple[str, ...], server_state=None):
+    """The schedule walk: (n_params,) effective int8 signs (post-stale,
+    post-adversary) → ((n_params,) int8 votes, new server state).
+
+    Runs inside the manual vote region. Server-stateful codecs decode
+    every bucket under weights FIXED for the step and fold ONE flip-rate
+    EMA update across the schedule, normalised by the weighted buckets'
+    true coordinate count (padding lanes never observed)."""
+    state = dict(server_state) if server_state else {}
+    if not axes:                     # M=1 degenerate case: vote = sign
+        return flat_signs, state
+    w = None
+    if plan.has_server_state:
+        from repro.core.codecs import weighted
+        if "flip_ema" not in state:
+            raise ValueError(
+                "plan carries a server-stateful codec; thread its server "
+                "state (init_server_state) through plan_vote_signs")
+        w = weighted.reliability_weights(state["flip_ema"])
+    votes, mismatch, total_w = [], None, 0
+    for bucket in plan.buckets:
+        seg = jax.lax.slice_in_dim(flat_signs, bucket.start,
+                                   bucket.start + bucket.length, axis=-1)
+        vote, mis, n_true = _bucket_vote_mesh(bucket, seg, tuple(axes), w)
+        votes.append(vote)
+        if mis is not None:
+            mismatch = mis if mismatch is None else mismatch + mis
+            total_w += n_true
+    if mismatch is not None:
+        from repro.core.codecs import weighted
+        state["flip_ema"] = ((1.0 - weighted.RHO) * state["flip_ema"]
+                             + weighted.RHO * mismatch / total_w)
+    out = jnp.concatenate(votes) if len(votes) > 1 else votes[0]
+    return out, state
+
+
+def plan_tree_vote(plan: VotePlan, tree, axes: Sequence[str],
+                   byz: Optional[ByzantineConfig] = None, step=None,
+                   salt: int = 0, server_state=None,
+                   diagnostics: bool = False):
+    """The trainer's plan entry point: tree of replica-local values →
+    (±1 tree in leaf dtypes, new server state, diagnostics dict).
+
+    Mirrors ``tree_vote_codec`` semantics with the schedule in place of
+    the per-leaf loop: sign extraction per leaf, ONE flat buffer, the
+    compiled adversary applied once to the whole wire buffer, then the
+    bucket walk. Diagnostics (``vote_margin``/``vote_agreement``) are
+    computed once over the flat buffer's true coordinates — the padded
+    lanes the bucketed wire adds are never observed."""
+    axes = tuple(axes)
+    honest = flatten_signs(plan, tree)
+    eff = honest
+    if byz is not None and axes:
+        eff = byzantine.apply_adversary(eff, byz, axes, step=step,
+                                        salt=salt)
+    flat_votes, new_state = plan_vote_signs(plan, eff, axes, server_state)
+    diag = {}
+    if diagnostics:
+        m = num_voters(axes) if axes else 1
+        if axes:
+            counts = jax.lax.psum(eff.astype(jnp.int32), axes)
+        else:
+            counts = eff.astype(jnp.int32)
+        diag["vote_margin"] = (jnp.sum(jnp.abs(counts))
+                               / (plan.n_params * m))
+        diag["vote_agreement"] = jnp.mean(
+            (honest == flat_votes).astype(jnp.float32))
+    return unflatten_votes(plan, flat_votes, tree), new_state, diag
+
+
+# ---------------------------------------------------------------------------
+# execution: the host-local stacked path (kernels)
+# ---------------------------------------------------------------------------
+
+
+def plan_vote_stacked(plan: VotePlan, stacked: jax.Array,
+                      use_kernels: bool = True) -> jax.Array:
+    """Host-local simulation path over a stacked (M, n_params) buffer:
+    ONE fused sign+pack+popcount kernel launch per bucket, each on the
+    bucket's uniform shape (the leaf-wise path launched once per leaf).
+    1-bit buckets take the Pallas kernel; ternary buckets take the jnp
+    ternary tally (their 2-bit wire has no binary-majority kernel).
+
+    Realises the GATHERED wire only: the fused kernel's binary majority
+    (ties → +1) is ``allgather_1bit``'s tie rule, not the count wires',
+    and it has no server-state decode — plans whose schedule needs
+    either are rejected rather than silently mis-decoded (use
+    :func:`plan_vote_signs` / ``virtual_plan_vote`` for those)."""
+    from repro.kernels import ops
+    votes = []
+    for bucket in plan.buckets:
+        if bucket.strategy != VoteStrategy.ALLGATHER_1BIT:
+            raise ValueError(
+                f"plan_vote_stacked realises the gathered 1-bit wire; "
+                f"bucket strategy {bucket.strategy.value!r} has different "
+                "tie semantics (use plan_vote_signs / virtual_plan_vote)")
+        if bucket.codec == "weighted_vote":
+            raise ValueError(
+                "plan_vote_stacked has no server-state decode; route "
+                "weighted_vote plans through virtual_plan_vote")
+        seg = stacked[:, bucket.start:bucket.start + bucket.length]
+        if bucket.codec == "ternary2bit":
+            s = sc.sign_ternary(seg)
+            padded, _ = sc.pad_last(s, sc.PACK2)
+            maj = sc.ternary_majority(sc.pack_ternary(padded))
+            votes.append(sc.unpack_ternary(maj, jnp.int8)[:bucket.length])
+        elif use_kernels:
+            packed = ops.fused_majority(seg)
+            votes.append(ops.bitunpack(packed, bucket.length, jnp.int8))
+        else:
+            padded, _ = sc.pad_last(seg, sc.PACK)
+            maj = sc.packed_majority(sc.pack_signs(padded))
+            votes.append(sc.unpack_signs(maj, jnp.int8)[:bucket.length])
+    return jnp.concatenate(votes) if len(votes) > 1 else votes[0]

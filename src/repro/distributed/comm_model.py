@@ -2,24 +2,39 @@
 
 Used by the speedup benchmarks (Fig. 5/6 analogs) to convert collective
 bytes — either analytic (core.majority_vote.comm_bytes_per_step) or parsed
-from compiled HLO (launch.hlo_stats) — into estimated wall-clock, and by
-the roofline's collective term.
+from compiled HLO (launch.hlo_stats) — into estimated wall-clock, by the
+roofline's collective term, and by the VotePlan AUTO selector
+(core.vote_plan), which prices a whole bucket schedule.
+
+Every message costs ``alpha + bytes / BW`` per hop class: the alpha term
+(launch + sync latency) is PER COLLECTIVE, which is the whole point of
+bucketing — a tree of L small leaf messages pays L·alpha where one flat
+buffer in ceil(n/bucket) messages pays far fewer. Pricing L messages as
+one big one (total bytes, a single alpha) silently biases any selector
+toward chatty schedules; :func:`schedule_time` is the multi-message
+entry point that keeps the latency terms honest.
 
 Constants (per the brief): 197 TFLOP/s bf16/chip, 819 GB/s HBM,
 ~50 GB/s/link ICI. v5e has a 2D torus, 4 ICI links per chip (2 per axis);
 cross-pod (DCI) bandwidth is taken at 25 GB/s per chip-pair link.
+``ALPHA_ICI`` is backed out empirically by ``benchmarks/bench_comm.py``
+(``fig5/alpha_*`` rows): it fits t(n) = alpha + beta·n over the fused
+vote kernel at two sizes on the measurement host — the same two-point
+fit one would run against real collective timings on hardware — and
+reports the fitted alpha next to this constant so drift is visible.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Iterable, Tuple
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
 ICI_BW_PER_LINK = 50e9       # bytes/s
 ICI_LINKS = 4                # 2D torus
 DCI_BW = 25e9                # bytes/s per chip (cross-pod)
-ALPHA_ICI = 1e-6             # per-collective latency (s)
-ALPHA_DCI = 10e-6
+ALPHA_ICI = 1e-6             # per-collective latency (s); see module doc
+ALPHA_DCI = 10e-6            # per cross-pod collective
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,12 +46,32 @@ class CommEstimate:
 
 def collective_time(bytes_ici: float, bytes_dci: float = 0.0,
                     n_collectives: int = 1) -> CommEstimate:
-    """Per-chip transit bytes -> seconds (bandwidth + latency terms)."""
+    """Per-chip transit bytes -> seconds (bandwidth + latency terms) for
+    ONE message of `n_collectives` chained collectives."""
     t = (bytes_ici / (ICI_BW_PER_LINK * ICI_LINKS)
          + bytes_dci / DCI_BW
          + n_collectives * ALPHA_ICI
          + (ALPHA_DCI if bytes_dci else 0.0))
     return CommEstimate(bytes_ici, bytes_dci, t)
+
+
+def schedule_time(messages: Iterable[Tuple[float, float, int]]
+                  ) -> CommEstimate:
+    """α–β time of a static schedule of collective messages.
+
+    `messages` yields ``(bytes_ici, bytes_dci, n_collectives)`` per
+    message (e.g. one VotePlan bucket each). Unlike summing bytes and
+    calling :func:`collective_time` once, every message pays its own
+    latency term — L leaf-sized messages genuinely cost L·alpha more
+    than one flat message of the same total bytes, which is the bias the
+    bucketed schedule exists to remove."""
+    ici = dci = t = 0.0
+    for b_ici, b_dci, n_coll in messages:
+        est = collective_time(b_ici, b_dci, n_collectives=n_coll)
+        ici += b_ici
+        dci += b_dci
+        t += est.time_s
+    return CommEstimate(ici, dci, t)
 
 
 def compute_time(flops_per_chip: float, mfu: float = 0.5) -> float:

@@ -100,6 +100,31 @@ def codec_vote_with_failures(engine, signs: jax.Array,
     return engine.vote_codec(signs, step, server_state)
 
 
+def plan_vote_with_failures(engine, plan, values: jax.Array,
+                            prev_signs: Optional[jax.Array] = None,
+                            n_stale: int = 0, step=None,
+                            server_state=None):
+    """Bucketed :func:`vote_with_failures` (DESIGN.md §9): the SAME
+    failure composition — stale-vote substitution, then the engine's
+    compiled adversary — applied ONCE to the flat wire buffer, then the
+    :class:`~repro.core.vote_plan.VotePlan` schedule walked bucket by
+    bucket through the production stage methods. Returns
+    ``(vote, new_server_state)``; `values` is the replica-local flat
+    (n_params,) real buffer in manifest order."""
+    from repro.core import byzantine, sign_compress as sc
+    from repro.core import vote_plan as vp
+    if n_stale and prev_signs is not None:
+        mask = straggler_mask_for(engine.axes, n_stale, like=values)
+        values = simulate_stragglers(values, prev_signs, mask)
+    signs = sc.sign_ternary(values)
+    if engine.byz is not None and engine.axes:
+        signs = byzantine.apply_adversary(signs, engine.byz, engine.axes,
+                                          step=step, salt=engine.salt)
+    vote, new_state = vp.plan_vote_signs(plan, signs, engine.axes,
+                                         server_state)
+    return vote.astype(values.dtype), new_state
+
+
 # ---------------------------------------------------------------------------
 # elastic rescale
 # ---------------------------------------------------------------------------

@@ -3,11 +3,19 @@
 Handle arbitrary 1-D/N-D inputs (pad + reshape to the kernels' tiled 2-D
 layout), and dispatch ``interpret=True`` automatically on non-TPU backends
 so the same call sites work in CPU tests and on real hardware.
+
+Every wrapper counts its invocations in :data:`LAUNCHES` (one wrapper
+call = one ``pallas_call`` in the lowered program, so inside ``jit`` the
+count taken at trace time equals launches per execution). The VotePlan
+benchmark (``benchmarks/bench_vote_plan.py``) reads these counters to
+prove the bucketed path issues one fused-kernel launch per bucket where
+the leaf-wise path launched once per tensor.
 """
 from __future__ import annotations
 
+import collections
 import functools
-from typing import Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +28,17 @@ PACK = 32
 PACK2 = 16
 TILE = 8 * 128 * PACK  # elements per (ROWS, WORDS*32) block
 TILE2 = 8 * 128 * PACK2  # elements per (ROWS, WORDS*16) ternary block
+
+#: kernel-launch accounting: wrapper name -> invocation count
+LAUNCHES: "collections.Counter[str]" = collections.Counter()
+
+
+def reset_launch_counts() -> None:
+    LAUNCHES.clear()
+
+
+def launch_counts() -> Dict[str, int]:
+    return dict(LAUNCHES)
 
 
 def _interpret() -> bool:
@@ -38,6 +57,7 @@ def _to_2d(flat: jax.Array) -> Tuple[jax.Array, int]:
 def bitpack(x: jax.Array) -> jax.Array:
     """Any-shape real array -> (ceil(n/32),) uint32 of packed sign bits
     (padding bits are sign(0)=+1)."""
+    LAUNCHES["bitpack"] += 1
     flat2d, n = _to_2d(x.reshape(-1))
     packed = _bp.bitpack_2d(flat2d, interpret=_interpret())
     return packed.reshape(-1)[: -(-n // PACK)]
@@ -45,6 +65,7 @@ def bitpack(x: jax.Array) -> jax.Array:
 
 def bitunpack(packed: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
     """(w,) uint32 -> (n,) ±1 `dtype` (first n of 32*w)."""
+    LAUNCHES["bitunpack"] += 1
     w = packed.shape[0]
     rem = (-w) % (8 * 128)
     if rem:
@@ -57,6 +78,7 @@ def bitunpack(packed: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
 def fused_majority(x: jax.Array) -> jax.Array:
     """(M, n) real voter values -> (ceil(n/32),) uint32 packed majority in
     ONE pass (fused sign+bitpack+popcount; ties and padding -> sign(0)=+1)."""
+    LAUNCHES["fused_majority"] += 1
     m, n = x.shape
     rem = (-n) % (128 * PACK)
     if rem:
@@ -67,6 +89,7 @@ def fused_majority(x: jax.Array) -> jax.Array:
 
 def majority(packed: jax.Array) -> jax.Array:
     """(M, w) uint32 -> (w,) packed majority (ties -> +1)."""
+    LAUNCHES["majority"] += 1
     m, w = packed.shape
     rem = (-w) % _vt.WBLOCK
     if rem:
@@ -77,6 +100,7 @@ def majority(packed: jax.Array) -> jax.Array:
 def ternary_pack(s: jax.Array) -> jax.Array:
     """Any-shape ternary sign array -> (ceil(n/16),) uint32 of packed 2-bit
     symbols (padding fields are 0 = abstain)."""
+    LAUNCHES["ternary_pack"] += 1
     flat = s.reshape(-1).astype(jnp.int32)
     n = flat.shape[0]
     rem = (-n) % TILE2
@@ -88,7 +112,10 @@ def ternary_pack(s: jax.Array) -> jax.Array:
 
 
 def ternary_unpack(packed: jax.Array, n: int, dtype=jnp.int8) -> jax.Array:
-    """(w,) uint32 -> (n,) {-1,0,+1} `dtype` (first n of 16*w)."""
+    """(w,) uint32 -> (n,) {-1,0,+1} `dtype` (first n of 16*w).
+
+    Not counted in LAUNCHES: this wrapper lowers to the pure-jnp oracle,
+    no pallas_call."""
     from repro.core import sign_compress as sc
     return sc.unpack_ternary(packed, dtype)[:n]
 
@@ -96,6 +123,7 @@ def ternary_unpack(packed: jax.Array, n: int, dtype=jnp.int8) -> jax.Array:
 def ternary_majority(packed: jax.Array) -> jax.Array:
     """(M, w) uint32 packed ternary -> (w,) packed ternary majority
     (abstentions abstain, ties -> 0)."""
+    LAUNCHES["ternary_majority"] += 1
     m, w = packed.shape
     rem = (-w) % _tp.WBLOCK
     if rem:
@@ -106,6 +134,7 @@ def ternary_majority(packed: jax.Array) -> jax.Array:
 def momentum_sign_pack(g: jax.Array, m: jax.Array, beta: float
                        ) -> Tuple[jax.Array, jax.Array]:
     """Flat g/m (n,) -> (m_new (n,), packed (ceil(n/32),))."""
+    LAUNCHES["momentum_sign_pack"] += 1
     n = g.shape[0]
     g2, _ = _to_2d(g)
     m2, _ = _to_2d(m)
@@ -117,6 +146,7 @@ def momentum_sign_pack(g: jax.Array, m: jax.Array, beta: float
 def apply_vote(p: jax.Array, votes: jax.Array, eta: float,
                weight_decay: float) -> jax.Array:
     """Flat p (n,), votes (ceil(n/32),) packed -> updated p (n,)."""
+    LAUNCHES["apply_vote"] += 1
     n = p.shape[0]
     p2, _ = _to_2d(p)
     w = votes.shape[0]

@@ -111,7 +111,9 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
             record["remat"] = tcfg.remat
             art = TS.make_train_step(cfg, tcfg, mesh)
             # post-resolution (AUTO has been priced against the mesh here)
-            record["vote_strategy"] = art.vote_strategy.value
+            record["vote_strategy"] = (
+                art.vote_strategy.value if art.vote_strategy is not None
+                else "per_bucket")   # mixed-strategy VotePlan schedule
             p_abs, o_abs = TS.abstract_state(cfg, tcfg, art, mesh)
             batch_struct = M.input_specs(cfg, cell)["batch"]
             batch_abs = {

@@ -36,17 +36,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
-from repro.checkpoint.checkpoint import refit_leading_axis
+from repro.checkpoint.checkpoint import (refit_leading_axis,
+                                         refit_tree_leading_axis)
 from repro.configs.base import VoteStrategy
 from repro.core import codecs as codecs_mod
 from repro.core import sign_compress as sc
 from repro.core.vote_engine import STRATEGIES, VoteEngine
 from repro.distributed.fault_tolerance import (codec_vote_with_failures,
                                                count_for_fraction,
+                                               plan_vote_with_failures,
                                                vote_with_failures)
 from repro.sim.scenario import ScenarioSpec
-from repro.sim.virtual_mesh import (VirtualVoteEngine, virtual_vote,
-                                    virtual_vote_codec)
+from repro.sim.virtual_mesh import (VirtualVoteEngine, virtual_plan_vote,
+                                    virtual_vote, virtual_vote_codec)
 
 BACKENDS = ("virtual", "mesh")
 
@@ -89,10 +91,23 @@ class ScenarioTrace:
         wire_scale = (codec.bits_per_param / impl.wire_bits_per_param
                       if self.spec.strategy == VoteStrategy.ALLGATHER_1BIT
                       else 1.0)
-        est = wire_scale * float(
-            np.mean([impl.estimated_time(d, s.n_workers)
-                     for s in self.steps]))
+        if self.spec.plan.enabled:
+            # bucketed wire: price the WHOLE schedule (one alpha term per
+            # bucket message — comm_model.schedule_time); one plan build
+            # per distinct voter count, not per step
+            plans = {m: self.spec.runtime_plan(m)
+                     for m in {s.n_workers for s in self.steps}}
+            est = float(np.mean(
+                [plans[s.n_workers].schedule_cost(s.n_workers)
+                 for s in self.steps]))
+            n_buckets = plans[self.steps[0].n_workers].n_buckets
+        else:
+            est = wire_scale * float(
+                np.mean([impl.estimated_time(d, s.n_workers)
+                         for s in self.steps]))
+            n_buckets = 0
         return {
+            "plan_buckets": n_buckets,
             "scenario": self.spec.name,
             "strategy": self.spec.strategy.value,
             "codec": self.spec.codec,
@@ -192,6 +207,9 @@ class ScenarioRunner:
                                  codec=spec.codec)
         beta = spec.momentum
         has_ef = codec.worker_state
+        # the bucketed wire schedule (§9); rebuilt per segment because
+        # only the hierarchical alignment depends on the voter count
+        plan = spec.runtime_plan(m)
 
         @jax.jit
         def prepare(x, v, err, prev, cstate, noise, step):
@@ -203,11 +221,15 @@ class ScenarioRunner:
             t = err + v2 if has_ef else v2
             fresh = sc.sign_ternary(t)
             eff = veng.effective_signs(t, prev, n_stale, step)
-            # honest-majority oracle through the SAME codec decode; state
+            # honest-majority oracle through the SAME codec decode (and
+            # the same bucket schedule when the plan axis is on); state
             # is read-only here — the oracle must not advance the
             # reliability EMA
-            oracle, _ = virtual_vote_codec(fresh, spec.strategy,
-                                           spec.codec, cstate)
+            if plan is not None:
+                oracle, _ = virtual_plan_vote(fresh, plan, cstate)
+            else:
+                oracle, _ = virtual_vote_codec(fresh, spec.strategy,
+                                               spec.codec, cstate)
             counts = jnp.sum(eff.astype(jnp.int32), axis=0)
             margin = jnp.mean(jnp.abs(counts).astype(jnp.float32)) / m
             return v2, t, fresh, eff, oracle, margin
@@ -227,16 +249,19 @@ class ScenarioRunner:
             return t - scale * vote[None, :].astype(t.dtype)
 
         if self.backend == "mesh":
-            mesh_vote = self._mesh_vote_fn(m, byz, n_stale)
+            mesh_vote = self._mesh_vote_fn(m, byz, n_stale, plan)
         else:
             mesh_vote = None
-        return prepare, finish, ef_feedback, mesh_vote, byz_cfg, n_stale
+        return (prepare, finish, ef_feedback, mesh_vote, byz_cfg, n_stale,
+                plan)
 
-    def _mesh_vote_fn(self, m: int, byz, n_stale: int):
+    def _mesh_vote_fn(self, m: int, byz, n_stale: int, plan=None):
         """jit(shard_map(vote_with_failures)) over an M-wide 'data' axis —
         the production wire path on real mesh replicas. Codec-parametric:
         non-default codecs route through ``codec_vote_with_failures``,
-        server-stateful ones thread their replicated decode memory."""
+        server-stateful ones thread their replicated decode memory, and a
+        plan-enabled spec walks the bucket schedule through
+        ``plan_vote_with_failures`` (§9)."""
         from jax.sharding import Mesh, PartitionSpec as P
         spec = self.spec
         codec = codecs_mod.get_codec(spec.codec)
@@ -249,6 +274,32 @@ class ScenarioRunner:
             manual = {"data"}
         engine = VoteEngine(strategy=spec.strategy, axes=("data",),
                             byz=byz, salt=spec.salt, codec=spec.codec)
+
+        if plan is not None:
+            if plan.has_server_state:
+                def f_plan_state(vals, prev, step, cstate):
+                    out, new_state = plan_vote_with_failures(
+                        engine, plan, vals[0], prev[0], n_stale=n_stale,
+                        step=step, server_state=cstate)
+                    return out[None], new_state
+
+                sh = compat.shard_map(
+                    f_plan_state, mesh=mesh,
+                    in_specs=(P("data"), P("data"), P(), P()),
+                    out_specs=(P("data"), P()), axis_names=manual,
+                    check_vma=False)
+                return jax.jit(sh)
+
+            def f_plan(vals, prev, step):
+                out, _ = plan_vote_with_failures(
+                    engine, plan, vals[0], prev[0], n_stale=n_stale,
+                    step=step)
+                return out[None]
+
+            sh = compat.shard_map(
+                f_plan, mesh=mesh, in_specs=(P("data"), P("data"), P()),
+                out_specs=P("data"), axis_names=manual, check_vma=False)
+            return jax.jit(sh)
 
         if codec.server_state:
             def f_state(vals, prev, step, cstate):
@@ -295,14 +346,20 @@ class ScenarioRunner:
         v = jnp.zeros((m, spec.dim), jnp.float32)        # per-worker momentum
         # codec worker state: the EF residual, stacked like the momentum
         err = jnp.zeros((m, spec.dim), jnp.float32)
-        # codec server state: replicated decode memory (reliability EMA)
-        cstate = (codec.init_server_state(m) if codec.server_state else {})
         # last step's locally COMPUTED signs (pre-stale, pre-adversary):
         # that is what a straggler re-submits; failures then apply to the
         # substituted vector (vote_with_failures order)
         prev = jnp.zeros((m, spec.dim), jnp.int8)
-        prepare, finish, ef_feedback, mesh_vote, byz_cfg, n_stale = \
+        prepare, finish, ef_feedback, mesh_vote, byz_cfg, n_stale, plan = \
             self._segment(m)
+        # codec server state: replicated decode memory (reliability EMA);
+        # under a plan the schedule's codec set decides what exists
+        if plan is not None:
+            cstate = plan.init_server_state(m)
+        else:
+            cstate = (codec.init_server_state(m) if codec.server_state
+                      else {})
+        stateful = bool(cstate)
         digest = hashlib.sha256()
         steps: List[StepTrace] = []
         for step in range(spec.n_steps):
@@ -319,12 +376,13 @@ class ScenarioRunner:
                     np.asarray(err), (m_now, spec.dim)))
                 prev = jnp.asarray(refit_leading_axis(
                     np.asarray(prev), (m_now, spec.dim)))
-                cstate = {k: jnp.asarray(refit_leading_axis(
-                    np.asarray(a), (m_now,) + tuple(a.shape[1:])))
-                    for k, a in cstate.items()}
+                cstate = jax.tree.map(
+                    jnp.asarray, refit_tree_leading_axis(
+                        cstate, {k: (m_now,) + tuple(a.shape[1:])
+                                 for k, a in cstate.items()}))
                 m = m_now
                 prepare, finish, ef_feedback, mesh_vote, byz_cfg, \
-                    n_stale = self._segment(m)
+                    n_stale, plan = self._segment(m)
             noise = _noise(spec, step, m)
             step_t = jnp.int32(step)
             v, t, fresh, eff, oracle, margin = prepare(x, v, err, prev,
@@ -335,7 +393,7 @@ class ScenarioRunner:
                 # outputs committed to one segment's mesh devices would
                 # conflict with the next segment's (smaller) mesh
                 args = (np.asarray(t), np.asarray(prev), np.int32(step))
-                if codec.server_state:
+                if stateful:
                     out, new_state = mesh_vote(
                         *args, {k: np.asarray(a) for k, a in
                                 cstate.items()})
@@ -344,6 +402,8 @@ class ScenarioRunner:
                 else:
                     out = mesh_vote(*args)
                 vote = jnp.asarray(np.asarray(out)[0].astype(np.int8))
+            elif plan is not None:
+                vote, cstate = virtual_plan_vote(eff, plan, cstate)
             else:
                 vote, cstate = virtual_vote_codec(eff, spec.strategy,
                                                   spec.codec, cstate)

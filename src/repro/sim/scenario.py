@@ -71,6 +71,45 @@ class AdversarySpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class PlanSpec:
+    """The scenario's VotePlan axis (DESIGN.md §9).
+
+    ``bucket_bytes = 0`` (the default) keeps the legacy single-shot wire
+    — the whole gradient voted in one pack/exchange/tally/unpack round.
+    ``bucket_bytes > 0`` builds a :class:`~repro.core.vote_plan.VotePlan`
+    over the drill's flat buffer and BOTH backends (mesh and virtual)
+    walk the same bucket schedule, so plan digests stay backend- and
+    host-count-invariant like everything else in the lab.
+
+    `leaves` names segments of the flat buffer (``(("embed", 48),
+    ("body", 208))``; lengths must sum to ``dim``; empty = one segment
+    ``"x"`` of the whole dim) purely so `codec_map` has names to glob
+    against — e.g. ternary embeddings + sign1bit body. Worker-state
+    codecs (``ef_sign``) cannot appear in the map (the drill keeps its
+    EF residual whole-buffer at the spec level); they remain valid as
+    the spec-level ``codec``.
+    """
+
+    bucket_bytes: int = 0
+    codec_map: Tuple[Tuple[str, str], ...] = ()
+    leaves: Tuple[Tuple[str, int], ...] = ()
+
+    def __post_init__(self):
+        if self.bucket_bytes < 0:
+            raise ValueError(f"bucket_bytes {self.bucket_bytes} < 0")
+        if (self.codec_map or self.leaves) and not self.enabled:
+            raise ValueError("codec_map/leaves need bucket_bytes > 0")
+
+    @property
+    def enabled(self) -> bool:
+        return self.bucket_bytes > 0
+
+    def leaf_shapes(self, dim: int) -> Dict[str, Tuple[int, ...]]:
+        leaves = self.leaves or (("x", dim),)
+        return {name: (int(length),) for name, length in leaves}
+
+
+@dataclasses.dataclass(frozen=True)
 class ElasticEvent:
     """At `step`, rescale the voter set to `n_workers` (shrink = node
     deaths, grow = nodes joining). Per-worker momentum is refit by the
@@ -106,6 +145,7 @@ class ScenarioSpec:
     learning_rate: float = 0.05
     momentum: float = 0.9               # per-worker (Mode A) beta; 0 = signSGD
     codec: str = "sign1bit"             # gradient codec (DESIGN.md §8)
+    plan: PlanSpec = PlanSpec()         # bucketed wire schedule (§9)
 
     def __post_init__(self):
         if self.strategy == VoteStrategy.AUTO:
@@ -117,16 +157,41 @@ class ScenarioSpec:
         from repro.core import codecs as codecs_mod
         c = codecs_mod.get_codec(self.codec)   # raises on unknown codec
         c.validate_strategy(self.strategy)
-        ties = c.ties(self.strategy)
-        if self.tie_break != "auto" and self.tie_break != ties:
-            raise ValueError(
-                f"codec {self.codec!r} over {self.strategy.value} resolves "
-                f"ties to {ties!r}; a {self.tie_break!r} tie policy would "
-                "need a different wire format (DESIGN.md §5/§8)")
+        # tie_break must be realisable by EVERY codec actually on the
+        # wire — under a plan codec_map that is the mapped set, not just
+        # the spec-level codec
+        if self.tie_break != "auto":
+            for name in self.wire_codecs():
+                ties = codecs_mod.get_codec(name).ties(self.strategy)
+                if self.tie_break != ties:
+                    raise ValueError(
+                        f"codec {name!r} over {self.strategy.value} "
+                        f"resolves ties to {ties!r}; a "
+                        f"{self.tie_break!r} tie policy would need a "
+                        "different wire format (DESIGN.md §5/§8/§9)")
         if not 0.0 <= self.straggler_fraction <= 1.0:
             raise ValueError("straggler_fraction not in [0, 1]")
         if self.n_workers < 1 or self.n_steps < 1 or self.dim < 1:
             raise ValueError(f"bad scenario sizes in {self.name!r}")
+        if self.plan.enabled:
+            shapes = self.plan.leaf_shapes(self.dim)
+            if len(shapes) != len(self.plan.leaves or ("x",)):
+                raise ValueError(
+                    f"duplicate plan leaf names in {self.name!r}")
+            if sum(s[0] for s in shapes.values()) != self.dim or \
+                    any(s[0] < 1 for s in shapes.values()):
+                raise ValueError(
+                    f"plan leaves of {self.name!r} must be positive and "
+                    f"sum to dim={self.dim}")
+            for _, codec_name in self.plan.codec_map:
+                mc = codecs_mod.get_codec(codec_name)
+                mc.validate_strategy(self.strategy)
+                if mc.worker_state:
+                    raise ValueError(
+                        f"codec {codec_name!r} carries per-worker state "
+                        "and cannot appear in a scenario codec_map (use "
+                        "the spec-level codec field; the drill's EF "
+                        "residual is whole-buffer)")
         steps = [e.step for e in self.elastic]
         if steps != sorted(steps) or len(set(steps)) != len(steps):
             raise ValueError("elastic events must be strictly step-sorted")
@@ -137,12 +202,28 @@ class ScenarioSpec:
     def salt(self) -> int:
         return scenario_salt(self.name)
 
+    def wire_codecs(self) -> Tuple[str, ...]:
+        """The codecs actually on the wire, resolved per leaf when a
+        plan codec_map is set (sorted, deduplicated); just the
+        spec-level codec otherwise."""
+        if not (self.plan.enabled and self.plan.codec_map):
+            return (self.codec,)
+        from repro.core.vote_plan import resolve_codec_map
+        per_leaf = resolve_codec_map(
+            sorted(self.plan.leaf_shapes(self.dim)),
+            self.plan.codec_map, self.codec)
+        return tuple(sorted(set(per_leaf.values())))
+
     @property
     def tie_policy(self) -> str:
         """The resolved tie convention ("zero" or "plus_one") — the
-        codec's, which may override the wire strategy's (§8)."""
+        codec's, which may override the wire strategy's (§8). A plan
+        whose codec map mixes conventions reports "mixed": per-bucket
+        codecs deliver per-segment tie semantics on one wire (§9)."""
         from repro.core import codecs as codecs_mod
-        return codecs_mod.get_codec(self.codec).ties(self.strategy)
+        ties = {codecs_mod.get_codec(n).ties(self.strategy)
+                for n in self.wire_codecs()}
+        return ties.pop() if len(ties) == 1 else "mixed"
 
     def workers_at(self, step: int) -> int:
         """Voter count in effect at `step` under the elastic schedule."""
@@ -151,6 +232,21 @@ class ScenarioSpec:
             if ev.step <= step:
                 n = ev.n_workers
         return n
+
+    def runtime_plan(self, data_size: int):
+        """The concrete :class:`~repro.core.vote_plan.VotePlan` for a
+        voter-set size (rebuilt at elastic boundaries: only the
+        hierarchical wire's bucket alignment depends on it), or None
+        when the plan axis is disabled."""
+        if not self.plan.enabled:
+            return None
+        from repro.core import vote_plan as vp
+        return vp.build_plan(self.plan.leaf_shapes(self.dim),
+                             bucket_bytes=self.plan.bucket_bytes,
+                             codec_map=self.plan.codec_map,
+                             default_codec=self.codec,
+                             strategy=self.strategy,
+                             data_size=data_size)
 
     # ---- (de)serialisation ----
 
@@ -171,6 +267,14 @@ class ScenarioSpec:
             d["elastic"] = tuple(
                 e if isinstance(e, ElasticEvent) else ElasticEvent(**e)
                 for e in d["elastic"])
+        if "plan" in d and isinstance(d["plan"], dict):
+            p = dict(d["plan"])
+            # JSON turns the nested tuples into lists; re-freeze them
+            p["codec_map"] = tuple(
+                (str(g), str(c)) for g, c in p.get("codec_map", ()))
+            p["leaves"] = tuple(
+                (str(n), int(ln)) for n, ln in p.get("leaves", ()))
+            d["plan"] = PlanSpec(**p)
         return cls(**d)
 
 

@@ -113,6 +113,64 @@ def virtual_vote_codec(signs: jax.Array, strategy: VoteStrategy,
     raise ValueError(f"virtual mesh cannot realise codec {codec!r}")
 
 
+@functools.partial(jax.jit, static_argnames=("plan",))
+def virtual_plan_vote(signs: jax.Array, plan, server_state=None):
+    """(M, n_params) stacked int8 signs -> ((n_params,) int8 votes, new
+    server state) through a :class:`~repro.core.vote_plan.VotePlan`
+    bucket schedule (DESIGN.md §9), exchange virtualised per bucket
+    exactly like :func:`virtual_vote_codec`.
+
+    Walks the SAME static schedule the mesh backend's
+    ``fault_tolerance.plan_vote_with_failures`` walks — same bucket
+    slices, same stage methods, same single padded lane set in the
+    ragged last bucket of each group — so plan drills hold the lab's
+    mesh == virtual bit-identity. Server-stateful buckets decode under
+    weights FIXED for the step; ONE flip-rate EMA update folds across
+    the schedule, normalised by the weighted buckets' true coordinate
+    count (padding lanes cropped before decoding, as everywhere)."""
+    from repro.core.codecs.ternary import TERNARY_WIRE
+    from repro.core.vote_engine import STRATEGIES as _S
+    state = dict(server_state) if server_state else {}
+    m, n = signs.shape
+    if n != plan.n_params:
+        raise ValueError(f"stacked buffer has {n} coords, plan manifest "
+                         f"says {plan.n_params}")
+    w = None
+    if plan.has_server_state:
+        from repro.core.codecs import weighted
+        if "flip_ema" not in state:
+            raise ValueError("plan carries a server-stateful codec; "
+                             "thread its server state through "
+                             "virtual_plan_vote")
+        w = weighted.reliability_weights(state["flip_ema"])
+    votes, mismatch, total_w = [], None, 0
+    for bucket in plan.buckets:
+        seg = signs[:, bucket.start:bucket.start + bucket.length]
+        if bucket.codec == "weighted_vote":
+            from repro.core.codecs import weighted
+            wire = _S[VoteStrategy.ALLGATHER_1BIT].pack(seg, m)
+            # crop the padding lanes before decoding (they always agree
+            # with the vote and would dilute the flip observations)
+            stacked = sc.unpack_signs(wire, jnp.int8)[:, :bucket.length]
+            vote, mis = weighted.decode_leaf_fixed(stacked, w)
+            mismatch = mis if mismatch is None else mismatch + mis
+            total_w += bucket.length
+        elif bucket.codec == "ternary2bit" \
+                and bucket.strategy == VoteStrategy.ALLGATHER_1BIT:
+            wire = TERNARY_WIRE.pack(seg, m)
+            vote = TERNARY_WIRE.unpack(TERNARY_WIRE.tally(wire, m),
+                                       bucket.length, jnp.int8)
+        else:
+            vote = virtual_vote(seg, bucket.strategy)
+        votes.append(vote)
+    if mismatch is not None:
+        from repro.core.codecs import weighted
+        state["flip_ema"] = ((1.0 - weighted.RHO) * state["flip_ema"]
+                             + weighted.RHO * mismatch / total_w)
+    out = jnp.concatenate(votes) if len(votes) > 1 else votes[0]
+    return out, state
+
+
 @dataclasses.dataclass(frozen=True)
 class VirtualVoteEngine:
     """`core.vote_engine.VoteEngine` semantics on a stacked voter dim.

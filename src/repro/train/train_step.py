@@ -34,6 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import compat
 from repro.configs.base import (ModelConfig, MomentumMode, TrainConfig,
                                 VoteStrategy)
+from repro.core import vote_plan as vp
 from repro.core.majority_vote import make_fsdp_hooks
 from repro.core.signum import build_optimizer
 from repro.core.vote_engine import resolve_strategy
@@ -103,8 +104,11 @@ class StepArtifacts:
     n_vote_replicas: int
     vote_axes: Tuple[str, ...]
     fused_leaves: Tuple[str, ...]
-    vote_strategy: Optional[VoteStrategy] = None  # resolved (never AUTO)
+    #: resolved (never AUTO); under a plan, the schedule's strategy when
+    #: unique, None for mixed-strategy schedules (see `plan`)
+    vote_strategy: Optional[VoteStrategy] = None
     codec: str = "sign1bit"            # resolved gradient codec (§8)
+    plan: Optional[vp.VotePlan] = None  # bucketed wire schedule (§9)
 
 
 # ---------------------------------------------------------------------------
@@ -150,12 +154,42 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
         if any("data" in (e if isinstance(e, tuple) else (e,))
                for e in s if e is not None)) if fused else ()
 
+    # VotePlan (§9): flatten the explicitly-voted leaves (everything the
+    # fused ZeRO backward does NOT already vote) into one bucketed wire
+    # buffer. Built here, once — shapes, mesh sizes and codec map are all
+    # static — with the ORIGINAL strategy so AUTO prices the whole bucket
+    # schedule per codec group instead of one tree-sized message.
+    plan = None
+    if is_sign and opt_cfg.bucket_bytes > 0:
+        # Mode B consults voted_leaves and votes only the raw remainder
+        # explicitly; Mode A votes the FULL momentum tree regardless of
+        # FSDP hooks, so its plan must cover every leaf
+        explicit = ({k: v for k, v in shapes.items()
+                     if k not in fused_leaves}
+                    if opt_cfg.momentum_mode == MomentumMode.GLOBAL
+                    else dict(shapes))
+        if explicit:
+            plan = vp.build_plan(
+                explicit, bucket_bytes=opt_cfg.bucket_bytes,
+                codec_map=opt_cfg.codec_map, default_codec=codec_name,
+                strategy=tcfg.optimizer.vote_strategy,
+                data_size=sizes.get("data", 1),
+                pod_size=sizes.get("pod", 1),
+                dtypes={k: cfg.dtype for k in explicit})
+            # the plan's schedule is the wire that actually compiles:
+            # report ITS resolution (None when a mixed map resolved
+            # different strategies per group — art.plan has the detail),
+            # not the leaf-wise single-message pricing
+            group_strats = {g.strategy for g in plan.groups}
+            resolved = (group_strats.pop() if len(group_strats) == 1
+                        else None)
+
     # byz also passes to the optimizer: non-FSDP leaves vote explicitly and
     # the same replicas must act adversarially on them.
     opt = build_optimizer(opt_cfg, vote_axes, byz=byz,
                           fused_leaves=fused_leaves,
                           diagnostics=tcfg.diagnostics,
-                          n_vote_replicas=n_votes)
+                          n_vote_replicas=n_votes, plan=plan)
 
     def loss_of(p, b):
         return M.loss_fn(cfg, p, b, hook=hook, remat=tcfg.remat)
@@ -238,7 +272,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
             param_shard_specs={k: P() for k in specs}, opt_specs=None,
             batch_spec=None, n_vote_replicas=1, vote_axes=(),
             fused_leaves=fused_leaves, vote_strategy=resolved,
-            codec=codec_name)
+            codec=codec_name, plan=plan)
 
     manual = vote_axes
     p_manual = {k: _manual_only(s, manual) for k, s in specs.items()}
@@ -251,12 +285,15 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     opt_manual: Dict[str, Any] = {}
     for key in state_shape:
         if key in ("momentum", "error"):
+            # "error" may be a subset of the params under a plan codec
+            # map (only the EF-mapped leaves carry a residual)
+            names = tuple(state_shape[key])
             if per_worker:
                 opt_manual[key] = {
                     k: P(manual, *_manual_only(specs[k], manual))
-                    for k in shapes}
+                    for k in names}
             else:
-                opt_manual[key] = dict(p_manual)
+                opt_manual[key] = {k: p_manual[k] for k in names}
         elif key in ("m", "v"):  # dense-baseline moments follow params
             opt_manual[key] = dict(p_manual)
         else:
@@ -280,7 +317,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
         opt_specs=opt_manual, batch_spec=batch_spec,
         n_vote_replicas=n_votes, vote_axes=vote_axes,
         fused_leaves=fused_leaves, vote_strategy=resolved,
-        codec=codec_name)
+        codec=codec_name, plan=plan)
 
 
 # ---------------------------------------------------------------------------
@@ -314,24 +351,33 @@ def abstract_state(cfg: ModelConfig, tcfg: TrainConfig, art: StepArtifacts,
                  and opt_cfg.kind in ("signum_vote", "signsgd_vote", "sgdm",
                                       "adam"))
 
-    def momentum_like():
+    def momentum_like(names=None):
+        keep = shapes if names is None else {k: shapes[k] for k in names}
         if per_worker:
             return {k: mk((art.n_vote_replicas,) + v, mom_dt,
                           P(art.vote_axes or None, *art.param_specs[k]))
-                    for k, v in shapes.items()}
+                    for k, v in keep.items()}
         return {k: mk(v, mom_dt, art.param_specs[k])
-                for k, v in shapes.items()}
+                for k, v in keep.items()}
 
     if is_sign and needs_mom:
         opt_state["momentum"] = momentum_like()
     if is_sign:
         from repro.core import codecs as codecs_mod
         codec = codecs_mod.get_codec(opt_cfg.resolved_codec)
-        if codec.worker_state:   # EF residual: momentum-shaped (§8)
-            opt_state["error"] = momentum_like()
-        if codec.server_state:   # decode memory: replicated (M,) vector
-            opt_state["codec"] = {
-                "flip_ema": mk((art.n_vote_replicas,), jnp.float32, P())}
+        if art.plan is not None:   # per-leaf codecs come from the plan (§9)
+            ef_names = art.plan.worker_state_leaves
+            if ef_names:   # EF residual: momentum-shaped, mapped leaves only
+                opt_state["error"] = momentum_like(ef_names)
+            if art.plan.has_server_state:
+                opt_state["codec"] = {
+                    "flip_ema": mk((art.n_vote_replicas,), jnp.float32, P())}
+        else:
+            if codec.worker_state:   # EF residual: momentum-shaped (§8)
+                opt_state["error"] = momentum_like()
+            if codec.server_state:   # decode memory: replicated (M,) vector
+                opt_state["codec"] = {
+                    "flip_ema": mk((art.n_vote_replicas,), jnp.float32, P())}
     if opt_cfg.kind in ("sgdm", "adam"):
         opt_state["m"] = {k: mk(v, jnp.float32, art.param_specs[k])
                           for k, v in shapes.items()}

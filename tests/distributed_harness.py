@@ -5,6 +5,8 @@ Validates on an 8-device (data=4, model=2) mesh:
   1. tree_vote strategies == flat numpy reference (incl. Byzantine);
   2. fused ZeRO gather-vote backward == per-replica sign/sum/sign;
   3. Mode A mesh train step == single-process per-worker-vote reference;
+  3b. VotePlan bucketed step == leaf-wise step bit for bit (sign1bit),
+      mixed-codec plan compiles and trains (DESIGN.md §9);
   4. Mode B fused train step runs and learns;
   5. dense SGDM baseline mesh step == psum-mean reference;
   6. stale-vote straggler substitution preserves convergence direction.
@@ -146,6 +148,43 @@ def check_mode_a_matches_reference():
     print("OK Mode A mesh == flat reference")
 
 
+def check_vote_plan_mode_a():
+    """The bucketed wire (§9) on the real 8-device step: sign1bit votes
+    are coordinate-wise majorities, so the VotePlan step must land
+    BIT-IDENTICAL params to the leaf-wise step; a mixed-codec plan on
+    the gathered wire must compile and train."""
+    cfg = reduced_config(get_config("glm4-9b"), num_layers=2)
+
+    def step_once(**opt_kw):
+        tcfg = TrainConfig(global_batch=8, seq_len=32,
+                           optimizer=OptimizerConfig(
+                               kind="signum_vote", learning_rate=3e-3,
+                               **opt_kw))
+        art = TS.make_train_step(cfg, tcfg, mesh=MESH)
+        params, opt = TS.materialize_state(cfg, tcfg, art,
+                                           jax.random.PRNGKey(0), MESH)
+        batch = _mesh_batch(M.make_batch(cfg, 8, 32, jax.random.PRNGKey(1)))
+        params, opt, met = art.step_fn(params, opt, batch, jnp.int32(0))
+        return art, params, float(met["loss"])
+
+    _, p_leaf, _ = step_once()
+    art, p_plan, _ = step_once(bucket_bytes=4096)
+    assert art.plan is not None and art.plan.n_buckets > 1, \
+        "plan step must actually bucket the wire"
+    for k in p_leaf:
+        np.testing.assert_array_equal(
+            np.asarray(p_leaf[k], np.float32),
+            np.asarray(p_plan[k], np.float32), err_msg=k)
+    art2, _, loss2 = step_once(
+        bucket_bytes=4096, vote_strategy=VoteStrategy.ALLGATHER_1BIT,
+        codec_map=(("embed*", "ternary2bit"), ("*", "sign1bit")))
+    assert {g.codec for g in art2.plan.groups} == \
+        {"ternary2bit", "sign1bit"}
+    assert np.isfinite(loss2)
+    print(f"OK VotePlan Mode A: {art.plan.n_buckets}-bucket step == "
+          f"leaf-wise bitwise; mixed-codec plan trains ({loss2:.2f})")
+
+
 def check_mode_b_learns():
     cfg = reduced_config(get_config("glm4-9b"), num_layers=2)
     tcfg = TrainConfig(
@@ -224,6 +263,7 @@ if __name__ == "__main__":
     check_byzantine_vote()
     check_fused_gather_vote()
     check_mode_a_matches_reference()
+    check_vote_plan_mode_a()
     check_mode_b_learns()
     check_dense_baseline_matches_mean()
     check_stale_votes()

@@ -1,0 +1,110 @@
+"""Property-based tests (hypothesis) for the VotePlan subsystem
+(DESIGN.md §9):
+
+* the layout manifest partitions [0, n_params) exactly — every leaf
+  once, no gaps, no overlaps — for arbitrary tree structures;
+* flatten → bucket → vote → unflatten is the identity against the
+  whole-buffer codec decode for EVERY codec, under arbitrary voter
+  counts, dims and bucket sizes (the bucket cut is semantics-free);
+* bucket counts respect the ceil(n·bits/(8·bucket_bytes)) bound at any
+  bucket_bytes;
+* the weighted codec's one-EMA-update-per-step rule is invariant to the
+  bucket cut.
+
+``hypothesis`` is optional: without it this module skips (tier-1 covers
+the same invariants deterministically in tests/test_vote_plan.py).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; deterministic "
+    "equivalents live in tests/test_vote_plan.py")
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import VoteStrategy
+from repro.core import codecs, vote_plan as vp
+from repro.core.codecs import weighted as wv
+from repro.sim.virtual_mesh import virtual_plan_vote, virtual_vote_codec
+
+leaf_names = st.text(
+    alphabet="abcdefgh.", min_size=1, max_size=12).filter(
+    lambda s: s.strip("."))
+tree_shapes = st.dictionaries(
+    leaf_names,
+    st.lists(st.integers(1, 7), min_size=0, max_size=3).map(tuple),
+    min_size=1, max_size=8)
+
+
+@given(tree_shapes, st.integers(1, 64))
+@settings(max_examples=100, deadline=None)
+def test_manifest_partitions_exactly(shapes, bucket_bytes):
+    plan = vp.build_plan(shapes, bucket_bytes=bucket_bytes)
+    total = sum(int(np.prod(s)) for s in shapes.values())
+    assert plan.n_params == total
+    spans = sorted((s.offset, s.offset + s.length) for s in plan.leaves)
+    assert spans[0][0] == 0 and spans[-1][1] == total
+    assert all(a[1] == b[0] for a, b in zip(spans, spans[1:]))
+    bspans = sorted((b.start, b.start + b.length) for b in plan.buckets)
+    assert bspans[0][0] == 0 and bspans[-1][1] == total
+    assert all(a[1] == b[0] for a, b in zip(bspans, bspans[1:]))
+    assert plan.n_buckets <= sum(
+        -(-g.total * int(codecs.get_codec(g.codec).bits_per_param)
+          // (8 * bucket_bytes)) + 1 for g in plan.groups)
+
+
+@given(st.integers(2, 12), st.integers(1, 120), st.integers(1, 16),
+       st.sampled_from(sorted(codecs.list_codecs())), st.randoms())
+@settings(max_examples=100, deadline=None)
+def test_bucket_cut_is_semantics_free(m, n, bucket_bytes, codec, rnd):
+    """Any bucket cut decodes identically to the whole-buffer codec wire
+    (vote AND server state)."""
+    strategy = VoteStrategy.ALLGATHER_1BIT
+    signs = np.array([[rnd.choice([-1, 0, 1]) for _ in range(n)]
+                      for _ in range(m)], np.int8)
+    plan = vp.build_plan({"x": (n,)}, bucket_bytes=bucket_bytes,
+                         strategy=strategy, default_codec=codec)
+    state = codecs.get_codec(codec).init_server_state(m)
+    got, new_state = virtual_plan_vote(jnp.asarray(signs), plan, state)
+    want, want_state = virtual_vote_codec(jnp.asarray(signs), strategy,
+                                          codec, state)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    for k in state:
+        np.testing.assert_allclose(np.asarray(new_state[k]),
+                                   np.asarray(want_state[k]), rtol=1e-6)
+
+
+@given(tree_shapes, st.integers(1, 32), st.randoms())
+@settings(max_examples=50, deadline=None)
+def test_flatten_unflatten_identity_arbitrary_trees(shapes, bucket_bytes,
+                                                    rnd):
+    tree = {k: jnp.asarray(np.asarray(
+        [rnd.gauss(0, 1) for _ in range(int(np.prod(s)))],
+        np.float32).reshape(s)) for k, s in shapes.items()}
+    plan = vp.build_plan(shapes, bucket_bytes=bucket_bytes)
+    flat = vp.flatten_signs(plan, tree)
+    back = vp.unflatten_votes(plan, flat, tree)
+    for k, leaf in tree.items():
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.sign(np.asarray(leaf)))
+
+
+@given(st.integers(2, 10), st.integers(2, 80), st.integers(1, 10),
+       st.randoms())
+@settings(max_examples=50, deadline=None)
+def test_weighted_ema_invariant_to_bucket_cut(m, n, bucket_bytes, rnd):
+    signs = np.array([[rnd.choice([-1, 1]) for _ in range(n)]
+                      for _ in range(m)], np.int8)
+    ema = np.asarray([rnd.uniform(0.05, 0.7) for _ in range(m)],
+                     np.float32)
+    vote_ref, ema_ref = wv.decode_stacked(jnp.asarray(signs),
+                                          jnp.asarray(ema))
+    plan = vp.build_plan({"x": (n,)}, bucket_bytes=bucket_bytes,
+                         strategy=VoteStrategy.ALLGATHER_1BIT,
+                         default_codec="weighted_vote")
+    vote, state = virtual_plan_vote(jnp.asarray(signs), plan,
+                                    {"flip_ema": jnp.asarray(ema)})
+    np.testing.assert_array_equal(np.asarray(vote), np.asarray(vote_ref))
+    np.testing.assert_allclose(np.asarray(state["flip_ema"]),
+                               np.asarray(ema_ref), rtol=1e-6)

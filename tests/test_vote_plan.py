@@ -1,0 +1,361 @@
+"""VotePlan subsystem tests (DESIGN.md §9) — tier-1, single device.
+
+Covers: deterministic layout manifest + bucket schedule (alignment, the
+ragged last bucket, the ceil bucket-count bound), first-match glob codec
+maps, the flatten→bucket→unflatten identity for every codec
+(deterministic twins of tests/test_plan_properties.py), schedule-cost
+pricing under the per-message α–β model, the stacked kernel path's
+one-launch-per-bucket accounting, the optimizer plan path's exact
+equality with the leaf-wise wire, and the checkpoint save/refit/restore
+round-trip of bucketed EF residual and flip-EMA state.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import OptimizerConfig, VoteStrategy
+from repro.core import codecs, sign_compress as sc, vote_plan as vp
+from repro.core.codecs import weighted as wv
+from repro.core.signum import build_optimizer
+from repro.distributed import comm_model
+from repro.sim.virtual_mesh import virtual_plan_vote, virtual_vote_codec
+
+RNG = np.random.default_rng(0)
+
+SHAPES = {"embed.table": (7, 9), "layers.w_gate": (5, 11),
+          "layers.norm": (3,), "unembed.table": (6, 4)}
+
+
+def _tree(shapes=SHAPES, dtypes=None):
+    return {k: jnp.asarray(RNG.normal(size=s).astype(
+        (dtypes or {}).get(k, np.float32))) for k, s in shapes.items()}
+
+
+# ---------------------------------------------------------------------------
+# building: manifest + schedule
+# ---------------------------------------------------------------------------
+
+
+def test_manifest_is_deterministic_and_covers_every_leaf_once():
+    p1 = vp.build_plan(SHAPES, bucket_bytes=8)
+    p2 = vp.build_plan(dict(reversed(list(SHAPES.items()))), bucket_bytes=8)
+    assert p1 == p2                          # insertion order is irrelevant
+    assert p1.n_params == sum(int(np.prod(s)) for s in SHAPES.values())
+    seen = sorted((s.offset, s.offset + s.length) for s in p1.leaves)
+    assert seen[0][0] == 0 and seen[-1][1] == p1.n_params
+    for (_, e), (b, _) in zip(seen, seen[1:]):
+        assert e == b                        # no gaps, no overlaps
+    assert {s.name for s in p1.leaves} == set(SHAPES)
+
+
+def test_buckets_align_and_only_last_is_ragged():
+    plan = vp.build_plan({"a": (200,)}, bucket_bytes=8)  # 64-elem buckets
+    lens = [b.length for b in plan.buckets]
+    assert lens == [64, 64, 64, 8]
+    assert all(b.length % vp.ALIGN == 0 for b in plan.buckets[:-1])
+    starts = [b.start for b in plan.buckets]
+    assert starts == [0, 64, 128, 192]
+
+
+def test_bucket_count_bound_holds():
+    """n_buckets <= ceil(n_params * bits / (8 * bucket_bytes)) — the
+    acceptance bound: rounding bucket length UP to the alignment can only
+    reduce the count."""
+    for n in (31, 64, 1000, 4097):
+        for bb in (1, 3, 8, 100):
+            plan = vp.build_plan({"a": (n,)}, bucket_bytes=bb)
+            assert plan.n_buckets <= -(-n // (8 * bb)), (n, bb)
+            assert sum(b.length for b in plan.buckets) == n
+
+
+def test_hierarchical_buckets_align_to_data_size():
+    plan = vp.build_plan({"a": (2000,)}, bucket_bytes=8,
+                         strategy=VoteStrategy.HIERARCHICAL, data_size=8)
+    assert all(b.length % (vp.ALIGN * 8) == 0 for b in plan.buckets[:-1])
+
+
+def test_codec_map_first_match_wins_and_groups_are_contiguous():
+    plan = vp.build_plan(
+        SHAPES, bucket_bytes=16,
+        codec_map=(("embed*", "ternary2bit"), ("*.table", "weighted_vote"),
+                   ("*", "sign1bit")),
+        strategy=VoteStrategy.ALLGATHER_1BIT)
+    lc = plan.leaf_codecs()
+    assert lc["embed.table"] == "ternary2bit"      # first match, not *.table
+    assert lc["unembed.table"] == "weighted_vote"
+    assert lc["layers.w_gate"] == "sign1bit"
+    for g in plan.groups:
+        assert all(g.start <= b.start < g.start + g.total
+                   for b in g.buckets)
+        assert all(b.codec == g.codec for b in g.buckets)
+    assert plan.has_server_state                   # weighted in the map
+
+
+def test_build_validation():
+    with pytest.raises(ValueError, match="unknown codec"):
+        vp.build_plan(SHAPES, bucket_bytes=8, codec_map=(("*", "morse"),))
+    with pytest.raises(ValueError, match="bucket_bytes"):
+        vp.build_plan(SHAPES, bucket_bytes=0)
+    with pytest.raises(ValueError, match="empty"):
+        vp.build_plan(SHAPES, bucket_bytes=8, codec_map=(("", "sign1bit"),))
+    with pytest.raises(ValueError):
+        vp.build_plan({}, bucket_bytes=8)
+    with pytest.raises(ValueError, match="cannot ride"):
+        vp.build_plan(SHAPES, bucket_bytes=8,
+                      codec_map=(("*", "weighted_vote"),),
+                      strategy=VoteStrategy.PSUM_INT8)
+
+
+def test_auto_prices_the_whole_schedule():
+    # tiny buckets on a wide mesh: per-message alpha dominates, so AUTO
+    # must refuse the two-collective hierarchical wire
+    plan = vp.build_plan({"a": (100_000,)}, bucket_bytes=256,
+                         strategy=VoteStrategy.AUTO, data_size=16)
+    assert plan.groups[0].strategy != VoteStrategy.HIERARCHICAL
+    # single replica degenerates to the count wire, no pricing needed
+    plan1 = vp.build_plan({"a": (64,)}, bucket_bytes=8, data_size=1)
+    assert plan1.groups[0].strategy == VoteStrategy.PSUM_INT8
+
+
+def test_schedule_cost_scales_with_bucket_count():
+    one = vp.build_plan({"a": (65536,)}, bucket_bytes=1 << 20,
+                        strategy=VoteStrategy.ALLGATHER_1BIT)
+    many = vp.build_plan({"a": (65536,)}, bucket_bytes=64,
+                         strategy=VoteStrategy.ALLGATHER_1BIT)
+    assert many.n_buckets > one.n_buckets == 1
+    # same bytes, more alpha terms: strictly more expensive
+    assert many.schedule_cost(16) > one.schedule_cost(16)
+
+
+def test_comm_model_schedule_time_prices_per_message():
+    one = comm_model.collective_time(1e6).time_s
+    many = comm_model.schedule_time([(1e4, 0.0, 1)] * 100).time_s
+    assert many == pytest.approx(one + 99 * comm_model.ALPHA_ICI)
+    est = comm_model.schedule_time([(1e4, 2e3, 2), (1e4, 0.0, 1)])
+    assert est.bytes_ici == 2e4 and est.bytes_dci == 2e3
+
+
+# ---------------------------------------------------------------------------
+# flatten -> bucket -> unflatten identity (deterministic twins)
+# ---------------------------------------------------------------------------
+
+
+def test_flatten_unflatten_roundtrip_mixed_dtypes():
+    dtypes = {"embed.table": np.float32, "layers.w_gate": np.float16,
+              "layers.norm": np.float32, "unembed.table": np.float32}
+    tree = _tree(dtypes=dtypes)
+    plan = vp.build_plan(SHAPES, bucket_bytes=4)
+    flat = vp.flatten_signs(plan, tree)
+    assert flat.shape == (plan.n_params,) and flat.dtype == jnp.int8
+    back = vp.unflatten_votes(plan, flat, tree)
+    for k, leaf in tree.items():
+        assert back[k].dtype == leaf.dtype and back[k].shape == leaf.shape
+        np.testing.assert_array_equal(
+            np.asarray(back[k], np.float32),
+            np.sign(np.asarray(leaf, np.float32)))
+
+
+def test_flatten_rejects_shape_drift():
+    tree = _tree()
+    plan = vp.build_plan(SHAPES, bucket_bytes=4)
+    tree["layers.norm"] = jnp.zeros((4,), jnp.float32)
+    with pytest.raises(ValueError, match="manifest"):
+        vp.flatten_signs(plan, tree)
+
+
+@pytest.mark.parametrize("codec", codecs.list_codecs())
+def test_identity_under_every_codec_virtual(codec):
+    """flatten -> bucket -> vote -> unflatten == the whole-buffer codec
+    decode, for every codec and an uneven bucket cut (the deterministic
+    twin of the hypothesis property)."""
+    strategy = VoteStrategy.ALLGATHER_1BIT
+    m, n = 9, 61
+    signs = jnp.asarray(RNG.integers(-1, 2, size=(m, n)).astype(np.int8))
+    plan = vp.build_plan({"x": (n,)}, bucket_bytes=4, strategy=strategy,
+                         default_codec=codec)
+    state = codecs.get_codec(codec).init_server_state(m)
+    got, new_state = virtual_plan_vote(signs, plan, state)
+    want, want_state = virtual_vote_codec(signs, strategy, codec, state)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    for k in state:
+        np.testing.assert_allclose(np.asarray(new_state[k]),
+                                   np.asarray(want_state[k]), rtol=1e-6)
+
+
+def test_weighted_multi_bucket_ema_matches_whole_buffer():
+    """Weights are fixed for the step and the flip observations fold into
+    ONE EMA update over the flat buffer's true coordinates, so any bucket
+    cut produces the same decode AND the same new state."""
+    m, n = 8, 100
+    signs = jnp.asarray(np.where(RNG.integers(0, 2, size=(m, n)), 1, -1)
+                        .astype(np.int8))
+    ema = jnp.asarray(RNG.uniform(0.1, 0.6, size=(m,)).astype(np.float32))
+    vote_ref, ema_ref = wv.decode_stacked(signs, ema)
+    for bb in (2, 5, 13):
+        plan = vp.build_plan({"x": (n,)}, bucket_bytes=bb,
+                             strategy=VoteStrategy.ALLGATHER_1BIT,
+                             default_codec="weighted_vote")
+        vote, state = virtual_plan_vote(signs, plan, {"flip_ema": ema})
+        np.testing.assert_array_equal(np.asarray(vote),
+                                      np.asarray(vote_ref))
+        np.testing.assert_allclose(np.asarray(state["flip_ema"]),
+                                   np.asarray(ema_ref), rtol=1e-6)
+
+
+def test_plan_vote_stacked_kernel_path_matches_virtual_walk():
+    from repro.kernels import ops
+    m, n = 7, 333
+    stacked = jnp.asarray(RNG.normal(size=(m, n)).astype(np.float32))
+    plan = vp.build_plan({"a": (128,), "b": (205,)}, bucket_bytes=8,
+                         strategy=VoteStrategy.ALLGATHER_1BIT)
+    ops.reset_launch_counts()
+    got = vp.plan_vote_stacked(plan, stacked)
+    assert ops.launch_counts()["fused_majority"] == plan.n_buckets
+    want, _ = virtual_plan_vote(sc.sign_binary(stacked), plan, {})
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    jnp_path = vp.plan_vote_stacked(plan, stacked, use_kernels=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(jnp_path))
+
+
+# ---------------------------------------------------------------------------
+# optimizer plan path (single-process; the mesh twin lives in
+# tests/distributed_harness.py)
+# ---------------------------------------------------------------------------
+
+
+def _opt_cfg(**kw):
+    return OptimizerConfig(kind="signum_vote", learning_rate=0.05, **kw)
+
+
+def test_optimizer_plan_path_matches_leafwise_exactly():
+    params = _tree()
+    grads = _tree()
+    legacy = build_optimizer(_opt_cfg(), ())
+    plan = vp.build_plan(SHAPES, bucket_bytes=8)
+    planned = build_optimizer(_opt_cfg(bucket_bytes=8), (), plan=plan)
+    s0, s1 = legacy.init(params), planned.init(params)
+    p0, s0, _ = legacy.update(grads, s0, params, jnp.int32(0))
+    p1, s1, _ = planned.update(grads, s1, params, jnp.int32(0))
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(p0[k]), np.asarray(p1[k]))
+        np.testing.assert_array_equal(np.asarray(s0["momentum"][k]),
+                                      np.asarray(s1["momentum"][k]))
+
+
+def test_optimizer_plan_ef_subset_state():
+    plan = vp.build_plan(SHAPES, bucket_bytes=8,
+                         codec_map=(("embed*", "ef_sign"),))
+    assert plan.worker_state_leaves == ("embed.table",)
+    opt = build_optimizer(_opt_cfg(bucket_bytes=8,
+                                   codec_map=(("embed*", "ef_sign"),)),
+                          (), plan=plan)
+    params = _tree()
+    state = opt.init(params)
+    assert sorted(state["error"]) == ["embed.table"]
+    p1, state, _ = opt.update(_tree(), state, params, jnp.int32(0))
+    # the residual moved for the EF leaf and only exists there
+    assert sorted(state["error"]) == ["embed.table"]
+    assert float(jnp.sum(jnp.abs(state["error"]["embed.table"]))) > 0
+
+
+def test_codec_map_without_bucket_bytes_is_rejected():
+    # the map rides the plan wire only: accepting it with the plan
+    # disabled would silently train every leaf on the default codec
+    with pytest.raises(ValueError, match="bucket_bytes > 0"):
+        OptimizerConfig(codec_map=(("embed*", "ternary2bit"),))
+    OptimizerConfig(codec_map=(("embed*", "ternary2bit"),),
+                    bucket_bytes=4096)   # the valid spelling
+
+
+def test_plan_vote_stacked_rejects_non_gathered_wires():
+    stacked = jnp.asarray(RNG.normal(size=(4, 64)).astype(np.float32))
+    psum_plan = vp.build_plan({"a": (64,)}, bucket_bytes=8,
+                              strategy=VoteStrategy.PSUM_INT8)
+    with pytest.raises(ValueError, match="gathered 1-bit wire"):
+        vp.plan_vote_stacked(psum_plan, stacked)
+    w_plan = vp.build_plan({"a": (64,)}, bucket_bytes=8,
+                           strategy=VoteStrategy.ALLGATHER_1BIT,
+                           default_codec="weighted_vote")
+    with pytest.raises(ValueError, match="server-state"):
+        vp.plan_vote_stacked(w_plan, stacked)
+
+
+def test_optimizer_plan_ef_requires_mode_a():
+    from repro.configs.base import MomentumMode
+    plan = vp.build_plan(SHAPES, bucket_bytes=8,
+                         codec_map=(("*", "ef_sign"),))
+    with pytest.raises(ValueError, match="per_worker"):
+        build_optimizer(_opt_cfg(bucket_bytes=8,
+                                 codec_map=(("*", "ef_sign"),),
+                                 momentum_mode=MomentumMode.GLOBAL),
+                        (), plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip of bucketed plan state (§6/§9)
+# ---------------------------------------------------------------------------
+
+
+def test_refit_tree_leading_axis():
+    from repro.checkpoint.checkpoint import refit_tree_leading_axis
+    tree = {"error": {"a": np.ones((8, 3)), "b": np.ones((8, 2))},
+            "codec": {"flip_ema": np.arange(8, dtype=np.float32)}}
+    want = {"error": {"a": (6, 3), "b": (6, 2)}, "codec": {"flip_ema": (6,)}}
+    out = refit_tree_leading_axis(tree, want)
+    assert out["error"]["a"].shape == (6, 3)
+    np.testing.assert_array_equal(out["codec"]["flip_ema"],
+                                  np.arange(6, dtype=np.float32))
+    grown = refit_tree_leading_axis(out, {"error": {"a": (9, 3),
+                                                    "b": (9, 2)},
+                                          "codec": {"flip_ema": (9,)}})
+    assert grown["codec"]["flip_ema"][6:].tolist() == [0.0, 0.0, 0.0]
+    with pytest.raises(ValueError, match="structure mismatch"):
+        refit_tree_leading_axis(tree, {"error": {"a": (6, 3)}})
+
+
+def test_checkpoint_roundtrip_of_bucketed_plan_state(tmp_path):
+    """Save a plan-configured optimizer state (per-worker EF residual for
+    the mapped leaves + replicated flip-EMA), restore under a SMALLER
+    voter set: every per-worker buffer refits by the §6 rule, bit-exact
+    for the survivors, zero (the uninformed prior) for joiners."""
+    from repro.checkpoint import checkpoint as ckpt
+    m_old, m_new = 8, 6
+    shapes = {"embed.table": (4, 3), "layers.w": (5,)}
+    opt_state = {
+        "count": np.asarray(7, np.int32),
+        "momentum": {k: RNG.normal(size=(m_old,) + s).astype(np.float32)
+                     for k, s in shapes.items()},
+        "error": {"embed.table":
+                  RNG.normal(size=(m_old, 4, 3)).astype(np.float32)},
+        "codec": {"flip_ema":
+                  RNG.uniform(0, 1, size=(m_old,)).astype(np.float32)},
+    }
+    params = {k: RNG.normal(size=s).astype(np.float32)
+              for k, s in shapes.items()}
+    ckpt.save(str(tmp_path), 7, params, opt_state)
+    like_opt = {
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+        "momentum": {k: jax.ShapeDtypeStruct((m_new,) + s, jnp.float32)
+                     for k, s in shapes.items()},
+        "error": {"embed.table":
+                  jax.ShapeDtypeStruct((m_new, 4, 3), jnp.float32)},
+        "codec": {"flip_ema":
+                  jax.ShapeDtypeStruct((m_new,), jnp.float32)},
+    }
+    _, opt_back, _, _ = ckpt.restore(str(tmp_path), like_opt=like_opt)
+    np.testing.assert_array_equal(
+        opt_back["error"]["embed.table"],
+        opt_state["error"]["embed.table"][:m_new])
+    np.testing.assert_array_equal(opt_back["codec"]["flip_ema"],
+                                  opt_state["codec"]["flip_ema"][:m_new])
+    # regrow: joiners at zero residual / uninformed prior
+    like_opt9 = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((9,) + s.shape[1:], s.dtype)
+        if s.shape and s.shape[0] == m_new else s, like_opt)
+    _, opt9, _, _ = ckpt.restore(str(tmp_path), like_opt=like_opt9)
+    assert opt9["codec"]["flip_ema"].shape == (9,)
+    np.testing.assert_array_equal(opt9["codec"]["flip_ema"][8:], [0.0])
+    np.testing.assert_array_equal(opt9["error"]["embed.table"][8:], 0.0)

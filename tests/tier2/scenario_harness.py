@@ -35,8 +35,8 @@ from repro.compat import AxisType
 from repro.configs.base import ByzantineConfig, VoteStrategy
 from repro.core import byzantine, sign_compress as sc
 from repro.distributed import fault_tolerance as ft
-from repro.sim import (AdversarySpec, ElasticEvent, ScenarioRunner,
-                       ScenarioSpec)
+from repro.sim import (AdversarySpec, ElasticEvent, PlanSpec,
+                       ScenarioRunner, ScenarioSpec)
 
 RNG = np.random.default_rng(0)
 
@@ -80,6 +80,30 @@ def harness_specs():
                      codec="weighted_vote",
                      adversary=AdversarySpec("sign_flip", 0.375),
                      elastic=(ElasticEvent(4, 6, "pod loss"),)),
+        # VotePlan axis (DESIGN.md §9): bucketed wire schedules through
+        # the same mesh==virtual and host-count-invariance gauntlet —
+        # a mixed-codec plan under a colluding coalition, a weighted
+        # plan crossing an elastic rescale, and a bucketed hierarchical
+        # wire with stragglers
+        ScenarioSpec("h8/plan_mixed_collude", n_workers=8, n_steps=6,
+                     dim=128, strategy=S.ALLGATHER_1BIT,
+                     adversary=AdversarySpec("colluding", 0.375),
+                     plan=PlanSpec(bucket_bytes=8,
+                                   leaves=(("embed.table", 48),
+                                           ("body.w", 80)),
+                                   codec_map=(("embed*", "ternary2bit"),
+                                              ("*", "sign1bit")))),
+        ScenarioSpec("h8/plan_weighted_elastic", n_workers=8, n_steps=8,
+                     dim=96, strategy=S.ALLGATHER_1BIT,
+                     codec="weighted_vote",
+                     adversary=AdversarySpec("sign_flip", 0.375),
+                     elastic=(ElasticEvent(4, 6, "pod loss"),),
+                     plan=PlanSpec(bucket_bytes=6)),
+        ScenarioSpec("h8/plan_hier_stale", n_workers=8, n_steps=5,
+                     dim=100, strategy=S.HIERARCHICAL,
+                     straggler_fraction=0.25,
+                     adversary=AdversarySpec("random", 0.25),
+                     plan=PlanSpec(bucket_bytes=5)),
     ]
 
 

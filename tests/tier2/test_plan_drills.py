@@ -1,0 +1,70 @@
+"""VotePlan tier-2 drill (DESIGN.md §9; scripts/ci.sh plan-smoke stage).
+
+Host-count invariance of a MIXED-CODEC plan — ternary2bit embeddings +
+sign1bit body over the gathered wire — under a 0.375 colluding-adversary
+scenario: the virtual replay on a 1-device platform, the virtual replay
+on the 8-device platform, and the REAL mesh backend (shard_map over 8
+replicas walking the same bucket schedule) must all produce one digest.
+Each platform needs its own process (XLA device count is fixed before
+jax initialises), hence the subprocess pattern of test_harness8.py.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_WORKER = textwrap.dedent("""
+    import sys
+    import jax
+    from repro.configs.base import VoteStrategy
+    from repro.sim import (AdversarySpec, PlanSpec, ScenarioRunner,
+                           ScenarioSpec)
+
+    spec = ScenarioSpec(
+        "plan-drill/mixed_collude", n_workers=8, n_steps=6, dim=256,
+        strategy=VoteStrategy.ALLGATHER_1BIT,
+        adversary=AdversarySpec("colluding", 0.375),
+        plan=PlanSpec(bucket_bytes=8,
+                      leaves=(("embed.table", 96), ("body.blocks", 160)),
+                      codec_map=(("embed*", "ternary2bit"),
+                                 ("*", "sign1bit"))))
+    print("NBUCKETS", spec.runtime_plan(8).n_buckets)
+    print("VDIGEST", ScenarioRunner(spec, backend="virtual").run().digest)
+    if sys.argv[1] == "mesh-too":
+        assert len(jax.devices()) >= 8
+        print("MDIGEST",
+              ScenarioRunner(spec, backend="mesh").run().digest)
+""")
+
+
+def _run(device_count: int, mode: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "..", "src"),
+         env.get("PYTHONPATH", "")])
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={device_count}"
+    proc = subprocess.run([sys.executable, "-c", _WORKER, mode], env=env,
+                          capture_output=True, text=True, timeout=900)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "plan drill worker failed"
+    return {line.split()[0]: line.split()[1]
+            for line in proc.stdout.splitlines()
+            if line.split() and line.split()[0] in
+            ("VDIGEST", "MDIGEST", "NBUCKETS")}
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(900)
+def test_mixed_codec_plan_is_host_count_and_backend_invariant():
+    d8 = _run(8, "mesh-too")
+    d1 = _run(1, "virtual-only")
+    assert int(d8["NBUCKETS"]) > 1, "drill must actually bucket the wire"
+    assert d8["VDIGEST"] == d8["MDIGEST"], (
+        "mixed-codec plan: mesh backend diverged from the virtual walk")
+    assert d8["VDIGEST"] == d1["VDIGEST"], (
+        "mixed-codec plan digest differs between 8-device and 1-device "
+        "replays — the bucket schedule is host-count dependent")

@@ -17,9 +17,10 @@ import pytest
 from repro.configs.base import VoteStrategy
 from repro.core import sign_compress as sc
 from repro.distributed.fault_tolerance import count_for_fraction
-from repro.sim import (AdversarySpec, ElasticEvent, ScenarioRunner,
-                       ScenarioSpec, ScenarioTrace, expand_grid, fig4_grid,
-                       load_scenarios, preset_scenarios, virtual_vote)
+from repro.sim import (AdversarySpec, ElasticEvent, PlanSpec,
+                       ScenarioRunner, ScenarioSpec, ScenarioTrace,
+                       expand_grid, fig4_grid, load_scenarios,
+                       preset_scenarios, virtual_vote)
 
 STRATS = (VoteStrategy.PSUM_INT8, VoteStrategy.ALLGATHER_1BIT,
           VoteStrategy.HIERARCHICAL)
@@ -391,6 +392,114 @@ def test_weighted_codec_learns_down_the_adversaries():
     w_flip = float(np.mean([s.flip_fraction for s in t_w.steps[learned]]))
     assert w_flip < 0.6 * plain_flip, (w_flip, plain_flip)
     assert np.isfinite([s.loss for s in t_w.steps]).all()
+
+
+def test_plan_spec_roundtrips_and_validates():
+    spec = ScenarioSpec("plan/io", n_workers=8, dim=64,
+                        strategy=VoteStrategy.ALLGATHER_1BIT,
+                        plan=PlanSpec(bucket_bytes=8,
+                                      leaves=(("embed", 32), ("body", 32)),
+                                      codec_map=(("embed*", "ternary2bit"),
+                                                 ("*", "sign1bit"))))
+    back = ScenarioSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert back == spec and back.plan.enabled
+    assert back.runtime_plan(8).n_buckets == spec.runtime_plan(8).n_buckets
+    # a pre-plan serialised spec (no "plan" key) loads with it disabled
+    legacy = {k: v for k, v in spec.to_dict().items() if k != "plan"}
+    assert not ScenarioSpec.from_dict(legacy).plan.enabled
+    with pytest.raises(ValueError, match="sum to dim"):
+        ScenarioSpec("bad", dim=64,
+                     plan=PlanSpec(bucket_bytes=8, leaves=(("a", 10),)))
+    with pytest.raises(ValueError, match="bucket_bytes > 0"):
+        PlanSpec(codec_map=(("*", "sign1bit"),))
+    # a mapped codec the wire cannot carry is rejected at spec time
+    with pytest.raises(ValueError, match="cannot ride"):
+        ScenarioSpec("bad", strategy=VoteStrategy.PSUM_INT8, dim=64,
+                     plan=PlanSpec(bucket_bytes=8,
+                                   codec_map=(("*", "weighted_vote"),)))
+    # worker-state codecs stay a spec-level choice, never a map entry
+    with pytest.raises(ValueError, match="per-worker state"):
+        ScenarioSpec("bad", strategy=VoteStrategy.ALLGATHER_1BIT, dim=64,
+                     plan=PlanSpec(bucket_bytes=8,
+                                   codec_map=(("*", "ef_sign"),)))
+    # tie_break must be realisable by the MAPPED codecs, not just the
+    # spec-level one: an all-ternary map resolves ties to 0
+    with pytest.raises(ValueError, match="resolves ties"):
+        ScenarioSpec("bad", strategy=VoteStrategy.ALLGATHER_1BIT, dim=64,
+                     tie_break="plus_one",
+                     plan=PlanSpec(bucket_bytes=8,
+                                   codec_map=(("*", "ternary2bit"),)))
+    # a map mixing conventions reports per-segment semantics honestly
+    mixed = ScenarioSpec(
+        "ok3", strategy=VoteStrategy.ALLGATHER_1BIT, dim=64,
+        plan=PlanSpec(bucket_bytes=8, leaves=(("embed", 32), ("body", 32)),
+                      codec_map=(("embed*", "ternary2bit"),
+                                 ("*", "sign1bit"))))
+    assert mixed.wire_codecs() == ("sign1bit", "ternary2bit")
+    assert mixed.tie_policy == "mixed"
+
+
+def test_golden_trace_through_single_bucket_plan():
+    """The VotePlan refactor's fixed point (§9): the sign1bit
+    single-bucket plan drives the same wire through the bucket schedule
+    and MUST reproduce the pre-plan golden digest bit for bit — and so
+    must any other bucket cut, because the sign1bit majority is
+    coordinate-wise."""
+    for bucket_bytes in (1 << 20, 4):
+        spec = ScenarioSpec.from_dict(
+            {**GOLDEN_SPEC.to_dict(),
+             "plan": {"bucket_bytes": bucket_bytes}})
+        t = ScenarioRunner(spec).run()
+        assert t.digest == GOLDEN_DIGEST, (
+            f"bucketed wire (bucket_bytes={bucket_bytes}) diverged from "
+            f"the golden trace: {t.digest}")
+
+
+def test_plan_summary_prices_the_schedule():
+    base = dict(n_workers=8, n_steps=3, dim=256,
+                strategy=VoteStrategy.ALLGATHER_1BIT)
+    s_leaf = ScenarioRunner(ScenarioSpec("plansum/a", **base)).run() \
+        .summary()
+    s_plan = ScenarioRunner(ScenarioSpec(
+        "plansum/a", plan=PlanSpec(bucket_bytes=8), **base)).run() \
+        .summary()
+    assert s_leaf["plan_buckets"] == 0
+    assert s_plan["plan_buckets"] == 4
+    # same bytes, one alpha term per bucket: the schedule prices higher
+    # than the single-message wire (the latency the plan trades against
+    # per-leaf chatter is now visible, not silently zero)
+    assert s_plan["est_exchange_time_s"] > s_leaf["est_exchange_time_s"]
+    assert s_plan["digest"] == s_leaf["digest"]   # sign1bit fixed point
+
+
+def test_plan_mixed_codec_tie_semantics():
+    """In one bucketed vote, ternary-mapped coordinates abstain on a
+    50% tie while sign1bit-mapped coordinates march +1 — per-bucket
+    codecs deliver per-segment tie semantics on a single wire."""
+    spec = ScenarioSpec(
+        "plantie/mixed", n_workers=16, n_steps=3, dim=64,
+        strategy=VoteStrategy.ALLGATHER_1BIT, noise_scale=0.0,
+        adversary=AdversarySpec("sign_flip", 0.5),
+        plan=PlanSpec(bucket_bytes=4,
+                      leaves=(("embed", 32), ("body", 32)),
+                      codec_map=(("embed*", "ternary2bit"),
+                                 ("*", "sign1bit"))))
+    t = ScenarioRunner(spec).run()
+    plan = spec.runtime_plan(16)
+    assert {g.codec for g in plan.groups} == {"ternary2bit", "sign1bit"}
+    # every count is exactly zero: margin 0, but the sign1bit segment's
+    # ties binarise to +1 so the iterate still moves
+    assert all(s.margin == 0.0 for s in t.steps)
+    assert t.steps[-1].loss != t.steps[0].loss
+    # the pure-ternary plan abstains everywhere: the iterate freezes
+    pure = ScenarioSpec(
+        "plantie/tern", n_workers=16, n_steps=3, dim=64,
+        strategy=VoteStrategy.ALLGATHER_1BIT, codec="ternary2bit",
+        noise_scale=0.0, adversary=AdversarySpec("sign_flip", 0.5),
+        plan=PlanSpec(bucket_bytes=4))
+    tp = ScenarioRunner(pure).run()
+    losses = [s.loss for s in tp.steps]
+    assert losses.count(losses[0]) == len(losses)
 
 
 def test_virtual_vote_matches_ref_oracle():
