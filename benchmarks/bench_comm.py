@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import VoteStrategy, get_config
+from repro.core import vote_api
 from repro.core.vote_engine import (STRATEGIES, VoteEngine, select_strategy)
 from repro.distributed import comm_model
 from repro.distributed.comm_model import collective_time, schedule_time
@@ -179,12 +180,15 @@ def smoke() -> int:
         print("fig5/smoke/fused_kernel_vs_oracle,1,bit-identical "
               f"(M={m_workers}, n={n})", flush=True)
 
-    # engine local tally (fused path) == engine jnp path
-    eng = VoteEngine(strategy=VoteStrategy.ALLGATHER_1BIT)
-    s_fused = np.asarray(eng.vote_stacked(jnp.asarray(x), use_kernels=True))
-    s_ref = np.asarray(eng.vote_stacked(jnp.asarray(x), use_kernels=False))
+    # the API's local tally: fused-kernel backend == jnp stage backend on
+    # the same VoteRequest (DESIGN.md §10)
+    req = vote_api.VoteRequest(payload=jnp.asarray(x), form="stacked",
+                               strategy=VoteStrategy.ALLGATHER_1BIT)
+    s_fused = np.asarray(
+        vote_api.VirtualBackend(use_kernels=True).execute(req).votes)
+    s_ref = np.asarray(vote_api.VirtualBackend().execute(req).votes)
     if not np.array_equal(s_fused, s_ref):
-        print("FAIL: engine fused tally != jnp tally", file=sys.stderr)
+        print("FAIL: fused-kernel backend != jnp backend", file=sys.stderr)
         failures += 1
     else:
         print("fig5/smoke/engine_fused_vs_jnp,1,bit-identical", flush=True)

@@ -294,6 +294,7 @@ def _mesh_harness_rows(shapes, stacked):
 
     from repro import compat
     from repro.configs.base import VoteStrategy
+    from repro.core import vote_api as va
     from repro.core import vote_plan as vp
     from repro.core.vote_engine import STRATEGIES
 
@@ -314,6 +315,8 @@ def _mesh_harness_rows(shapes, stacked):
         impl = STRATEGIES[strategy]
         slots = plan.leaves
 
+        backend = va.MeshBackend(axes=("data",))
+
         def leafwise(vals):
             v = vals[0]
             outs = [impl.vote(v[s.offset:s.offset + s.length], ("data",))
@@ -321,7 +324,8 @@ def _mesh_harness_rows(shapes, stacked):
             return jnp.concatenate(outs)[None]
 
         def bucketed(vals):
-            v, _ = vp.plan_vote_signs(plan, vals[0], ("data",))
+            v = backend.execute(va.VoteRequest(
+                payload=vals[0], form="leaf", plan=plan)).votes
             return v[None]
 
         fns = {}

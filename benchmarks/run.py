@@ -30,6 +30,9 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated module keys "
                          "(fig1..fig6,codecs,vote_plan,roofline)")
+    ap.add_argument("--list", action="store_true",
+                    help="enumerate the registered suites (key, module, "
+                         "one-line description) and exit")
     ap.add_argument("--emit-json", dest="json_out", default=None,
                     help="also write the produced rows to this JSON file")
     args = ap.parse_args()
@@ -43,6 +46,11 @@ def main() -> None:
         "codecs": bench_codecs, "vote_plan": bench_vote_plan,
         "roofline": roofline,
     }
+    if args.list:
+        for key, mod in suites.items():
+            desc = (mod.__doc__ or "").strip().splitlines()[0]
+            print(f"{key:<10s} {mod.__name__:<28s} {desc}")
+        return
     only = set(args.only.split(",")) if args.only else None
     seen_mods = set()
     print("name,value,derived")

@@ -1,33 +1,48 @@
 """Quickstart: SIGNUM with majority vote in ~40 lines.
 
-Trains a tiny glm4-family LM on the synthetic pipeline with the paper's
-optimizer (Algorithm 1), prints the loss curve, and shows the vote
-machinery explicitly on a toy tensor.
+Shows the vote machinery through its one declarative entry point — a
+``VoteRequest`` executed on a backend (DESIGN.md §10) — then trains a
+tiny glm4-family LM on the synthetic pipeline with the paper's
+optimizer (Algorithm 1), which drives the exact same API inside its
+train step.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py            # full demo
+    PYTHONPATH=src python examples/quickstart.py --steps 5  # CI smoke
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import (OptimizerConfig, TrainConfig, get_config,
-                                reduced_config)
-from repro.core import sign_compress as sc
+from repro.configs.base import (OptimizerConfig, TrainConfig, VoteStrategy,
+                                get_config, reduced_config)
+from repro.core import vote_api as va
 from repro.data.pipeline import SyntheticLMPipeline
-from repro.models import model as M
 from repro.train import train_step as TS
 
 
 def main():
-    # --- the vote itself, on a toy tensor -------------------------------
-    g = np.random.default_rng(0).normal(size=(5, 8))  # 5 workers, 8 params
-    packed = sc.pack_signs(jnp.asarray(
-        np.pad(np.sign(g), ((0, 0), (0, 24)))))       # 1 bit per sign
-    vote = sc.unpack_signs(sc.packed_majority(packed))[:8]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=50,
+                    help="LM training steps (CI smoke uses a few)")
+    args = ap.parse_args()
+
+    # --- the vote itself, declaratively ---------------------------------
+    # 5 workers, 8 params: one VoteRequest, one backend, one outcome.
+    g = np.random.default_rng(0).normal(size=(5, 8))
+    request = va.VoteRequest(payload=jnp.asarray(g, jnp.float32),
+                             form="stacked",     # (M, n): M stacked voters
+                             strategy=VoteStrategy.ALLGATHER_1BIT)
+    outcome = va.VirtualBackend().execute(request)
     print("worker signs:\n", np.sign(g).astype(int))
-    print("majority vote:", np.asarray(vote, int), "\n")
+    print("majority vote:", np.asarray(outcome.votes, int))
+    print(f"wire: {outcome.wire.payload_bytes:g} B/replica over "
+          f"{outcome.wire.n_messages} message(s) "
+          f"[{outcome.wire.strategy.value}]\n")
 
     # --- Algorithm 1 on a real (tiny) model -----------------------------
+    # The train step builds the same VoteRequest internally, per step.
     cfg = reduced_config(get_config("glm4-9b"))
     tcfg = TrainConfig(
         global_batch=8, seq_len=64,
@@ -37,11 +52,12 @@ def main():
     params, opt_state = TS.materialize_state(cfg, tcfg, art,
                                              jax.random.PRNGKey(0))
     pipe = SyntheticLMPipeline(cfg, 8, 64, seed=0)
-    for step in range(50):
+    last = args.steps - 1
+    for step in range(args.steps):
         batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
         params, opt_state, met = art.step_fn(params, opt_state, batch,
                                              jnp.int32(step))
-        if step % 10 == 0 or step == 49:
+        if step % 10 == 0 or step == last:
             print(f"step {step:3d}  loss {float(met['loss']):.4f}")
 
 

@@ -1,0 +1,77 @@
+#!/usr/bin/env python3
+"""API-surface check (scripts/ci.sh api-smoke stage; DESIGN.md §10).
+
+Greps ``src/`` and asserts that NO internal code calls a deprecated
+legacy vote entry point — the deprecation shims themselves (their `def`
+lines) are the only occurrences allowed. Tests and examples may still
+exercise the shims (that is what keeps them honest); production code
+must build a :class:`repro.core.vote_api.VoteRequest` and call a
+backend's ``execute``.
+
+Exit 0 when the surface is clean, 1 with a file:line listing otherwise.
+"""
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent / "src"
+
+#: deprecated free functions: \b<name>( is a call (or a def, excluded)
+FUNCTIONS = [
+    "vote_with_failures", "codec_vote_with_failures",
+    "plan_vote_with_failures",
+    "virtual_vote", "virtual_vote_codec", "virtual_plan_vote",
+    "plan_vote_signs", "plan_tree_vote",
+    "tree_vote", "tree_vote_codec", "majority_vote_flat",
+]
+
+#: deprecated VoteEngine methods: any .<name>( attribute call
+METHODS = [
+    "vote_signs", "vote_signs_codec", "vote_codec", "vote_tree",
+    "vote_tree_codec", "vote_stacked",
+]
+
+#: `.vote(` is also a *stage* method on VoteStrategyImpl (the §2 wire
+#: implementation, NOT deprecated) — so bare-name receivers are checked
+#: against this allowlist and only engine-shaped receivers are flagged
+VOTE_RECEIVER_ALLOWED = {"impl", "strat", "strategy", "TERNARY_WIRE"}
+VOTE_CALL = re.compile(r"(\w+)\.vote\(")
+
+PATTERNS = ([re.compile(rf"\b{n}\(") for n in FUNCTIONS]
+            + [re.compile(rf"\.{m}\(") for m in METHODS])
+
+
+def main() -> int:
+    offenders = []
+    for path in sorted(ROOT.rglob("*.py")):
+        for lineno, line in enumerate(
+                path.read_text().splitlines(), start=1):
+            if re.match(r"\s*def\s", line):     # the shim definitions
+                continue
+            if re.match(r"\s*#", line):         # comments
+                continue
+            for pat in PATTERNS:
+                if pat.search(line):
+                    offenders.append(
+                        f"{path.relative_to(ROOT.parent)}:{lineno}: "
+                        f"{line.strip()}")
+            for m in VOTE_CALL.finditer(line):
+                if m.group(1) not in VOTE_RECEIVER_ALLOWED:
+                    offenders.append(
+                        f"{path.relative_to(ROOT.parent)}:{lineno}: "
+                        f"{line.strip()}  (VoteEngine.vote?)")
+    if offenders:
+        print("deprecated vote entry points still called inside src/ "
+              "(migrate to vote_api.VoteRequest + execute):",
+              file=sys.stderr)
+        for o in offenders:
+            print("  " + o, file=sys.stderr)
+        return 1
+    print(f"api-surface OK: no internal callers of "
+          f"{len(FUNCTIONS) + len(METHODS) + 1} deprecated vote entry "
+          "points under src/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

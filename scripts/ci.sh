@@ -54,4 +54,13 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 # in the tier-2 lane above; re-invoking it here would double its
 # multi-minute subprocess replays)
 
+echo "== api smoke (vote API examples + deprecated-surface check) =="
+# the two VoteRequest-rewritten examples, CI-sized (seconds each), then
+# the grep gate: zero non-shim internal callers of a legacy vote entry
+# point under src/ (DESIGN.md §10)
+python examples/quickstart.py --steps 5
+python examples/byzantine_demo.py --smoke
+python scripts/check_api_surface.py
+python -m benchmarks.run --list
+
 echo "CI OK"

@@ -5,13 +5,14 @@ All functions here run *inside* a ``shard_map`` that is manual over the
 vote axes (``'data'`` and, multi-pod, ``'pod'``) — per-replica values are
 visible and every collective is explicit.
 
-The wire protocols themselves live in ``repro.core.vote_engine``: a
-:class:`~repro.core.vote_engine.VoteEngine` drives one of three pluggable
-strategies (``psum_int8``, ``allgather_1bit``, ``hierarchical``) through a
-pack → exchange → tally → unpack pipeline, with ``VoteStrategy.AUTO``
-resolved against the comm cost model. This module keeps the tree-level and
-ZeRO-3-fused entry points the trainer uses, plus flat per-strategy wrappers
-for tests and the distributed harness.
+The wire protocols themselves live in ``repro.core.vote_engine`` (three
+pluggable strategies — ``psum_int8``, ``allgather_1bit``,
+``hierarchical`` — through a pack → exchange → tally → unpack pipeline,
+``VoteStrategy.AUTO`` resolved against the comm cost model), and every
+vote is one ``core.vote_api.VoteRequest`` executed by a backend
+(DESIGN.md §10). This module keeps the ZeRO-3-fused hooks the trainer
+uses, the flat per-strategy wrappers for tests, and the legacy
+tree-level entry points as deprecation shims.
 
 The fused scalable path: ``make_fsdp_hooks`` returns parameter hooks that
 all-gather ZeRO-3-sharded parameters in the forward pass and perform
@@ -63,9 +64,12 @@ def vote_hierarchical(signs: jax.Array, data_axis: str,
 
 def majority_vote_flat(signs: jax.Array, strategy: VoteStrategy,
                        axes: Sequence[str]) -> jax.Array:
-    """Dispatch a flat sign tensor through the engine (AUTO resolves on the
-    tensor's own size)."""
-    return VoteEngine(strategy=strategy, axes=tuple(axes)).vote_signs(signs)
+    """DEPRECATED shim: dispatch a flat sign tensor through the wire
+    (AUTO resolves on the tensor's own size)."""
+    from repro.core import vote_api as va
+    va.warn_legacy("majority_vote.majority_vote_flat")
+    return va.MeshBackend(axes=tuple(axes)).execute(va.VoteRequest(
+        payload=signs, form="leaf", strategy=strategy)).votes
 
 
 # ---------------------------------------------------------------------------
@@ -82,26 +86,28 @@ def majority_vote_flat(signs: jax.Array, strategy: VoteStrategy,
 
 def tree_vote(tree, strategy: VoteStrategy, axes: Sequence[str],
               byz: Optional[ByzantineConfig] = None, step=None):
-    """Vote a pytree of local momenta/grads; returns ±1 tree (leaf dtypes).
-
-    With no vote axes (single process) the vote of M=1 degenerates to the
-    leaf's own sign. `step` feeds the stochastic adversary models so
-    random/blind/colluding replicas redraw their perturbation each step.
-    """
-    engine = VoteEngine(strategy=strategy, axes=tuple(axes), byz=byz)
-    return engine.vote_tree(tree, step)
+    """DEPRECATED shim: vote a pytree of local momenta/grads; returns
+    ±1 tree (leaf dtypes). With no vote axes (single process) the vote
+    of M=1 degenerates to the leaf's own sign."""
+    from repro.core import vote_api as va
+    va.warn_legacy("majority_vote.tree_vote")
+    return va.MeshBackend(axes=tuple(axes)).execute(va.VoteRequest(
+        payload=tree, form="tree", strategy=strategy,
+        failures=va.FailureSpec(byz=byz), step=step)).votes
 
 
 def tree_vote_codec(tree, strategy: VoteStrategy, axes: Sequence[str],
                     byz: Optional[ByzantineConfig] = None, step=None,
                     codec: str = "sign1bit", server_state=None):
-    """Codec-aware :func:`tree_vote` (DESIGN.md §8): returns
-    ``(±1 tree, new server state)``. With the default ``sign1bit`` codec
-    the votes are bit-identical to :func:`tree_vote`; server-stateful
-    codecs (``weighted_vote``) thread their decode memory through."""
-    engine = VoteEngine(strategy=strategy, axes=tuple(axes), byz=byz,
-                        codec=codec)
-    return engine.vote_tree_codec(tree, step, server_state)
+    """DEPRECATED shim: codec-aware :func:`tree_vote` (DESIGN.md §8);
+    returns ``(±1 tree, new server state)``."""
+    from repro.core import vote_api as va
+    va.warn_legacy("majority_vote.tree_vote_codec")
+    out = va.MeshBackend(axes=tuple(axes)).execute(va.VoteRequest(
+        payload=tree, form="tree", strategy=strategy, codec=codec,
+        failures=va.FailureSpec(byz=byz), step=step,
+        server_state=server_state))
+    return out.votes, out.server_state
 
 
 def tree_mean(tree, axes: Sequence[str]):

@@ -47,13 +47,12 @@ def pad_to_pack(flat: jax.Array, multiple: int = PACK) -> Tuple[jax.Array, int]:
 def pad_last(x: jax.Array, multiple: int) -> Tuple[jax.Array, int]:
     """Zero-pad the LAST dim to a multiple; returns (padded, original_n).
 
-    Routed through ``compat.pad_trailing`` so padding stays safe inside
-    legacy partial-auto shard_map (raw ``jnp.pad``'s constant-pad
-    lowering aborts there) — the same hardening the 1-bit wire's padding
-    already has."""
-    from repro import compat
-    n = x.shape[-1]
-    return compat.pad_trailing(x, (-n) % multiple), n
+    Delegates to the single canonical implementation in
+    ``core.vote_api.pad_last`` (DESIGN.md §10), so every wire's pad
+    semantics come from one function (lazy import: vote_api sits above
+    this module)."""
+    from repro.core.vote_api import pad_last as _impl
+    return _impl(x, multiple)
 
 
 def pack_signs(x: jax.Array) -> jax.Array:

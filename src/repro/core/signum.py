@@ -29,9 +29,9 @@ import jax.numpy as jnp
 from repro.configs.base import ByzantineConfig, MomentumMode, OptimizerConfig
 from repro.core import codecs as codecs_mod
 from repro.core import sign_compress as sc
+from repro.core import vote_api as va
 from repro.core import vote_plan as vp
-from repro.core.majority_vote import (num_voters, tree_mean, tree_vote,
-                                      tree_vote_codec)
+from repro.core.majority_vote import tree_mean
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,39 +58,9 @@ def _split(tree: Dict, names: Sequence[str]) -> Tuple[Dict, Dict]:
     return a, b
 
 
-def _agreement(local_signs: Dict, votes: Dict) -> jax.Array:
-    """Fraction of coordinates where this replica's sign matches the vote."""
-    num = sum(jnp.sum(sc.sign_ternary(l) == sc.sign_ternary(v))
-              for l, v in zip(jax.tree.leaves(local_signs),
-                              jax.tree.leaves(votes)))
-    den = sum(v.size for v in jax.tree.leaves(votes))
-    return num / den
-
-
-def _vote_margin(local: Dict, axes: Sequence[str],
-                 byz: Optional[ByzantineConfig] = None,
-                 step: Optional[jax.Array] = None) -> jax.Array:
-    """Mean |vote count| / M over all coordinates — how decisively the
-    electorate votes (1 = unanimous, ->0 = knife-edge), measured on the
-    signs that actually reach the wire: the compiled adversary model is
-    re-applied here (same replica-index/step PRNG keys as the vote), so
-    this is the same quantity the Scenario Lab traces record per step
-    (DESIGN.md §7), not the honest electorate's margin."""
-    from repro.core import byzantine
-    leaves = jax.tree.leaves(local)
-    m = num_voters(axes) if axes else 1
-    counts = []
-    for l in leaves:
-        s = sc.sign_ternary(l)
-        if byz is not None and axes:
-            s = byzantine.apply_adversary(s, byz, axes, step=step)
-        if axes:
-            counts.append(jax.lax.psum(s.astype(jnp.int32), tuple(axes)))
-        else:
-            counts.append(s.astype(jnp.int32))
-    num = sum(jnp.sum(jnp.abs(c)) for c in counts)
-    den = sum(l.size for l in leaves) * m
-    return num / den
+# (The vote_margin / vote_agreement diagnostics moved into the vote API:
+# they arrive on the VoteOutcome's WireReport, computed once per vote —
+# DESIGN.md §10.)
 
 
 # ---------------------------------------------------------------------------
@@ -176,20 +146,22 @@ def make_sign_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
         return {k: _leaf_codec(k).feedback_leaf(encoded[k], votes[k], e)
                 for k, e in err.items()}
 
+    backend = va.MeshBackend(axes=tuple(axes))
+
     def _vote(tree, step, cstate):
-        """Dispatch the explicit vote: bucketed plan walk or leaf-wise."""
-        if plan is not None:
-            return vp.plan_tree_vote(plan, tree, axes, byz, step,
-                                     server_state=cstate,
-                                     diagnostics=diagnostics)
-        votes, new_cstate = tree_vote_codec(
-            tree, cfg.vote_strategy, axes, byz, step,
-            codec=codec.name, server_state=cstate)
+        """Dispatch the explicit vote through the declarative API: one
+        VoteRequest whether the wire is the bucketed plan schedule or
+        leaf-wise — margin/agreement come back on the WireReport,
+        computed once (DESIGN.md §10)."""
+        out = backend.execute(va.VoteRequest(
+            payload=tree, form="tree", strategy=cfg.vote_strategy,
+            codec=codec.name, plan=plan, failures=va.FailureSpec(byz=byz),
+            step=step, server_state=cstate, diagnostics=diagnostics))
         diag = {}
         if diagnostics:
-            diag["vote_agreement"] = _agreement(tree, votes)
-            diag["vote_margin"] = _vote_margin(tree, axes, byz, step)
-        return votes, new_cstate, diag
+            diag["vote_agreement"] = out.wire.agreement
+            diag["vote_margin"] = out.wire.margin
+        return out.votes, out.server_state, diag
 
     def update(grads, state, params, step):
         eta = lr_at(cfg, step)

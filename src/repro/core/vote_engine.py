@@ -14,11 +14,12 @@ The paper's parameter server is a four-stage pipeline
 * **unpack**   — decode the decision back to a ±1 sign tensor.
 
 Each :class:`VoteStrategyImpl` realises those stages differently but is
-interchangeable behind :class:`VoteEngine`, which is what the trainer
-(`train/train_step.py`), the Byzantine machinery
-(`distributed/fault_tolerance.py`) and the benchmarks
-(`benchmarks/bench_comm.py`) all drive — one engine, one set of semantics,
-one accounting model.
+interchangeable behind the declarative vote API (``core.vote_api``,
+DESIGN.md §10): the trainer (`train/train_step.py`), the failure drills
+and the benchmarks all build a ``VoteRequest`` and a backend walks these
+stage methods — one wire implementation, one set of semantics, one
+accounting model. :class:`VoteEngine` remains as the legacy object whose
+vote methods are deprecation shims over that API.
 
 Strategy selection: :func:`select_strategy` prices each strategy's wire
 bytes through ``distributed.comm_model`` (alpha-beta ICI/DCI terms) for the
@@ -47,7 +48,7 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.configs.base import ByzantineConfig, VoteStrategy
-from repro.core import byzantine, sign_compress as sc
+from repro.core import sign_compress as sc
 from repro.distributed import comm_model
 
 
@@ -69,22 +70,11 @@ def num_voters(axes: Sequence[str]) -> int:
     return n
 
 
-def count_dtype(n_voters: int):
-    """Narrowest signed integer that can hold a vote count of `n_voters`."""
-    if n_voters <= 127:
-        return jnp.int8
-    if n_voters <= 32_767:
-        return jnp.int16
-    return jnp.int32
-
-
-def _count_bytes(n_voters: int) -> int:
-    return jnp.dtype(count_dtype(n_voters)).itemsize
-
-
-def _pad_last(x: jax.Array, multiple: int) -> Tuple[jax.Array, int]:
-    n = x.shape[-1]
-    return compat.pad_trailing(x, (-n) % multiple), n
+# The pack-width helpers live in vote_api (DESIGN.md §10) — one source
+# of truth for every wire; re-exported here for the existing importers.
+from repro.core.vote_api import count_bytes as _count_bytes  # noqa: E402
+from repro.core.vote_api import count_dtype  # noqa: F401,E402
+from repro.core.vote_api import pad_last as _pad_last  # noqa: E402
 
 
 # ---------------------------------------------------------------------------
@@ -368,7 +358,16 @@ def resolve_strategy(strategy: VoteStrategy, n_params: int,
 
 @dataclasses.dataclass(frozen=True)
 class VoteEngine:
-    """pack -> exchange -> tally -> unpack, behind one object.
+    """LEGACY pack -> exchange -> tally -> unpack, behind one object.
+
+    Every vote method on this class is now a deprecation shim over the
+    declarative vote API (DESIGN.md §10): it builds a
+    :class:`~repro.core.vote_api.VoteRequest` from the engine's fields
+    and executes it on a :class:`~repro.core.vote_api.MeshBackend`
+    (``vote_stacked``: a :class:`~repro.core.vote_api.VirtualBackend`).
+    The strategy registry (:data:`STRATEGIES`), the stage methods and
+    the AUTO selector remain the wire's real implementation — only the
+    imperative entry-point surface is deprecated.
 
     `axes` are the manual mesh axes the vote runs over (empty = the M=1
     single-process degenerate case where the vote is the local sign).
@@ -392,169 +391,93 @@ class VoteEngine:
     salt: int = 0
     codec: str = "sign1bit"
 
+    def _backend(self):
+        from repro.core import vote_api as va
+        return va.MeshBackend(axes=self.axes)
+
     def _codec(self):
         from repro.core import codecs as codecs_mod
         return codecs_mod.get_codec(self.codec)
 
-    def _resolved(self, n_params: int) -> VoteStrategyImpl:
-        data = compat.axis_size("data") if "data" in self.axes else 1
-        pod = compat.axis_size("pod") if "pod" in self.axes else 1
-        return STRATEGIES[resolve_strategy(self.strategy, n_params, data,
-                                           pod, codec=self.codec)]
-
-    # ---- voting ----
+    # ---- voting (deprecation shims over the vote API) ----
 
     def vote_signs(self, signs: jax.Array) -> jax.Array:
-        """Replica-local int8 signs (..., n) -> int8 majority (..., n).
-
-        Stateless path: codecs with server state must go through
-        :meth:`vote_signs_codec` (this raises if one is configured)."""
-        if not self.axes:
-            return signs
-        if self.codec != "sign1bit":
-            vote, _ = self.vote_signs_codec(signs)
-            return vote
-        return self._resolved(signs.size).vote(signs, self.axes)
+        """DEPRECATED shim: int8 signs (..., n) -> int8 majority, no
+        adversary (the engine's compiled model applies in :meth:`vote`,
+        not here)."""
+        from repro.core import vote_api as va
+        va.warn_legacy("VoteEngine.vote_signs")
+        return self._backend().execute(va.VoteRequest(
+            payload=signs, form="leaf", strategy=self.strategy,
+            codec=self.codec, salt=self.salt)).votes
 
     def vote_signs_codec(self, signs: jax.Array, server_state=None):
-        """Codec-aware vote: int8 signs -> (int8 majority, new server
-        state). For stateless codecs the state passes through unchanged
-        (``{}`` when none was given)."""
-        c = self._codec()
-        state = server_state if server_state is not None else {}
-        if not self.axes:
-            return signs, state
-        strat = self._resolved(signs.size)
-        c.validate_strategy(strat.kind)
-        if c.name == "ternary2bit" \
-                and strat.kind == VoteStrategy.ALLGATHER_1BIT:
-            from repro.core.codecs.ternary import TERNARY_WIRE
-            return TERNARY_WIRE.vote(signs, self.axes), state
-        if c.server_state:
-            if not state:
-                raise ValueError(
-                    f"codec {c.name!r} needs its server state threaded "
-                    "through vote_signs_codec (init_server_state)")
-            from repro.core.codecs import weighted
-            impl = STRATEGIES[VoteStrategy.ALLGATHER_1BIT]
-            m = num_voters(self.axes)
-            n = signs.shape[-1]
-            arrived = impl.exchange(impl.pack(signs, m), self.axes)
-            # crop the bit-pack padding lanes BEFORE decoding: padding
-            # always agrees with the vote, so counting it would dilute
-            # the flip-rate observations by n/32w
-            stacked = sc.unpack_signs(arrived, jnp.int8)[..., :n]
-            vote, new_ema = weighted.decode_stacked(stacked,
-                                                    state["flip_ema"])
-            return vote, {**state, "flip_ema": new_ema}
-        return strat.vote(signs, self.axes), state
+        """DEPRECATED shim: int8 signs -> (int8 majority, new server
+        state), no adversary."""
+        from repro.core import vote_api as va
+        va.warn_legacy("VoteEngine.vote_signs_codec")
+        out = self._backend().execute(va.VoteRequest(
+            payload=signs, form="leaf", strategy=self.strategy,
+            codec=self.codec, salt=self.salt, server_state=server_state))
+        return out.votes, out.server_state
 
     def vote_codec(self, values: jax.Array,
                    step: Optional[jax.Array] = None, server_state=None):
-        """Codec-aware per-leaf entry point: replica-local real tensor ->
-        (majority in the input dtype, new server state). Mirrors ``vote``
-        — sign extraction, then the compiled adversary, then the codec
-        wire — so failure drills exercise codecs on the production path."""
-        shape = values.shape
-        s = sc.sign_ternary(values if values.ndim else values.reshape(1))
-        if self.byz is not None and self.axes:
-            s = byzantine.apply_adversary(s, self.byz, self.axes,
-                                          step=step, salt=self.salt)
-        vote, new_state = self.vote_signs_codec(s, server_state)
-        return vote.reshape(shape).astype(values.dtype), new_state
+        """DEPRECATED shim: replica-local real tensor -> (majority in
+        the input dtype, new server state), through the engine's
+        compiled adversary and codec wire."""
+        from repro.core import vote_api as va
+        va.warn_legacy("VoteEngine.vote_codec")
+        out = self._backend().execute(va.VoteRequest(
+            payload=values, form="leaf", strategy=self.strategy,
+            codec=self.codec, failures=va.FailureSpec(byz=self.byz),
+            step=step, salt=self.salt, server_state=server_state))
+        return out.votes, out.server_state
 
     def vote(self, values: jax.Array,
              step: Optional[jax.Array] = None) -> jax.Array:
-        """Replica-local real tensor -> majority of signs, in the input
-        dtype (the trainer's per-leaf entry point). `step` feeds the
-        stochastic adversary models' PRNG fold (redraw every step)."""
-        shape = values.shape
-        s = sc.sign_ternary(values if values.ndim else values.reshape(1))
-        if self.byz is not None and self.axes:
-            s = byzantine.apply_adversary(s, self.byz, self.axes,
-                                          step=step, salt=self.salt)
-        return self.vote_signs(s).reshape(shape).astype(values.dtype)
+        """DEPRECATED shim: replica-local real tensor -> majority of
+        signs, in the input dtype."""
+        from repro.core import vote_api as va
+        va.warn_legacy("VoteEngine.vote")
+        return self._backend().execute(va.VoteRequest(
+            payload=values, form="leaf", strategy=self.strategy,
+            codec=self.codec, failures=va.FailureSpec(byz=self.byz),
+            step=step, salt=self.salt)).votes
 
     def vote_tree(self, tree, step: Optional[jax.Array] = None):
-        """Vote every leaf of a pytree (momenta/grads); ±1 tree in the leaf
-        dtypes. AUTO resolves once per tree on the total parameter count."""
-        if self.strategy == VoteStrategy.AUTO and self.axes:
-            total = sum(l.size for l in jax.tree.leaves(tree))
-            data = compat.axis_size("data") if "data" in self.axes else 1
-            pod = compat.axis_size("pod") if "pod" in self.axes else 1
-            eng = dataclasses.replace(
-                self, strategy=select_strategy(total, data, pod))
-        else:
-            eng = self
-        return jax.tree.map(lambda leaf: eng.vote(leaf, step), tree)
+        """DEPRECATED shim: vote every leaf of a pytree; ±1 tree in the
+        leaf dtypes. AUTO resolves once per tree (codec-aware, which for
+        the default ``sign1bit`` codec is the historical resolution)."""
+        from repro.core import vote_api as va
+        va.warn_legacy("VoteEngine.vote_tree")
+        return self._backend().execute(va.VoteRequest(
+            payload=tree, form="tree", strategy=self.strategy,
+            codec=self.codec, failures=va.FailureSpec(byz=self.byz),
+            step=step, salt=self.salt)).votes
 
     def vote_tree_codec(self, tree, step: Optional[jax.Array] = None,
                         server_state=None):
-        """Codec-aware tree vote: (±1 tree in leaf dtypes, new server
-        state). AUTO resolves once per tree (codec-aware). Server-stateful
-        codecs decode every leaf under this step's weights and fold ONE
-        aggregate reliability update across the whole tree — the per-step
-        server observation is the worker's full transmission, not one
-        leaf."""
-        c = self._codec()
-        if self.strategy == VoteStrategy.AUTO and self.axes:
-            total = sum(l.size for l in jax.tree.leaves(tree))
-            data = compat.axis_size("data") if "data" in self.axes else 1
-            pod = compat.axis_size("pod") if "pod" in self.axes else 1
-            eng = dataclasses.replace(
-                self, strategy=select_strategy(total, data, pod,
-                                               codec=self.codec))
-        else:
-            eng = self
-        state = server_state if server_state is not None else {}
-        if not c.server_state or not self.axes:
-            votes = jax.tree.map(
-                lambda leaf: eng.vote_codec(leaf, step)[0], tree)
-            return votes, state
-        # weighted decode with weights FIXED for the step, one EMA update
-        # (same validation as the per-leaf entry point: no silent
-        # transport substitution when the configured wire can't carry
-        # the codec)
-        c.validate_strategy(eng.strategy)
-        from repro.core.codecs import weighted
-        impl = STRATEGIES[VoteStrategy.ALLGATHER_1BIT]
-        m = num_voters(self.axes)
-        w = weighted.reliability_weights(state["flip_ema"])
-        leaves, treedef = jax.tree.flatten(tree)
-        votes, mismatch, total_n = [], jnp.zeros_like(w), 0
-        for leaf in leaves:
-            shape = leaf.shape
-            s = sc.sign_ternary(leaf if leaf.ndim else leaf.reshape(1))
-            if self.byz is not None:
-                s = byzantine.apply_adversary(s, self.byz, self.axes,
-                                              step=step, salt=self.salt)
-            n = s.shape[-1]
-            arrived = impl.exchange(impl.pack(s, m), self.axes)
-            # crop padding lanes before decoding (see vote_signs_codec)
-            stacked = sc.unpack_signs(arrived, jnp.int8)[..., :n]
-            vote, mis = weighted.decode_leaf_fixed(stacked, w)
-            mismatch = mismatch + mis
-            total_n += stacked.size // stacked.shape[0]
-            votes.append(vote.reshape(shape).astype(leaf.dtype))
-        new_ema = ((1.0 - weighted.RHO) * state["flip_ema"]
-                   + weighted.RHO * mismatch / total_n)
-        return (jax.tree.unflatten(treedef, votes),
-                {**state, "flip_ema": new_ema})
+        """DEPRECATED shim: codec-aware tree vote -> (±1 tree, new
+        server state)."""
+        from repro.core import vote_api as va
+        va.warn_legacy("VoteEngine.vote_tree_codec")
+        out = self._backend().execute(va.VoteRequest(
+            payload=tree, form="tree", strategy=self.strategy,
+            codec=self.codec, failures=va.FailureSpec(byz=self.byz),
+            step=step, salt=self.salt, server_state=server_state))
+        return out.votes, out.server_state
 
     def vote_stacked(self, stacked: jax.Array,
                      use_kernels: bool = True) -> jax.Array:
-        """Host-local simulation path: (M, n) real values from M simulated
-        voters -> (n,) int8 majority (ties -> +1), via the fused Pallas
-        sign+pack+popcount kernel when available. Benchmarks and fault
-        drills share this with the mesh path's semantics."""
-        m, n = stacked.shape
-        if use_kernels:
-            from repro.kernels import ops
-            packed = ops.fused_majority(stacked)
-            return ops.bitunpack(packed, n, jnp.int8)
-        padded, _ = _pad_last(stacked, sc.PACK)
-        maj = sc.packed_majority(sc.pack_signs(padded))
-        return sc.unpack_signs(maj, jnp.int8)[:n]
+        """DEPRECATED shim: (M, n) host-local stacked values -> (n,)
+        int8 majority on the gathered 1-bit wire (ties -> +1), fused
+        Pallas kernel when `use_kernels`."""
+        from repro.core import vote_api as va
+        va.warn_legacy("VoteEngine.vote_stacked")
+        return va.VirtualBackend(use_kernels=use_kernels).execute(
+            va.VoteRequest(payload=stacked, form="stacked",
+                           strategy=VoteStrategy.ALLGATHER_1BIT)).votes
 
     # ---- accounting ----
 

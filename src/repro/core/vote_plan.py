@@ -49,8 +49,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ByzantineConfig, VoteStrategy
-from repro.core import byzantine, sign_compress as sc
-from repro.core.vote_engine import STRATEGIES, num_voters
+from repro.core import sign_compress as sc
+from repro.core.vote_engine import STRATEGIES
 from repro.distributed import comm_model
 
 #: base bucket alignment: lcm of the 1-bit pack (32/word) and the ternary
@@ -335,102 +335,44 @@ def unflatten_votes(plan: VotePlan, flat: jax.Array, tree) -> Dict:
 
 
 # ---------------------------------------------------------------------------
-# execution: the mesh walk
+# execution: deprecation shims over the vote API (DESIGN.md §10) — the
+# schedule walks now live in `vote_api` (the mesh walk and its
+# exchange-virtualised twin side by side, sharing the §2 stage methods
+# and pinned to each other by the tier-2 mesh==virtual drills)
 # ---------------------------------------------------------------------------
-
-
-def _bucket_vote_mesh(bucket: Bucket, signs: jax.Array,
-                      axes: Tuple[str, ...],
-                      w: Optional[jax.Array]):
-    """One bucket through the production stage methods. Returns
-    (votes int8 (length,), mismatch (M,) or None, true length)."""
-    impl = STRATEGIES[bucket.strategy]
-    if bucket.codec == "ternary2bit" \
-            and bucket.strategy == VoteStrategy.ALLGATHER_1BIT:
-        from repro.core.codecs.ternary import TERNARY_WIRE
-        return TERNARY_WIRE.vote(signs, axes), None, bucket.length
-    if bucket.codec == "weighted_vote":
-        from repro.core.codecs import weighted
-        m = num_voters(axes)
-        arrived = impl.exchange(impl.pack(signs, m), axes)
-        # crop the bit-pack padding lanes BEFORE decoding: padding always
-        # agrees with the vote and would dilute the flip observations
-        stacked = sc.unpack_signs(arrived, jnp.int8)[..., :bucket.length]
-        vote, mis = weighted.decode_leaf_fixed(stacked, w)
-        return vote, mis, bucket.length
-    # sign1bit / ef_sign (identical wire) / ternary over the count wire
-    return impl.vote(signs, axes), None, bucket.length
 
 
 def plan_vote_signs(plan: VotePlan, flat_signs: jax.Array,
                     axes: Tuple[str, ...], server_state=None):
-    """The schedule walk: (n_params,) effective int8 signs (post-stale,
-    post-adversary) → ((n_params,) int8 votes, new server state).
-
-    Runs inside the manual vote region. Server-stateful codecs decode
-    every bucket under weights FIXED for the step and fold ONE flip-rate
-    EMA update across the schedule, normalised by the weighted buckets'
-    true coordinate count (padding lanes never observed)."""
-    state = dict(server_state) if server_state else {}
-    if not axes:                     # M=1 degenerate case: vote = sign
-        return flat_signs, state
-    w = None
-    if plan.has_server_state:
-        from repro.core.codecs import weighted
-        if "flip_ema" not in state:
-            raise ValueError(
-                "plan carries a server-stateful codec; thread its server "
-                "state (init_server_state) through plan_vote_signs")
-        w = weighted.reliability_weights(state["flip_ema"])
-    votes, mismatch, total_w = [], None, 0
-    for bucket in plan.buckets:
-        seg = jax.lax.slice_in_dim(flat_signs, bucket.start,
-                                   bucket.start + bucket.length, axis=-1)
-        vote, mis, n_true = _bucket_vote_mesh(bucket, seg, tuple(axes), w)
-        votes.append(vote)
-        if mis is not None:
-            mismatch = mis if mismatch is None else mismatch + mis
-            total_w += n_true
-    if mismatch is not None:
-        from repro.core.codecs import weighted
-        state["flip_ema"] = ((1.0 - weighted.RHO) * state["flip_ema"]
-                             + weighted.RHO * mismatch / total_w)
-    out = jnp.concatenate(votes) if len(votes) > 1 else votes[0]
-    return out, state
+    """DEPRECATED shim: the schedule walk over (n_params,) effective
+    int8 signs (post-stale, post-adversary) inside the manual vote
+    region → ((n_params,) int8 votes, new server state)."""
+    from repro.core import vote_api as va
+    va.warn_legacy("vote_plan.plan_vote_signs")
+    out = va.MeshBackend(axes=tuple(axes)).execute(va.VoteRequest(
+        payload=flat_signs, form="leaf", plan=plan,
+        server_state=server_state))
+    return out.votes, out.server_state
 
 
 def plan_tree_vote(plan: VotePlan, tree, axes: Sequence[str],
                    byz: Optional[ByzantineConfig] = None, step=None,
                    salt: int = 0, server_state=None,
                    diagnostics: bool = False):
-    """The trainer's plan entry point: tree of replica-local values →
-    (±1 tree in leaf dtypes, new server state, diagnostics dict).
-
-    Mirrors ``tree_vote_codec`` semantics with the schedule in place of
-    the per-leaf loop: sign extraction per leaf, ONE flat buffer, the
-    compiled adversary applied once to the whole wire buffer, then the
-    bucket walk. Diagnostics (``vote_margin``/``vote_agreement``) are
-    computed once over the flat buffer's true coordinates — the padded
-    lanes the bucketed wire adds are never observed."""
-    axes = tuple(axes)
-    honest = flatten_signs(plan, tree)
-    eff = honest
-    if byz is not None and axes:
-        eff = byzantine.apply_adversary(eff, byz, axes, step=step,
-                                        salt=salt)
-    flat_votes, new_state = plan_vote_signs(plan, eff, axes, server_state)
+    """DEPRECATED shim: the trainer's plan path — tree of replica-local
+    values → (±1 tree in leaf dtypes, new server state, diagnostics
+    dict) through one flat bucketed wire buffer."""
+    from repro.core import vote_api as va
+    va.warn_legacy("vote_plan.plan_tree_vote")
+    out = va.MeshBackend(axes=tuple(axes)).execute(va.VoteRequest(
+        payload=tree, form="tree", plan=plan,
+        failures=va.FailureSpec(byz=byz), step=step, salt=salt,
+        server_state=server_state, diagnostics=diagnostics))
     diag = {}
     if diagnostics:
-        m = num_voters(axes) if axes else 1
-        if axes:
-            counts = jax.lax.psum(eff.astype(jnp.int32), axes)
-        else:
-            counts = eff.astype(jnp.int32)
-        diag["vote_margin"] = (jnp.sum(jnp.abs(counts))
-                               / (plan.n_params * m))
-        diag["vote_agreement"] = jnp.mean(
-            (honest == flat_votes).astype(jnp.float32))
-    return unflatten_votes(plan, flat_votes, tree), new_state, diag
+        diag = {"vote_margin": out.wire.margin,
+                "vote_agreement": out.wire.agreement}
+    return out.votes, out.server_state, diag
 
 
 # ---------------------------------------------------------------------------

@@ -17,11 +17,12 @@ that property:
 * ``Watchdog`` — wall-clock supervision of the train loop; on a stuck
   step (collective hang after a node failure) it triggers the
   restore-and-rescale path in launch/train.py.
-* ``vote_with_failures`` — the failure drill's aggregation path: stale-vote
-  substitution + Byzantine perturbation feeding the SAME
-  :class:`~repro.core.vote_engine.VoteEngine` the trainer steps through,
-  so robustness experiments measure the production wire protocol, not a
-  lookalike.
+* ``vote_with_failures`` (+ the codec/plan variants) — DEPRECATED shims
+  over the vote API (DESIGN.md §10): the failure composition is now DATA
+  on a :class:`~repro.core.vote_api.VoteRequest`
+  (:class:`~repro.core.vote_api.FailureSpec`), executed by the same
+  backend the trainer steps through — robustness experiments measure the
+  production wire protocol, not a lookalike.
 """
 from __future__ import annotations
 
@@ -65,64 +66,64 @@ def count_for_fraction(fraction: float, n_replicas: int) -> int:
     return min(n_replicas, int(fraction * n_replicas + 0.5))
 
 
+def _failure_request(engine, payload, prev_signs, n_stale, step,
+                     server_state=None, plan=None):
+    """The legacy (engine, stale, adversary) triple as one declarative
+    :class:`~repro.core.vote_api.VoteRequest` (prev-less calls keep the
+    historical no-substitution semantics)."""
+    from repro.core import vote_api as va
+    return va.VoteRequest(
+        payload=payload, form="leaf", strategy=engine.strategy,
+        codec=engine.codec, plan=plan,
+        failures=va.FailureSpec(
+            n_stale=n_stale if prev_signs is not None else 0,
+            byz=engine.byz),
+        prev=prev_signs, step=step, salt=engine.salt,
+        server_state=server_state)
+
+
 def vote_with_failures(engine, signs: jax.Array,
                        prev_signs: Optional[jax.Array] = None,
                        n_stale: int = 0, step=None) -> jax.Array:
-    """One aggregation under failures, through the trainer's engine.
-
-    Runs inside the manual vote region: substitutes stale votes for the
-    first `n_stale` replicas (when `prev_signs` is given), then lets the
-    engine apply its compiled Byzantine model and wire protocol — so a
-    straggling adversary perturbs its *stale* vector, exactly as a real
-    stale-then-corrupted worker would. The paper's point (§3.4) made
-    executable: every failure mode enters as a ≤1-vote perturbation to the
-    same pack → exchange → tally → unpack pipeline. `step` feeds the
-    stochastic adversary models' per-step PRNG fold.
-    """
-    if n_stale and prev_signs is not None:
-        mask = straggler_mask_for(engine.axes, n_stale, like=signs)
-        signs = simulate_stragglers(signs, prev_signs, mask)
-    return engine.vote(signs, step)
+    """DEPRECATED shim: one aggregation under failures — stale-vote
+    substitution, then the engine's compiled adversary, then the wire —
+    now a :class:`~repro.core.vote_api.VoteRequest` with a
+    :class:`~repro.core.vote_api.FailureSpec`, executed on the mesh
+    backend."""
+    from repro.core import vote_api as va
+    va.warn_legacy("fault_tolerance.vote_with_failures")
+    return va.MeshBackend(axes=engine.axes).execute(
+        _failure_request(engine, signs, prev_signs, n_stale, step)).votes
 
 
 def codec_vote_with_failures(engine, signs: jax.Array,
                              prev_signs: Optional[jax.Array] = None,
                              n_stale: int = 0, step=None,
                              server_state=None):
-    """Codec-aware :func:`vote_with_failures`: same failure composition
-    (stale substitution, then the engine's compiled adversary, then the
-    wire), decoded through the engine's gradient codec (DESIGN.md §8).
-    Returns ``(vote, new_server_state)`` so stateful decoders (the
-    weighted vote's reliability estimates) thread through the drill."""
-    if n_stale and prev_signs is not None:
-        mask = straggler_mask_for(engine.axes, n_stale, like=signs)
-        signs = simulate_stragglers(signs, prev_signs, mask)
-    return engine.vote_codec(signs, step, server_state)
+    """DEPRECATED shim: codec-aware :func:`vote_with_failures`; returns
+    ``(vote, new_server_state)``."""
+    from repro.core import vote_api as va
+    va.warn_legacy("fault_tolerance.codec_vote_with_failures")
+    out = va.MeshBackend(axes=engine.axes).execute(
+        _failure_request(engine, signs, prev_signs, n_stale, step,
+                         server_state))
+    return out.votes, out.server_state
 
 
 def plan_vote_with_failures(engine, plan, values: jax.Array,
                             prev_signs: Optional[jax.Array] = None,
                             n_stale: int = 0, step=None,
                             server_state=None):
-    """Bucketed :func:`vote_with_failures` (DESIGN.md §9): the SAME
-    failure composition — stale-vote substitution, then the engine's
-    compiled adversary — applied ONCE to the flat wire buffer, then the
-    :class:`~repro.core.vote_plan.VotePlan` schedule walked bucket by
-    bucket through the production stage methods. Returns
-    ``(vote, new_server_state)``; `values` is the replica-local flat
-    (n_params,) real buffer in manifest order."""
-    from repro.core import byzantine, sign_compress as sc
-    from repro.core import vote_plan as vp
-    if n_stale and prev_signs is not None:
-        mask = straggler_mask_for(engine.axes, n_stale, like=values)
-        values = simulate_stragglers(values, prev_signs, mask)
-    signs = sc.sign_ternary(values)
-    if engine.byz is not None and engine.axes:
-        signs = byzantine.apply_adversary(signs, engine.byz, engine.axes,
-                                          step=step, salt=engine.salt)
-    vote, new_state = vp.plan_vote_signs(plan, signs, engine.axes,
-                                         server_state)
-    return vote.astype(values.dtype), new_state
+    """DEPRECATED shim: bucketed :func:`vote_with_failures` (DESIGN.md
+    §9) — the same failure composition applied once to the flat wire
+    buffer, then the plan's bucket schedule; returns
+    ``(vote, new_server_state)``."""
+    from repro.core import vote_api as va
+    va.warn_legacy("fault_tolerance.plan_vote_with_failures")
+    out = va.MeshBackend(axes=engine.axes).execute(
+        _failure_request(engine, values, prev_signs, n_stale, step,
+                         server_state, plan=plan))
+    return out.votes, out.server_state
 
 
 # ---------------------------------------------------------------------------

@@ -6,16 +6,17 @@ m holds the true gradient ``x`` plus N(0, sigma^2) noise, keeps per-worker
 SIGNUM momentum (Algorithm 1), and the update applies the majority vote of
 the momenta's signs. What makes it a *failure drill* is everything between
 the local sign and the decision: stale-vote straggler substitution,
-Byzantine perturbation, and elastic voter-set rescale — all through the
-SAME code the trainer compiles (``fault_tolerance.vote_with_failures`` /
-``core.byzantine`` / the VoteEngine strategy stages).
+Byzantine perturbation, and elastic voter-set rescale — all DATA on one
+declarative :class:`~repro.core.vote_api.VoteRequest` (DESIGN.md §10),
+executed through the SAME code the trainer compiles.
 
-Two interchangeable backends (bit-identical; asserted by tier-2):
+Two interchangeable backends (bit-identical; asserted by tier-2) — both
+build LITERALLY the same VoteRequest per step:
 
-* ``virtual`` — the host-count-independent virtual mesh
-  (:mod:`repro.sim.virtual_mesh`): any M on any device count.
-* ``mesh``    — the real thing: a ``shard_map`` over an M-wide 'data'
-  axis calling ``fault_tolerance.vote_with_failures`` on actual mesh
+* ``virtual`` — :class:`~repro.core.vote_api.VirtualBackend`: the
+  host-count-independent virtual mesh (any M on any device count).
+* ``mesh``    — :class:`~repro.core.vote_api.MeshBackend`: the real
+  thing, a ``shard_map`` over an M-wide 'data' axis on actual mesh
   replicas (requires M <= local device count; the tier-2 harness runs it
   on the 8-virtual-device platform).
 
@@ -35,20 +36,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import compat
 from repro.checkpoint.checkpoint import (refit_leading_axis,
                                          refit_tree_leading_axis)
 from repro.configs.base import VoteStrategy
 from repro.core import codecs as codecs_mod
 from repro.core import sign_compress as sc
-from repro.core.vote_engine import STRATEGIES, VoteEngine
-from repro.distributed.fault_tolerance import (codec_vote_with_failures,
-                                               count_for_fraction,
-                                               plan_vote_with_failures,
-                                               vote_with_failures)
+from repro.core import vote_api as va
+from repro.core.vote_engine import STRATEGIES
+from repro.distributed.fault_tolerance import count_for_fraction
 from repro.sim.scenario import ScenarioSpec
-from repro.sim.virtual_mesh import (VirtualVoteEngine, virtual_plan_vote,
-                                    virtual_vote, virtual_vote_codec)
 
 BACKENDS = ("virtual", "mesh")
 
@@ -186,6 +182,8 @@ class ScenarioRunner:
         self.spec = spec
         self.backend = backend
         self.mesh_style = mesh_style
+        # the execution backend: both build LITERALLY the same
+        # VoteRequest per step; only the executor differs (DESIGN.md §10)
         if backend == "mesh":
             need = max([spec.n_workers] + [e.n_workers for e in spec.elastic])
             have = len(jax.devices())
@@ -194,6 +192,9 @@ class ScenarioRunner:
                     f"mesh backend needs {need} devices for "
                     f"{spec.name!r}, have {have} (use backend='virtual', "
                     "or XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+            self._exec = va.MeshBackend(mesh_style=mesh_style)
+        else:
+            self._exec = va.VirtualBackend()
 
     # ---- per-segment compiled pieces (rebuilt at elastic boundaries) ----
 
@@ -203,13 +204,12 @@ class ScenarioRunner:
         byz_cfg = spec.adversary.byz_config(m, spec.seed)
         byz = byz_cfg if byz_cfg.mode != "none" else None
         n_stale = count_for_fraction(spec.straggler_fraction, m)
-        veng = VirtualVoteEngine(spec.strategy, byz, spec.salt,
-                                 codec=spec.codec)
         beta = spec.momentum
         has_ef = codec.worker_state
         # the bucketed wire schedule (§9); rebuilt per segment because
         # only the hierarchical alignment depends on the voter count
         plan = spec.runtime_plan(m)
+        oracle_backend = va.VirtualBackend()
 
         @jax.jit
         def prepare(x, v, err, prev, cstate, noise, step):
@@ -220,16 +220,16 @@ class ScenarioRunner:
             # bit-identical
             t = err + v2 if has_ef else v2
             fresh = sc.sign_ternary(t)
-            eff = veng.effective_signs(t, prev, n_stale, step)
+            eff = va.effective_stacked_signs(t, prev, n_stale, byz, step,
+                                             spec.salt)
             # honest-majority oracle through the SAME codec decode (and
-            # the same bucket schedule when the plan axis is on); state
-            # is read-only here — the oracle must not advance the
+            # the same bucket schedule when the plan axis is on): a
+            # failure-free VoteRequest on the virtual backend; state is
+            # read-only here — the oracle must not advance the
             # reliability EMA
-            if plan is not None:
-                oracle, _ = virtual_plan_vote(fresh, plan, cstate)
-            else:
-                oracle, _ = virtual_vote_codec(fresh, spec.strategy,
-                                               spec.codec, cstate)
+            oracle = oracle_backend.execute(va.VoteRequest(
+                payload=fresh, form="stacked", strategy=spec.strategy,
+                codec=spec.codec, plan=plan, server_state=cstate)).votes
             counts = jnp.sum(eff.astype(jnp.int32), axis=0)
             margin = jnp.mean(jnp.abs(counts).astype(jnp.float32)) / m
             return v2, t, fresh, eff, oracle, margin
@@ -248,93 +248,7 @@ class ScenarioRunner:
             scale = jnp.mean(jnp.abs(t), axis=1, keepdims=True)
             return t - scale * vote[None, :].astype(t.dtype)
 
-        if self.backend == "mesh":
-            mesh_vote = self._mesh_vote_fn(m, byz, n_stale, plan)
-        else:
-            mesh_vote = None
-        return (prepare, finish, ef_feedback, mesh_vote, byz_cfg, n_stale,
-                plan)
-
-    def _mesh_vote_fn(self, m: int, byz, n_stale: int, plan=None):
-        """jit(shard_map(vote_with_failures)) over an M-wide 'data' axis —
-        the production wire path on real mesh replicas. Codec-parametric:
-        non-default codecs route through ``codec_vote_with_failures``,
-        server-stateful ones thread their replicated decode memory, and a
-        plan-enabled spec walks the bucket schedule through
-        ``plan_vote_with_failures`` (§9)."""
-        from jax.sharding import Mesh, PartitionSpec as P
-        spec = self.spec
-        codec = codecs_mod.get_codec(spec.codec)
-        devs = np.array(jax.devices()[:m])
-        if self.mesh_style == "data_model":
-            mesh = Mesh(devs.reshape(m, 1), ("data", "model"))
-            manual = {"data"}
-        else:
-            mesh = Mesh(devs, ("data",))
-            manual = {"data"}
-        engine = VoteEngine(strategy=spec.strategy, axes=("data",),
-                            byz=byz, salt=spec.salt, codec=spec.codec)
-
-        if plan is not None:
-            if plan.has_server_state:
-                def f_plan_state(vals, prev, step, cstate):
-                    out, new_state = plan_vote_with_failures(
-                        engine, plan, vals[0], prev[0], n_stale=n_stale,
-                        step=step, server_state=cstate)
-                    return out[None], new_state
-
-                sh = compat.shard_map(
-                    f_plan_state, mesh=mesh,
-                    in_specs=(P("data"), P("data"), P(), P()),
-                    out_specs=(P("data"), P()), axis_names=manual,
-                    check_vma=False)
-                return jax.jit(sh)
-
-            def f_plan(vals, prev, step):
-                out, _ = plan_vote_with_failures(
-                    engine, plan, vals[0], prev[0], n_stale=n_stale,
-                    step=step)
-                return out[None]
-
-            sh = compat.shard_map(
-                f_plan, mesh=mesh, in_specs=(P("data"), P("data"), P()),
-                out_specs=P("data"), axis_names=manual, check_vma=False)
-            return jax.jit(sh)
-
-        if codec.server_state:
-            def f_state(vals, prev, step, cstate):
-                out, new_state = codec_vote_with_failures(
-                    engine, vals[0], prev[0], n_stale=n_stale, step=step,
-                    server_state=cstate)
-                return out[None], new_state
-
-            sh = compat.shard_map(
-                f_state, mesh=mesh,
-                in_specs=(P("data"), P("data"), P(), P()),
-                out_specs=(P("data"), P()), axis_names=manual,
-                check_vma=False)
-            return jax.jit(sh)
-
-        if spec.codec != "sign1bit":
-            def f_codec(vals, prev, step):
-                out, _ = codec_vote_with_failures(
-                    engine, vals[0], prev[0], n_stale=n_stale, step=step)
-                return out[None]
-
-            sh = compat.shard_map(
-                f_codec, mesh=mesh, in_specs=(P("data"), P("data"), P()),
-                out_specs=P("data"), axis_names=manual, check_vma=False)
-            return jax.jit(sh)
-
-        def f(vals, prev, step):
-            out = vote_with_failures(engine, vals[0], prev[0],
-                                     n_stale=n_stale, step=step)
-            return out[None]
-
-        sh = compat.shard_map(
-            f, mesh=mesh, in_specs=(P("data"), P("data"), P()),
-            out_specs=P("data"), axis_names=manual, check_vma=False)
-        return jax.jit(sh)
+        return prepare, finish, ef_feedback, byz_cfg, n_stale, plan
 
     # ---- the drill ----
 
@@ -350,7 +264,7 @@ class ScenarioRunner:
         # that is what a straggler re-submits; failures then apply to the
         # substituted vector (vote_with_failures order)
         prev = jnp.zeros((m, spec.dim), jnp.int8)
-        prepare, finish, ef_feedback, mesh_vote, byz_cfg, n_stale, plan = \
+        prepare, finish, ef_feedback, byz_cfg, n_stale, plan = \
             self._segment(m)
         # codec server state: replicated decode memory (reliability EMA);
         # under a plan the schedule's codec set decides what exists
@@ -359,7 +273,6 @@ class ScenarioRunner:
         else:
             cstate = (codec.init_server_state(m) if codec.server_state
                       else {})
-        stateful = bool(cstate)
         digest = hashlib.sha256()
         steps: List[StepTrace] = []
         for step in range(spec.n_steps):
@@ -381,32 +294,31 @@ class ScenarioRunner:
                         cstate, {k: (m_now,) + tuple(a.shape[1:])
                                  for k, a in cstate.items()}))
                 m = m_now
-                prepare, finish, ef_feedback, mesh_vote, byz_cfg, \
-                    n_stale, plan = self._segment(m)
+                prepare, finish, ef_feedback, byz_cfg, n_stale, plan = \
+                    self._segment(m)
             noise = _noise(spec, step, m)
             step_t = jnp.int32(step)
             v, t, fresh, eff, oracle, margin = prepare(x, v, err, prev,
                                                        cstate, noise,
                                                        step_t)
-            if self.backend == "mesh":
-                # host round-trips keep every array uncommitted: jit
-                # outputs committed to one segment's mesh devices would
-                # conflict with the next segment's (smaller) mesh
-                args = (np.asarray(t), np.asarray(prev), np.int32(step))
-                if stateful:
-                    out, new_state = mesh_vote(
-                        *args, {k: np.asarray(a) for k, a in
-                                cstate.items()})
-                    cstate = {k: jnp.asarray(np.asarray(a))
-                              for k, a in new_state.items()}
-                else:
-                    out = mesh_vote(*args)
-                vote = jnp.asarray(np.asarray(out)[0].astype(np.int8))
-            elif plan is not None:
-                vote, cstate = virtual_plan_vote(eff, plan, cstate)
-            else:
-                vote, cstate = virtual_vote_codec(eff, spec.strategy,
-                                                  spec.codec, cstate)
+            # ONE declarative request per step, identical on both
+            # backends — payload is the raw stacked encode input, the
+            # failure composition is data, the executor is the only
+            # thing that differs (DESIGN.md §10). The mesh backend
+            # round-trips through numpy internally so elastic segments
+            # with different mesh sizes coexist in one process. (The
+            # executor re-derives the effective signs prepare() captured
+            # for the margin trace — the cost of keeping the request
+            # backend-identical; both derivations are jitted.)
+            out = self._exec.execute(va.VoteRequest(
+                payload=t, form="stacked", strategy=spec.strategy,
+                codec=spec.codec, plan=plan,
+                failures=va.FailureSpec(n_stale=n_stale, byz=byz_cfg
+                                        if byz_cfg.mode != "none"
+                                        else None),
+                prev=prev, step=step_t, salt=spec.salt,
+                server_state=cstate))
+            vote, cstate = out.votes, out.server_state
             x, flip, loss = finish(x, vote, oracle)
             if codec.worker_state:
                 err = ef_feedback(t, vote)

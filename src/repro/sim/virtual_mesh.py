@@ -1,12 +1,14 @@
-"""Virtual mesh: the VoteEngine wire path over a stacked voter dimension.
+"""Virtual mesh: the production vote pipeline over a stacked voter dim.
 
 The Scenario Lab must replay an M-voter drill on however many devices the
 host happens to have (1 laptop CPU or an 8-device harness) and produce
-bit-identical results either way. This module runs the *production* vote
-pipeline — the exact ``VoteStrategyImpl.pack`` / ``tally`` / ``unpack``
-stage methods of ``core.vote_engine`` — with only the **exchange** stage's
-mesh collectives replaced by their mathematically-exact host-side
-equivalents over a stacked leading voter dim:
+bit-identical results either way. Since the vote API redesign (DESIGN.md
+§10) the host-side execution itself lives in
+:class:`repro.core.vote_api.VirtualBackend` — the *production*
+``VoteStrategyImpl.pack`` / ``tally`` / ``unpack`` stage methods with
+only the **exchange** stage's mesh collectives replaced by their
+mathematically-exact host-side equivalents over a stacked leading voter
+dim:
 
     psum            ->  sum over the voter dim (cast back to wire dtype)
     all_gather      ->  the stacked wire IS the gathered tensor
@@ -16,170 +18,65 @@ equivalents over a stacked leading voter dim:
 No aggregation logic is re-implemented: ties, abstentions, padding bits
 and wire dtypes all come from the same code the trainer compiles. The
 tier-2 harness (``tests/tier2/scenario_harness.py``) asserts the virtual
-path is bit-identical to the real ``shard_map`` + collectives path on an
-8-device mesh, for every strategy and failure composition.
+backend is bit-identical to the real ``shard_map`` + collectives path on
+an 8-device mesh, for every strategy and failure composition.
+
+This module keeps the legacy ``virtual_*`` entry points as deprecation
+shims plus :class:`VirtualVoteEngine`, the stacked-engine convenience
+wrapper the failure-composition tests drive.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ByzantineConfig, VoteStrategy
-from repro.core import byzantine, sign_compress as sc
-from repro.core.vote_engine import STRATEGIES, _pad_last
-from repro.distributed.fault_tolerance import simulate_stragglers
+from repro.core import vote_api as va
 
 
-@functools.partial(jax.jit, static_argnames=("strategy",))
 def virtual_vote(signs: jax.Array, strategy: VoteStrategy) -> jax.Array:
-    """(M, n) stacked int8 signs -> (n,) int8 majority, through the
-    strategy's own pack/tally/unpack stages (exchange virtualised)."""
-    impl = STRATEGIES[strategy]
-    m, n = signs.shape
-
-    if strategy == VoteStrategy.PSUM_INT8:
-        wire = impl.pack(signs, m)                       # (M, n) counts
-        # psum over the vote axes == sum over the voter dim; the mesh op
-        # accumulates in the wire dtype (safe: |sum| <= M <= dtype max)
-        arrived = jnp.sum(wire, axis=0).astype(wire.dtype)
-        return impl.unpack(impl.tally(arrived, m), n, jnp.int8)
-
-    if strategy == VoteStrategy.ALLGATHER_1BIT:
-        wire = impl.pack(signs, m)                       # (M, w) packed
-        # the all-gather hands every replica the stacked wire — which is
-        # exactly what the virtual mesh already holds
-        return impl.unpack(impl.tally(wire, m), n, jnp.int8)
-
-    if strategy == VoteStrategy.HIERARCHICAL:
-        # virtual single-pod mesh: data axis = all M voters, no pod axis.
-        # Mirrors HierarchicalStrategy.vote: pad to PACK * dsize so the
-        # reduce-scatter shards stay word-aligned.
-        padded, _ = _pad_last(signs, sc.PACK * m)
-        wire = impl.pack(padded, m)                      # (M, n_pad) counts
-        # psum_scatter(tiled) over 'data': shard r of the summed counts
-        summed = jnp.sum(wire, axis=0).astype(wire.dtype)
-        shards = summed.reshape(m, padded.shape[-1] // m)
-        decision = impl.tally(shards, m)                 # sign_binary/shard
-        # unpack stage: pack each shard's decision, all-gather (tiled) the
-        # packed words across 'data' = concatenate in replica order
-        packed = sc.pack_signs(decision).reshape(-1)
-        return sc.unpack_signs(packed, jnp.int8)[:n]
-
-    raise ValueError(f"virtual mesh cannot realise {strategy!r}")
+    """DEPRECATED shim: (M, n) stacked int8 signs -> (n,) int8 majority
+    through the strategy's own pack/tally/unpack stages (exchange
+    virtualised)."""
+    va.warn_legacy("virtual_mesh.virtual_vote")
+    return va.VirtualBackend().execute(va.VoteRequest(
+        payload=signs, form="stacked", strategy=strategy)).votes
 
 
-@functools.partial(jax.jit, static_argnames=("strategy", "codec"))
 def virtual_vote_codec(signs: jax.Array, strategy: VoteStrategy,
                        codec: str = "sign1bit", server_state=None):
-    """(M, n) stacked int8 signs -> ((n,) int8 majority, new server state)
-    through the codec's wire stages (DESIGN.md §8), exchange virtualised
-    exactly like :func:`virtual_vote`. Stateless codecs pass the state
-    through (``{}`` when none was given)."""
-    state = server_state if server_state is not None else {}
-    m, n = signs.shape
-
-    if codec in ("sign1bit", "ef_sign"):
-        # identical wire to the plain majority: only the encode input
-        # (caller-side) differs
-        return virtual_vote(signs, strategy), state
-
-    if codec == "ternary2bit":
-        if strategy == VoteStrategy.PSUM_INT8:
-            # ternary symbols ARE the counts psum already sums
-            return virtual_vote(signs, strategy), state
-        from repro.core.codecs.ternary import TERNARY_WIRE
-        wire = TERNARY_WIRE.pack(signs, m)       # (M, w) 2-bit packed
-        # the all-gather hands every replica the stacked wire — which is
-        # exactly what the virtual mesh already holds
-        return TERNARY_WIRE.unpack(TERNARY_WIRE.tally(wire, m), n,
-                                   jnp.int8), state
-
-    if codec == "weighted_vote":
-        from repro.core.codecs import weighted
-        impl = STRATEGIES[VoteStrategy.ALLGATHER_1BIT]
-        wire = impl.pack(signs, m)               # (M, w) 1-bit packed
-        # crop the padding lanes before decoding, exactly like the mesh
-        # tally: padding always agrees with the vote and would dilute
-        # the flip-rate observations
-        stacked = sc.unpack_signs(wire, jnp.int8)[:, :n]
-        vote, new_ema = weighted.decode_stacked(stacked,
-                                                state["flip_ema"])
-        return vote, {**state, "flip_ema": new_ema}
-
-    raise ValueError(f"virtual mesh cannot realise codec {codec!r}")
+    """DEPRECATED shim: (M, n) stacked int8 signs -> ((n,) int8
+    majority, new server state) through the codec's wire stages."""
+    va.warn_legacy("virtual_mesh.virtual_vote_codec")
+    out = va.VirtualBackend().execute(va.VoteRequest(
+        payload=signs, form="stacked", strategy=strategy, codec=codec,
+        server_state=server_state))
+    return out.votes, out.server_state
 
 
-@functools.partial(jax.jit, static_argnames=("plan",))
 def virtual_plan_vote(signs: jax.Array, plan, server_state=None):
-    """(M, n_params) stacked int8 signs -> ((n_params,) int8 votes, new
-    server state) through a :class:`~repro.core.vote_plan.VotePlan`
-    bucket schedule (DESIGN.md §9), exchange virtualised per bucket
-    exactly like :func:`virtual_vote_codec`.
-
-    Walks the SAME static schedule the mesh backend's
-    ``fault_tolerance.plan_vote_with_failures`` walks — same bucket
-    slices, same stage methods, same single padded lane set in the
-    ragged last bucket of each group — so plan drills hold the lab's
-    mesh == virtual bit-identity. Server-stateful buckets decode under
-    weights FIXED for the step; ONE flip-rate EMA update folds across
-    the schedule, normalised by the weighted buckets' true coordinate
-    count (padding lanes cropped before decoding, as everywhere)."""
-    from repro.core.codecs.ternary import TERNARY_WIRE
-    from repro.core.vote_engine import STRATEGIES as _S
-    state = dict(server_state) if server_state else {}
-    m, n = signs.shape
-    if n != plan.n_params:
-        raise ValueError(f"stacked buffer has {n} coords, plan manifest "
-                         f"says {plan.n_params}")
-    w = None
-    if plan.has_server_state:
-        from repro.core.codecs import weighted
-        if "flip_ema" not in state:
-            raise ValueError("plan carries a server-stateful codec; "
-                             "thread its server state through "
-                             "virtual_plan_vote")
-        w = weighted.reliability_weights(state["flip_ema"])
-    votes, mismatch, total_w = [], None, 0
-    for bucket in plan.buckets:
-        seg = signs[:, bucket.start:bucket.start + bucket.length]
-        if bucket.codec == "weighted_vote":
-            from repro.core.codecs import weighted
-            wire = _S[VoteStrategy.ALLGATHER_1BIT].pack(seg, m)
-            # crop the padding lanes before decoding (they always agree
-            # with the vote and would dilute the flip observations)
-            stacked = sc.unpack_signs(wire, jnp.int8)[:, :bucket.length]
-            vote, mis = weighted.decode_leaf_fixed(stacked, w)
-            mismatch = mis if mismatch is None else mismatch + mis
-            total_w += bucket.length
-        elif bucket.codec == "ternary2bit" \
-                and bucket.strategy == VoteStrategy.ALLGATHER_1BIT:
-            wire = TERNARY_WIRE.pack(seg, m)
-            vote = TERNARY_WIRE.unpack(TERNARY_WIRE.tally(wire, m),
-                                       bucket.length, jnp.int8)
-        else:
-            vote = virtual_vote(seg, bucket.strategy)
-        votes.append(vote)
-    if mismatch is not None:
-        from repro.core.codecs import weighted
-        state["flip_ema"] = ((1.0 - weighted.RHO) * state["flip_ema"]
-                             + weighted.RHO * mismatch / total_w)
-    out = jnp.concatenate(votes) if len(votes) > 1 else votes[0]
-    return out, state
+    """DEPRECATED shim: (M, n_params) stacked int8 signs ->
+    ((n_params,) int8 votes, new server state) through a
+    :class:`~repro.core.vote_plan.VotePlan` bucket schedule."""
+    va.warn_legacy("virtual_mesh.virtual_plan_vote")
+    out = va.VirtualBackend().execute(va.VoteRequest(
+        payload=signs, form="stacked", plan=plan,
+        server_state=server_state))
+    return out.votes, out.server_state
 
 
 @dataclasses.dataclass(frozen=True)
 class VirtualVoteEngine:
-    """`core.vote_engine.VoteEngine` semantics on a stacked voter dim.
+    """Stacked-voter-dim engine semantics, now a thin wrapper over
+    :class:`~repro.core.vote_api.VirtualBackend`.
 
-    Mirrors the mesh engine stage for stage: ternary sign extraction, then
-    the compiled Byzantine model (same ``core.byzantine`` transforms, same
-    PRNG keys — replica index = row index), then the strategy wire path.
-    ``vote_with_failures`` composes stale-vote straggler substitution in
-    front, in the same order as ``fault_tolerance.vote_with_failures``.
+    Mirrors the mesh engine stage for stage: ternary sign extraction,
+    then stale-vote substitution, then the compiled Byzantine model
+    (same ``core.byzantine`` transforms, same PRNG keys — replica index
+    = row index), then the strategy wire path, in the pinned
+    ``FailureSpec`` order.
     """
 
     strategy: VoteStrategy
@@ -193,22 +90,22 @@ class VirtualVoteEngine:
                         step: Optional[jax.Array] = None) -> jax.Array:
         """The (M, n) int8 sign tensor that actually reaches the wire:
         sign extraction -> stale substitution -> adversary perturbation."""
-        signs = sc.sign_ternary(values)
-        if n_stale and prev_signs is not None:
-            m = signs.shape[0]
-            mask = (jnp.arange(m, dtype=jnp.int32) < n_stale)[:, None]
-            signs = simulate_stragglers(signs, prev_signs.astype(signs.dtype),
-                                        mask)
-        if self.byz is not None:
-            signs = byzantine.apply_adversary_stacked(
-                signs, self.byz, step=step, salt=self.salt)
-        return signs
+        return va.effective_stacked_signs(values, prev_signs, n_stale,
+                                          self.byz, step, self.salt)
+
+    def _request(self, values, prev=None, n_stale: int = 0, step=None):
+        return va.VoteRequest(
+            payload=values, form="stacked", strategy=self.strategy,
+            codec=self.codec,
+            failures=va.FailureSpec(
+                n_stale=n_stale if prev is not None else 0, byz=self.byz),
+            prev=prev, step=step, salt=self.salt)
 
     def vote(self, values: jax.Array,
              step: Optional[jax.Array] = None) -> jax.Array:
         """(M, n) stacked replica-local values -> (n,) int8 majority."""
-        return virtual_vote(self.effective_signs(values, step=step),
-                            self.strategy)
+        return va.VirtualBackend().execute(
+            self._request(values, step=step)).votes
 
     def vote_with_failures(self, values: jax.Array,
                            prev_signs: Optional[jax.Array] = None,
@@ -218,4 +115,5 @@ class VirtualVoteEngine:
         """One aggregation under failures; returns (vote, effective signs)
         so trace capture sees exactly what went on the wire."""
         signs = self.effective_signs(values, prev_signs, n_stale, step)
-        return virtual_vote(signs, self.strategy), signs
+        return va.VirtualBackend().execute(
+            self._request(values, prev_signs, n_stale, step)).votes, signs

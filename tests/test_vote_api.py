@@ -1,0 +1,479 @@
+"""The declarative vote API (DESIGN.md §10): request validation, backend
+capability introspection, the WireReport accounting, the deprecation
+once-guard — and bitwise shim→new-API equality for EVERY legacy vote
+entry point (the satellite acceptance bar: each shim must delegate, not
+re-implement)."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.configs.base import ByzantineConfig, VoteStrategy
+from repro.core import majority_vote as mv
+from repro.core import sign_compress as sc
+from repro.core import vote_api as va
+from repro.core import vote_plan as vp
+from repro.core.vote_engine import VoteEngine
+from repro.distributed import fault_tolerance as ft
+from repro.sim import virtual_mesh as vmesh
+
+RNG = np.random.default_rng(0)
+BYZ = ByzantineConfig(mode="sign_flip", num_adversaries=1)
+
+
+def _stacked(m=5, n=70):
+    return jnp.asarray(RNG.normal(size=(m, n)).astype(np.float32))
+
+
+def _signs(m=5, n=70):
+    return jnp.asarray(RNG.integers(-1, 2, size=(m, n)).astype(np.int8))
+
+
+def _quiet(fn, *a, **kw):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return fn(*a, **kw)
+
+
+# ---------------------------------------------------------------------------
+# request validation (build-time rejection, actionable messages)
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_codec_rejected():
+    with pytest.raises(ValueError, match="unknown codec"):
+        va.VoteRequest(payload=_signs(), form="stacked", codec="nope")
+
+
+def test_unknown_form_rejected():
+    with pytest.raises(ValueError, match="unknown payload form"):
+        va.VoteRequest(payload=_signs(), form="flat")
+
+
+def test_codec_strategy_combo_rejected_at_build():
+    with pytest.raises(ValueError, match="cannot ride strategy"):
+        va.VoteRequest(payload=_signs(), form="stacked",
+                       strategy=VoteStrategy.PSUM_INT8,
+                       codec="weighted_vote",
+                       server_state={"flip_ema": jnp.zeros(5)})
+
+
+def test_stacked_payload_must_be_2d():
+    with pytest.raises(ValueError, match="must be \\(M, n\\)"):
+        va.VoteRequest(payload=jnp.zeros(8, jnp.int8), form="stacked")
+
+
+def test_stale_without_prev_rejected():
+    with pytest.raises(ValueError, match="no prev signs"):
+        va.VoteRequest(payload=_signs(), form="stacked",
+                       failures=va.FailureSpec(n_stale=2))
+
+
+def test_stateful_codec_without_state_rejected():
+    with pytest.raises(ValueError, match="server-side decode state"):
+        va.VoteRequest(payload=_signs(), form="stacked",
+                       strategy=VoteStrategy.ALLGATHER_1BIT,
+                       codec="weighted_vote")
+
+
+def test_stateful_codec_no_axes_degenerate_passes_through():
+    """Legacy semantics pinned: with NO vote axes (M=1 single process)
+    the stateful-codec entry points returned the signs untouched and
+    never demanded decode state — the leaf/tree forms must keep that
+    (state is only required where a decode actually runs)."""
+    s = sc.sign_ternary(
+        jnp.asarray(RNG.normal(size=(40,)).astype(np.float32)))
+    eng = VoteEngine(strategy=VoteStrategy.ALLGATHER_1BIT, axes=(),
+                     codec="weighted_vote")
+    got, state = _quiet(eng.vote_signs_codec, s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(s))
+    assert state == {}
+    # but inside a region WITH vote axes the missing state is an error
+    def f(vals):
+        out = va.MeshBackend(axes=("data",)).execute(va.VoteRequest(
+            payload=vals[0], form="leaf",
+            strategy=VoteStrategy.ALLGATHER_1BIT, codec="weighted_vote"))
+        return out.votes[None]
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
+    sh = compat.shard_map(f, mesh=mesh, in_specs=(P("data"),),
+                          out_specs=P("data"), axis_names={"data"},
+                          check_vma=False)
+    with pytest.raises(ValueError, match="server state"):
+        jax.jit(sh)(s[None])
+
+
+def test_plan_payload_mismatch_rejected():
+    plan = vp.build_plan({"x": (64,)}, bucket_bytes=8)
+    with pytest.raises(ValueError, match="plan manifest"):
+        va.VoteRequest(payload=_signs(5, 70), form="stacked", plan=plan)
+
+
+def test_plan_tree_name_mismatch_rejected():
+    plan = vp.build_plan({"x": (8,)}, bucket_bytes=8)
+    with pytest.raises(ValueError, match="disagree"):
+        va.VoteRequest(payload={"y": jnp.zeros(8)}, form="tree",
+                       plan=plan)
+
+
+def test_diagnostics_need_tree_form():
+    with pytest.raises(ValueError, match="diagnostics"):
+        va.VoteRequest(payload=_signs(), form="stacked", diagnostics=True)
+
+
+def test_tree_payload_must_be_nonempty_dict():
+    with pytest.raises(ValueError, match="non-empty dict"):
+        va.VoteRequest(payload={}, form="tree")
+
+
+def test_bad_adversary_mode_rejected():
+    with pytest.raises(ValueError, match="unknown adversary mode"):
+        va.FailureSpec(byz=ByzantineConfig(mode="martian"))
+
+
+# ---------------------------------------------------------------------------
+# capability introspection
+# ---------------------------------------------------------------------------
+
+
+def test_supports_matrix():
+    stacked = va.VoteRequest(payload=_signs(1, 32), form="stacked")
+    leaf = va.VoteRequest(payload=jnp.zeros(32, jnp.int8), form="leaf")
+    assert va.VirtualBackend().supports(stacked)
+    assert not va.VirtualBackend().supports(leaf)
+    assert va.MeshBackend().supports(stacked)          # 1 voter, 1 device
+    assert not va.MeshBackend().supports(leaf)         # no axes given
+    assert va.MeshBackend(axes=("data",)).supports(leaf)
+    big = va.VoteRequest(payload=_signs(64, 32), form="stacked")
+    if len(jax.devices()) < 64:
+        assert not va.MeshBackend().supports(big)
+        with pytest.raises(ValueError, match="devices"):
+            va.MeshBackend().execute(big)
+
+
+def test_kernel_backend_capability():
+    vb = va.VirtualBackend(use_kernels=True)
+    ok = va.VoteRequest(payload=_stacked(), form="stacked",
+                        strategy=VoteStrategy.ALLGATHER_1BIT)
+    assert vb.supports(ok)
+    psum = va.VoteRequest(payload=_stacked(), form="stacked",
+                          strategy=VoteStrategy.PSUM_INT8)
+    assert not vb.supports(psum)       # count-wire tie semantics
+    with pytest.raises(ValueError, match="tie rule"):
+        vb.execute(psum)
+    failed = va.VoteRequest(payload=_stacked(), form="stacked",
+                            strategy=VoteStrategy.ALLGATHER_1BIT,
+                            failures=va.FailureSpec(byz=BYZ))
+    assert not vb.supports(failed)
+
+
+# ---------------------------------------------------------------------------
+# WireReport accounting (computed once, on the outcome)
+# ---------------------------------------------------------------------------
+
+
+def test_wire_report_bytes_and_messages():
+    x = _signs(4, 64)
+    out = va.VirtualBackend().execute(va.VoteRequest(
+        payload=x, form="stacked", strategy=VoteStrategy.ALLGATHER_1BIT))
+    assert out.wire.n_voters == 4
+    assert out.wire.payload_bytes == 64 / 8.0          # 1 bit/param
+    assert out.wire.n_messages == 1
+    assert out.wire.strategy == VoteStrategy.ALLGATHER_1BIT
+
+    plan = vp.build_plan({"x": (64,)}, bucket_bytes=4,
+                         strategy=VoteStrategy.ALLGATHER_1BIT)
+    outp = va.VirtualBackend().execute(va.VoteRequest(
+        payload=x, form="stacked", plan=plan))
+    assert outp.wire.n_messages == plan.n_buckets > 1
+    assert outp.wire.payload_bytes == 64 / 8.0
+
+
+def test_wire_report_diagnostics_on_tree():
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
+    tree = {"a": jnp.asarray(RNG.normal(size=(1, 48)).astype(np.float32))}
+    backend = va.MeshBackend(axes=("data",))
+
+    def f(t):
+        out = backend.execute(va.VoteRequest(
+            payload={"a": t["a"][0]}, form="tree",
+            strategy=VoteStrategy.PSUM_INT8, diagnostics=True))
+        return out.votes["a"][None], out.wire.margin, out.wire.agreement
+
+    sh = compat.shard_map(f, mesh=mesh, in_specs=({"a": P("data")},),
+                          out_specs=(P("data"), P(), P()),
+                          axis_names={"data"}, check_vma=False)
+    votes, margin, agreement = jax.jit(sh)(tree)
+    assert float(agreement) == 1.0                     # M=1: vote == sign
+    assert 0.0 <= float(margin) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# deprecation once-guard
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_shims_warn_exactly_once():
+    va._WARNED.discard("virtual_mesh.virtual_vote")
+    s = _signs(3, 40)
+    with pytest.warns(DeprecationWarning, match="virtual_vote"):
+        vmesh.virtual_vote(s, VoteStrategy.PSUM_INT8)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        vmesh.virtual_vote(s, VoteStrategy.PSUM_INT8)  # guarded: silent
+
+
+# ---------------------------------------------------------------------------
+# shim -> new-API bitwise equality, one assertion per legacy name
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", [VoteStrategy.PSUM_INT8,
+                                      VoteStrategy.ALLGATHER_1BIT,
+                                      VoteStrategy.HIERARCHICAL])
+def test_shim_virtual_vote(strategy):
+    s = _signs()
+    got = _quiet(vmesh.virtual_vote, s, strategy)
+    want = va.VirtualBackend().execute(va.VoteRequest(
+        payload=s, form="stacked", strategy=strategy)).votes
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("codec", ["sign1bit", "ef_sign", "ternary2bit",
+                                   "weighted_vote"])
+def test_shim_virtual_vote_codec(codec):
+    from repro.core import codecs as codecs_mod
+    s = _signs()
+    state = codecs_mod.get_codec(codec).init_server_state(5)
+    got, gstate = _quiet(vmesh.virtual_vote_codec, s,
+                         VoteStrategy.ALLGATHER_1BIT, codec, state)
+    out = va.VirtualBackend().execute(va.VoteRequest(
+        payload=s, form="stacked", strategy=VoteStrategy.ALLGATHER_1BIT,
+        codec=codec, server_state=state))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(out.votes))
+    for k in gstate:
+        np.testing.assert_array_equal(np.asarray(gstate[k]),
+                                      np.asarray(out.server_state[k]))
+
+
+def test_shim_virtual_plan_vote():
+    s = _signs(4, 96)
+    plan = vp.build_plan({"a": (40,), "b": (56,)}, bucket_bytes=8,
+                         strategy=VoteStrategy.ALLGATHER_1BIT,
+                         codec_map=(("a", "ternary2bit"),))
+    got, _ = _quiet(vmesh.virtual_plan_vote, s, plan, {})
+    want = va.VirtualBackend().execute(va.VoteRequest(
+        payload=s, form="stacked", plan=plan)).votes
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("use_kernels", [True, False])
+def test_shim_vote_stacked(use_kernels):
+    x = _stacked()
+    got = _quiet(VoteEngine(strategy=VoteStrategy.PSUM_INT8).vote_stacked,
+                 x, use_kernels)
+    want = va.VirtualBackend(use_kernels=use_kernels).execute(
+        va.VoteRequest(payload=x, form="stacked",
+                       strategy=VoteStrategy.ALLGATHER_1BIT)).votes
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def _region_pair(legacy_fn, new_fn, *arrays):
+    """Run a legacy entry and its new-API twin inside the SAME 1-device
+    partial-auto mesh region; return both results as numpy."""
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
+
+    def wrap(f):
+        def g(*args):
+            return f(*[a[0] for a in args])[None]
+        sh = compat.shard_map(
+            g, mesh=mesh, in_specs=tuple(P("data") for _ in arrays),
+            out_specs=P("data"), axis_names={"data"}, check_vma=False)
+        return np.asarray(jax.jit(sh)(*[a[None] for a in arrays]))[0]
+
+    return wrap(legacy_fn), wrap(new_fn)
+
+
+def test_shim_engine_vote_and_vote_signs():
+    eng = VoteEngine(strategy=VoteStrategy.PSUM_INT8, axes=("data",),
+                     byz=BYZ, salt=7)
+    backend = va.MeshBackend(axes=("data",))
+    x = jnp.asarray(RNG.normal(size=(40,)).astype(np.float32))
+
+    got, want = _region_pair(
+        lambda v: _quiet(eng.vote, v, jnp.int32(3)),
+        lambda v: backend.execute(va.VoteRequest(
+            payload=v, form="leaf", strategy=eng.strategy,
+            failures=va.FailureSpec(byz=BYZ), step=jnp.int32(3),
+            salt=7)).votes,
+        x)
+    np.testing.assert_array_equal(got, want)
+
+    s = sc.sign_ternary(x)
+    got, want = _region_pair(
+        lambda v: _quiet(eng.vote_signs, v),
+        lambda v: backend.execute(va.VoteRequest(
+            payload=v, form="leaf", strategy=eng.strategy,
+            salt=7)).votes,
+        s)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_shim_engine_codec_entries():
+    eng = VoteEngine(strategy=VoteStrategy.ALLGATHER_1BIT, axes=("data",),
+                     codec="ternary2bit")
+    backend = va.MeshBackend(axes=("data",))
+    x = jnp.asarray(RNG.normal(size=(40,)).astype(np.float32))
+
+    got, want = _region_pair(
+        lambda v: _quiet(eng.vote_codec, v)[0],
+        lambda v: backend.execute(va.VoteRequest(
+            payload=v, form="leaf", strategy=eng.strategy,
+            codec="ternary2bit")).votes,
+        x)
+    np.testing.assert_array_equal(got, want)
+
+    s = sc.sign_ternary(x)
+    got, want = _region_pair(
+        lambda v: _quiet(eng.vote_signs_codec, v)[0],
+        lambda v: backend.execute(va.VoteRequest(
+            payload=v, form="leaf", strategy=eng.strategy,
+            codec="ternary2bit")).votes,
+        s)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_shim_tree_entries():
+    tree = {"a": jnp.asarray(RNG.normal(size=(24,)).astype(np.float32)),
+            "b": jnp.asarray(RNG.normal(size=(3, 16)).astype(np.float32))}
+    backend = va.MeshBackend(axes=())     # degenerate M=1, no region
+    for legacy, req_codec in [
+            (lambda: _quiet(mv.tree_vote, tree, VoteStrategy.PSUM_INT8,
+                            ()), "sign1bit"),
+            (lambda: _quiet(mv.tree_vote_codec, tree,
+                            VoteStrategy.PSUM_INT8, (),
+                            codec="ternary2bit")[0], "ternary2bit"),
+            (lambda: _quiet(VoteEngine(
+                strategy=VoteStrategy.PSUM_INT8).vote_tree, tree),
+             "sign1bit"),
+            (lambda: _quiet(VoteEngine(
+                strategy=VoteStrategy.PSUM_INT8,
+                codec="ternary2bit").vote_tree_codec, tree)[0],
+             "ternary2bit")]:
+        got = legacy()
+        want = backend.execute(va.VoteRequest(
+            payload=tree, form="tree", strategy=VoteStrategy.PSUM_INT8,
+            codec=req_codec)).votes
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(want[k]))
+
+
+def test_shim_majority_vote_flat():
+    s = sc.sign_ternary(
+        jnp.asarray(RNG.normal(size=(40,)).astype(np.float32)))
+    got, want = _region_pair(
+        lambda v: _quiet(mv.majority_vote_flat, v,
+                         VoteStrategy.ALLGATHER_1BIT, ("data",)),
+        lambda v: va.MeshBackend(axes=("data",)).execute(va.VoteRequest(
+            payload=v, form="leaf",
+            strategy=VoteStrategy.ALLGATHER_1BIT)).votes,
+        s)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_shim_vote_with_failures_family():
+    eng = VoteEngine(strategy=VoteStrategy.PSUM_INT8, axes=("data",),
+                     byz=BYZ)
+    backend = va.MeshBackend(axes=("data",))
+    x = jnp.asarray(RNG.normal(size=(40,)).astype(np.float32))
+    prev = jnp.asarray(RNG.integers(-1, 2, size=(40,)).astype(np.int8))
+
+    def new_req(v, p, **kw):
+        return va.VoteRequest(
+            payload=v, form="leaf", strategy=eng.strategy,
+            failures=va.FailureSpec(n_stale=1, byz=BYZ), prev=p,
+            step=jnp.int32(2), **kw)
+
+    got, want = _region_pair(
+        lambda v, p: _quiet(ft.vote_with_failures, eng, v, p, 1,
+                            jnp.int32(2)),
+        lambda v, p: backend.execute(new_req(v, p)).votes,
+        x, prev)
+    np.testing.assert_array_equal(got, want)
+
+    got, want = _region_pair(
+        lambda v, p: _quiet(ft.codec_vote_with_failures, eng, v, p, 1,
+                            jnp.int32(2))[0],
+        lambda v, p: backend.execute(new_req(v, p)).votes,
+        x, prev)
+    np.testing.assert_array_equal(got, want)
+
+    plan = vp.build_plan({"x": (40,)}, bucket_bytes=4,
+                         strategy=VoteStrategy.PSUM_INT8)
+    got, want = _region_pair(
+        lambda v, p: _quiet(ft.plan_vote_with_failures, eng, plan, v, p,
+                            1, jnp.int32(2))[0],
+        lambda v, p: backend.execute(
+            dataclasses_replace_plan(new_req(v, p), plan)).votes,
+        x, prev)
+    np.testing.assert_array_equal(got, want)
+
+
+def dataclasses_replace_plan(req, plan):
+    import dataclasses
+    return dataclasses.replace(req, plan=plan)
+
+
+def test_shim_plan_vote_signs_and_plan_tree_vote():
+    plan = vp.build_plan({"x": (40,)}, bucket_bytes=4,
+                         strategy=VoteStrategy.PSUM_INT8)
+    s = sc.sign_ternary(
+        jnp.asarray(RNG.normal(size=(40,)).astype(np.float32)))
+    got, want = _region_pair(
+        lambda v: _quiet(vp.plan_vote_signs, plan, v, ("data",))[0],
+        lambda v: va.MeshBackend(axes=("data",)).execute(va.VoteRequest(
+            payload=v, form="leaf", plan=plan)).votes,
+        s)
+    np.testing.assert_array_equal(got, want)
+
+    tree = {"x": jnp.asarray(RNG.normal(size=(40,)).astype(np.float32))}
+    got = _quiet(vp.plan_tree_vote, plan, tree, (), byz=None)[0]
+    want = va.MeshBackend(axes=()).execute(va.VoteRequest(
+        payload=tree, form="tree", plan=plan)).votes
+    np.testing.assert_array_equal(np.asarray(got["x"]),
+                                  np.asarray(want["x"]))
+
+
+# ---------------------------------------------------------------------------
+# cross-backend bit-identity at M=1 (the in-process slice of the tier-2
+# 8-device harness guarantee)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec,strategy", [
+    ("sign1bit", VoteStrategy.PSUM_INT8),
+    ("sign1bit", VoteStrategy.ALLGATHER_1BIT),
+    ("ternary2bit", VoteStrategy.ALLGATHER_1BIT),
+    ("weighted_vote", VoteStrategy.ALLGATHER_1BIT),
+])
+def test_mesh_equals_virtual_single_voter(codec, strategy):
+    from repro.core import codecs as codecs_mod
+    x = jnp.asarray(RNG.normal(size=(1, 48)).astype(np.float32))
+    state = codecs_mod.get_codec(codec).init_server_state(1)
+    req = va.VoteRequest(payload=x, form="stacked", strategy=strategy,
+                         codec=codec, server_state=state or None)
+    vout = va.VirtualBackend().execute(req)
+    mout = va.MeshBackend().execute(req)
+    np.testing.assert_array_equal(np.asarray(vout.votes),
+                                  np.asarray(mout.votes))
+    assert np.asarray(vout.votes).dtype == np.int8
+    for k in vout.server_state:
+        np.testing.assert_array_equal(np.asarray(vout.server_state[k]),
+                                      np.asarray(mout.server_state[k]))

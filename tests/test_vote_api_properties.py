@@ -1,0 +1,148 @@
+"""Property-based tests (hypothesis) for the vote API (DESIGN.md §10):
+
+* **cross-backend closure** — a randomly composed VoteRequest either
+  (a) fails validation at BUILD time with ValueError (so neither backend
+  ever sees it — "rejected by both with the same error class" holds by
+  construction), or (b) executes on the VirtualBackend, and — whenever
+  the host has enough devices for its voter count — on the MeshBackend
+  too, with bit-identical votes, bit-identical server state, and the
+  same static WireReport;
+* the WireReport's payload bytes match the codec × strategy arithmetic.
+
+``hypothesis`` is optional: without it this module skips; the
+deterministic twins below the property tests always run (tier-1).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ByzantineConfig, VoteStrategy
+from repro.core import codecs as codecs_mod
+from repro.core import vote_api as va
+
+CONCRETE = [VoteStrategy.PSUM_INT8, VoteStrategy.ALLGATHER_1BIT,
+            VoteStrategy.HIERARCHICAL]
+MODES = ["none", "sign_flip", "random", "zero", "colluding", "blind"]
+
+
+def _build(m, n, strategy, codec, n_stale, mode, n_adv, salt, with_state,
+           seed=0):
+    """Build the request from raw draws; ValueError propagates (that IS
+    the backend-independent rejection)."""
+    rng = np.random.default_rng(seed)
+    payload = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    prev = (jnp.asarray(rng.integers(-1, 2, size=(m, n)).astype(np.int8))
+            if n_stale else None)
+    byz = (ByzantineConfig(mode=mode, num_adversaries=n_adv, seed=1)
+           if mode != "none" else None)
+    state = (codecs_mod.get_codec(codec).init_server_state(m)
+             if with_state else None)
+    return va.VoteRequest(
+        payload=payload, form="stacked", strategy=strategy, codec=codec,
+        failures=va.FailureSpec(n_stale=n_stale, byz=byz), prev=prev,
+        step=jnp.int32(3), salt=salt, server_state=state)
+
+
+def _check_request(m, n, strategy, codec, n_stale, mode, n_adv, salt,
+                   with_state, seed=0):
+    """The closure property, shared by the hypothesis sweep and the
+    deterministic twins."""
+    try:
+        req = _build(m, n, strategy, codec, n_stale, mode, n_adv, salt,
+                     with_state, seed)
+    except ValueError:
+        # invalid by construction: rebuilding must fail identically —
+        # neither backend is ever consulted
+        with pytest.raises(ValueError):
+            _build(m, n, strategy, codec, n_stale, mode, n_adv, salt,
+                   with_state, seed)
+        return "rejected"
+    vout = va.VirtualBackend().execute(req)
+    votes = np.asarray(vout.votes)
+    assert votes.shape == (n,) and votes.dtype == np.int8
+    assert set(np.unique(votes)) <= {-1, 0, 1}
+    mesh = va.MeshBackend()
+    if mesh.supports(req):
+        mout = mesh.execute(req)
+        np.testing.assert_array_equal(votes, np.asarray(mout.votes))
+        assert set(vout.server_state) == set(mout.server_state)
+        for k in vout.server_state:
+            np.testing.assert_array_equal(
+                np.asarray(vout.server_state[k]),
+                np.asarray(mout.server_state[k]))
+        assert vout.wire == mout.wire
+    else:
+        with pytest.raises(ValueError):
+            mesh.execute(req)
+    # wire arithmetic: payload bytes = n * wire_bits / 8 at the resolved
+    # strategy
+    if vout.wire.strategy is not None:
+        bits = codecs_mod.get_codec(codec).wire_bits(vout.wire.strategy)
+        assert vout.wire.payload_bytes == pytest.approx(n * bits / 8.0)
+    return "executed"
+
+
+# ---------------------------------------------------------------------------
+# deterministic twins (always run; cover every codec and both outcomes)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cell", [
+    # m, n, strategy, codec, n_stale, mode, n_adv, salt, with_state
+    (1, 48, VoteStrategy.PSUM_INT8, "sign1bit", 0, "none", 0, 0, False),
+    (1, 33, VoteStrategy.ALLGATHER_1BIT, "ternary2bit", 1, "sign_flip",
+     1, 5, False),
+    (1, 40, VoteStrategy.ALLGATHER_1BIT, "weighted_vote", 0, "random",
+     1, 3, True),
+    (1, 64, VoteStrategy.HIERARCHICAL, "ef_sign", 1, "colluding", 1, 9,
+     False),
+    (5, 70, VoteStrategy.PSUM_INT8, "sign1bit", 2, "blind", 2, 1, False),
+    (6, 90, VoteStrategy.ALLGATHER_1BIT, "weighted_vote", 1, "zero", 2,
+     4, True),
+])
+def test_closure_deterministic(cell):
+    assert _check_request(*cell) == "executed"
+
+
+@pytest.mark.parametrize("cell", [
+    # invalid cells: every rejection is a build-time ValueError
+    (4, 32, VoteStrategy.PSUM_INT8, "weighted_vote", 0, "none", 0, 0,
+     True),                                    # codec can't ride psum
+    (4, 32, VoteStrategy.HIERARCHICAL, "ternary2bit", 0, "none", 0, 0,
+     False),                                   # rebroadcast re-binarises
+    (4, 32, VoteStrategy.ALLGATHER_1BIT, "weighted_vote", 0, "none", 0,
+     0, False),                                # missing server state
+    (4, 32, VoteStrategy.PSUM_INT8, "nope", 0, "none", 0, 0, False),
+])
+def test_closure_deterministic_rejections(cell):
+    assert _check_request(*cell) == "rejected"
+
+
+# ---------------------------------------------------------------------------
+# the hypothesis sweep (guarded import so the twins above ALWAYS run)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
+
+
+if given is not None:
+    @given(st.integers(1, 8), st.integers(1, 80),
+           st.sampled_from(CONCRETE),
+           st.sampled_from(sorted(codecs_mod.list_codecs())),
+           st.integers(0, 3), st.sampled_from(MODES), st.integers(0, 3),
+           st.integers(0, 9), st.booleans(), st.integers(0, 5))
+    @settings(max_examples=40, deadline=None)
+    def test_random_requests_close_over_both_backends(
+            m, n, strategy, codec, n_stale, mode, n_adv, salt,
+            with_state, seed):
+        _check_request(m, n, strategy, codec, min(n_stale, m), mode,
+                       min(n_adv, m), salt, with_state, seed)
+else:
+    @pytest.mark.skip(reason="property sweep needs hypothesis; the "
+                      "deterministic twins above cover the invariant")
+    def test_random_requests_close_over_both_backends():
+        pass
