@@ -22,9 +22,12 @@ model every example trains):
      launches where the leaf-wise baseline launches once per leaf, and
      records wall-clock for both;
   4. the 8-device harness (jit(shard_map) over an 8-wide 'data' axis,
-     the production wire): per-step wall-clock of the bucketed schedule
-     vs the leaf-wise baseline, votes asserted bit-identical.
-  Writes the machine-readable baseline ``BENCH_vote_plan.json``.
+     the production wire): a strategy x bucket_bytes x overlap sweep —
+     every cell's votes asserted bit-identical to the leaf-wise wire,
+     each strategy's best configuration recorded as its ``bucketed_ms``
+     row and gated to beat the leaf-wise baseline (DESIGN.md §11).
+  Writes the machine-readable baseline ``BENCH_vote_plan.json``
+  (diffed against the committed copy by ``scripts/perf_gate.py``).
 
 Usage:
     python -m benchmarks.bench_vote_plan            # LM sweep (subprocess)
@@ -146,9 +149,10 @@ def _quickstart_manifest(scale: int = 4):
     return shapes
 
 
-def _time(fn, iters=5):
+def _time(fn, iters=15):
     """Best-of-iters wall-clock (min cuts CPU scheduling noise, which on
-    a loaded CI host dwarfs the quantity under test)."""
+    a loaded CI host dwarfs the quantity under test — and which the
+    perf gate's 15% tolerance on the committed row must stay inside)."""
     import jax
     jax.block_until_ready(fn())          # compile + warm
     best = float("inf")
@@ -274,19 +278,27 @@ def smoke_rows():
     return out
 
 
+#: nominal bucket counts swept per strategy on the 8-device harness —
+#: the analytic α–β model cannot see the CPU emulation's per-round
+#: tally/reshape costs, so the harness picks each strategy's bucket size
+#: empirically (the committed ``bucketed_ms`` row is the sweep's best)
+HARNESS_BUCKET_COUNTS = (1, 4, 8, 16)
+
+
 def _mesh_harness_rows(shapes, stacked):
     """jit(shard_map) over the 8-wide 'data' axis — the production wire
-    on the 8-device harness: leaf-wise schedule (one engine vote round
-    per leaf) vs the bucketed plan, bit-identical votes required.
+    on the 8-device harness, swept over strategy x bucket_bytes x
+    overlap with bit-identical votes required for EVERY cell.
 
-    Both wires are measured; the hard wall-clock gate sits on the
-    DEFAULT strategy (``psum_int8``, OptimizerConfig's default), where
-    the per-round overhead the plan amortises dominates. The gathered
-    wire's per-round cost is tally-bound on the CPU emulation (the
-    bit-sliced popcount is identical work either way), so its row is
-    recorded without a gate — on real hardware that wire is where the
-    per-collective latency term lives, which the α–β schedule cost in
-    the analytic rows prices."""
+    Per strategy the sweep walks ``HARNESS_BUCKET_COUNTS`` nominal
+    bucket counts, each in the synchronous and (multi-bucket only) the
+    double-buffered issue order, and records the best configuration as
+    the ``bucketed_ms`` row — which must beat the leaf-wise wire on BOTH
+    strategies (1.25x slack so a loaded CI host cannot flake the lane).
+    The ``overlap_bit_identical`` row pins the §11 guarantee at exactly
+    1.0: any overlapped cell whose votes drift from the leaf-wise wire
+    is a hard error, and the perf gate treats the row as bit-identity
+    (exact match), not timing."""
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -307,15 +319,12 @@ def _mesh_harness_rows(shapes, stacked):
     total = stacked.shape[1]
     signs = jnp.sign(stacked).astype(jnp.int8)
     mesh = Mesh(np.array(jax.devices()[:m]), ("data",))
+    backend = va.MeshBackend(axes=("data",))
     rows_ = []
-    for strategy, gated in ((VoteStrategy.PSUM_INT8, True),
-                            (VoteStrategy.ALLGATHER_1BIT, False)):
-        plan = vp.build_plan(shapes, bucket_bytes=-(-total // (8 * 4)),
-                             strategy=strategy)
+    for strategy in (VoteStrategy.PSUM_INT8, VoteStrategy.ALLGATHER_1BIT):
         impl = STRATEGIES[strategy]
-        slots = plan.leaves
-
-        backend = va.MeshBackend(axes=("data",))
+        slots = vp.build_plan(shapes, bucket_bytes=1 << 30,
+                              strategy=strategy).leaves
 
         def leafwise(vals):
             v = vals[0]
@@ -323,37 +332,59 @@ def _mesh_harness_rows(shapes, stacked):
                     for s in slots]
             return jnp.concatenate(outs)[None]
 
-        def bucketed(vals):
-            v = backend.execute(va.VoteRequest(
-                payload=vals[0], form="leaf", plan=plan)).votes
-            return v[None]
-
-        fns = {}
-        for name, f in (("leafwise", leafwise), ("bucketed", bucketed)):
+        def compiled(f):
             sh = compat.shard_map(f, mesh=mesh, in_specs=(P("data"),),
-                                  out_specs=P("data"), axis_names={"data"},
-                                  check_vma=False)
-            fns[name] = jax.jit(sh)
-        v_leaf = fns["leafwise"](signs)
-        v_plan = fns["bucketed"](signs)
-        if not np.array_equal(np.asarray(v_leaf), np.asarray(v_plan)):
-            raise RuntimeError(
-                f"8-dev harness [{strategy.value}]: bucketed votes != "
-                "leaf-wise")
-        t_leaf = _time(lambda: fns["leafwise"](signs))
-        t_plan = _time(lambda: fns["bucketed"](signs))
+                                  out_specs=P("data"),
+                                  axis_names={"data"}, check_vma=False)
+            return jax.jit(sh)
+
+        f_leaf = compiled(leafwise)
+        v_leaf = np.asarray(f_leaf(signs))
+        # more timing iterations than the kernel-path sweep: the sweep's
+        # argmin (and the committed bucketed_ms row the perf gate holds
+        # future runs to) must not be a scheduling-noise artefact
+        t_leaf = _time(lambda: f_leaf(signs), iters=15)
         s = strategy.value
+        best = None                      # (time_s, plan, overlap)
+        n_overlap_cells = 0
+        for k in HARNESS_BUCKET_COUNTS:
+            plan = vp.build_plan(shapes, bucket_bytes=-(-total // (8 * k)),
+                                 strategy=strategy)
+            for overlap in ((False, True) if plan.n_buckets > 1
+                            else (False,)):
+                def bucketed(vals, plan=plan, overlap=overlap):
+                    return backend.execute(va.VoteRequest(
+                        payload=vals[0], form="leaf", plan=plan,
+                        overlap=overlap)).votes[None]
+                fn = compiled(bucketed)
+                if not np.array_equal(np.asarray(fn(signs)), v_leaf):
+                    raise RuntimeError(
+                        f"8-dev harness [{s}]: bucketed votes != "
+                        f"leaf-wise ({plan.n_buckets} buckets, "
+                        f"overlap={overlap})")
+                n_overlap_cells += overlap
+                t = _time(lambda: fn(signs), iters=15)
+                if best is None or t < best[0]:
+                    best = (t, plan, overlap)
+        t_plan, plan, overlap = best
         rows_.append((
             f"vote_plan-smoke/harness8/{s}/leafwise_ms", t_leaf * 1e3,
             f"one vote round per leaf ({len(slots)} rounds) on the "
             "8-device mesh"))
         rows_.append((
             f"vote_plan-smoke/harness8/{s}/bucketed_ms", t_plan * 1e3,
-            f"{plan.n_buckets} bucket rounds, votes bit-identical; "
+            f"sweep best: {plan.n_buckets} bucket rounds, "
+            f"overlap={overlap}, votes bit-identical; "
             f"{t_leaf / t_plan:.2f}x leafwise per step"))
-        # per-step wall-clock no worse than leaf-wise (slack so a loaded
-        # CI host cannot flake the lane; the JSON records the ratio)
-        if gated and t_plan > t_leaf * 1.25:
+        rows_.append((
+            f"vote_plan-smoke/harness8/{s}/overlap_bit_identical", 1.0,
+            f"{n_overlap_cells} overlapped cells == leaf-wise votes "
+            "(double-buffered walk is semantics-free, DESIGN.md §11)"))
+        # the sweep's best must not lose to leaf-wise on EITHER wire —
+        # this is the acceptance bar that turns the gathered wire's
+        # bucketed lane into a win (slack so a loaded CI host cannot
+        # flake the lane; the JSON records the ratio)
+        if t_plan > t_leaf * 1.25:
             raise RuntimeError(
                 f"bucketed wire slower than leaf-wise on the 8-dev "
                 f"harness [{s}] ({t_plan * 1e3:.2f} ms vs "

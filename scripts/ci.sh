@@ -6,10 +6,13 @@
 # 8-virtual-device host platform, <60 s), the codec smoke sweep
 # (every gradient codec drilled on 8 virtual devices, new codecs
 # asserted mesh==virtual, BENCH_codecs.json baseline written, <10 s),
-# and the vote-plan smoke (golden single-bucket fixed point, per-bucket
-# kernel-launch accounting, 8-dev harness wall-clock gate; the
-# companion mixed-codec host-count-invariance drill runs in the tier-2
-# lane via tests/tier2/test_plan_drills.py).
+# the vote-plan smoke (golden single-bucket fixed point, per-bucket
+# kernel-launch accounting, 8-dev harness strategy x bucket x overlap
+# sweep; the companion mixed-codec host-count-invariance drill runs in
+# the tier-2 lane via tests/tier2/test_plan_drills.py), and the perf
+# gate (scripts/perf_gate.py: fresh smoke JSONs vs the committed
+# BENCH_*.json baselines — >15% timing regression or any bit-identity
+# row change fails).
 #
 #   scripts/ci.sh          # everything
 #   scripts/ci.sh --quick  # skip tests marked slow (the distributed
@@ -39,6 +42,13 @@ echo "== scenario lab smoke (8-virtual-device platform) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   python -m benchmarks.bench_robustness --scenario-smoke
 
+# snapshot the committed benchmark baselines BEFORE the smoke lanes
+# overwrite them in place — scripts/perf_gate.py diffs fresh vs
+# committed after the lanes finish (one bench run total, not two)
+PERF_BASE="$(mktemp -d)"
+trap 'rm -rf "$PERF_BASE"' EXIT
+cp BENCH_codecs.json BENCH_vote_plan.json "$PERF_BASE/"
+
 echo "== codec smoke (8-virtual-device platform; writes BENCH_codecs.json) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   python -m benchmarks.bench_codecs --smoke
@@ -53,6 +63,15 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 # adversary — lives in tests/tier2/test_plan_drills.py and already runs
 # in the tier-2 lane above; re-invoking it here would double its
 # multi-minute subprocess replays)
+
+echo "== perf gate (fresh smoke numbers vs committed baselines) =="
+# >15% regression on any *_ms timing row, or ANY change on a
+# bit-identity/accounting row, fails the build; improvements pass
+# (re-commit the refreshed JSON to bank them)
+python scripts/perf_gate.py \
+  --baseline "$PERF_BASE/BENCH_codecs.json" --fresh BENCH_codecs.json
+python scripts/perf_gate.py \
+  --baseline "$PERF_BASE/BENCH_vote_plan.json" --fresh BENCH_vote_plan.json
 
 echo "== api smoke (vote API examples + deprecated-surface check) =="
 # the two VoteRequest-rewritten examples, CI-sized (seconds each), then

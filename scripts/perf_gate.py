@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""Perf regression gate: diff a fresh benchmark JSON against the
+committed baseline, row by row.
+
+Both files use the ``{"rows": [{"name", "value", "derived"}, ...]}``
+schema that ``benchmarks.run --emit-json`` and the ``--smoke`` lanes
+write. Two row classes, decided by the row NAME:
+
+* ``*_ms`` (timing rows): fail when the fresh value regresses past the
+  committed value by more than ``--tol`` (default 15%). One-sided —
+  getting faster never fails; re-commit the JSON to bank the win.
+* everything else (bit-identity / accounting rows: golden digests,
+  mesh==virtual flags, launch counts): any numeric change fails. These
+  rows encode correctness claims, not measurements.
+
+``derived`` strings are free-form commentary (sweep-chosen bucket
+sizes, digest prefixes) and are never compared. Missing or extra rows
+fail in both directions: a silently dropped acceptance row is as bad as
+a regression.
+
+Usage (the ci.sh wiring snapshots the committed JSON before the smoke
+lane overwrites it in place):
+
+    cp BENCH_vote_plan.json /tmp/base.json
+    python -m benchmarks.bench_vote_plan --smoke
+    python scripts/perf_gate.py --baseline /tmp/base.json \\
+        --fresh BENCH_vote_plan.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict
+
+
+def load_rows(path: str) -> Dict[str, float]:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc["rows"] if isinstance(doc, dict) else doc
+    out: Dict[str, float] = {}
+    for r in rows:
+        if r["name"] in out:
+            raise SystemExit(f"perf_gate: duplicate row {r['name']!r} "
+                             f"in {path}")
+        out[r["name"]] = float(r["value"])
+    return out
+
+
+def diff(base: Dict[str, float], fresh: Dict[str, float],
+         tol: float) -> list:
+    """The list of human-readable failures (empty = gate passes)."""
+    failures = []
+    for name in sorted(set(base) - set(fresh)):
+        failures.append(f"row disappeared: {name} "
+                        f"(baseline {base[name]:.6g})")
+    for name in sorted(set(fresh) - set(base)):
+        failures.append(f"new row without a committed baseline: {name} "
+                        f"(fresh {fresh[name]:.6g}) — re-commit the "
+                        "JSON to bless it")
+    for name in sorted(set(base) & set(fresh)):
+        b, f = base[name], fresh[name]
+        if name.endswith("_ms"):
+            if f > b * (1.0 + tol):
+                failures.append(
+                    f"timing regression: {name} {f:.3f} ms vs baseline "
+                    f"{b:.3f} ms (+{(f / b - 1.0) * 100:.1f}% > "
+                    f"{tol * 100:.0f}% tolerance)")
+        elif f != b:
+            failures.append(
+                f"bit-identity/accounting row changed: {name} "
+                f"{f:.6g} vs baseline {b:.6g} (exact match required)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--baseline", required=True,
+                    help="committed benchmark JSON (snapshot it before "
+                         "a smoke lane overwrites the file in place)")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly produced benchmark JSON to vet")
+    ap.add_argument("--tol", type=float, default=0.15,
+                    help="one-sided relative tolerance for *_ms timing "
+                         "rows (default 0.15 = 15%%)")
+    args = ap.parse_args()
+
+    base = load_rows(args.baseline)
+    fresh = load_rows(args.fresh)
+    failures = diff(base, fresh, args.tol)
+    if failures:
+        print(f"perf_gate: {len(failures)} failure(s) "
+              f"({args.fresh} vs {args.baseline}):")
+        for f in failures:
+            print(f"  FAIL {f}")
+        return 1
+    n_timing = sum(1 for n in base if n.endswith("_ms"))
+    print(f"perf_gate: OK — {len(base)} rows ({n_timing} timing within "
+          f"{args.tol * 100:.0f}%, {len(base) - n_timing} exact)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

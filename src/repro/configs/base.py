@@ -280,28 +280,61 @@ class OptimizerConfig:
     codec: str = "sign1bit"
     # VotePlan (DESIGN.md §9): >0 flattens the explicitly-voted leaves
     # into one wire buffer cut into buckets of this many payload bytes
-    # (one vote round per bucket); 0 keeps the leaf-wise path (the
-    # default — flattening forfeits per-leaf 'model' shardings, see
-    # core/vote_plan.py).
+    # (one vote round per bucket); -1 (vote_plan.AUTO_BUCKET_BYTES) lets
+    # the AUTO selector price a per-strategy size ladder; 0 keeps the
+    # leaf-wise path (the default — flattening forfeits per-leaf 'model'
+    # shardings, see core/vote_plan.py).
     bucket_bytes: int = 0
     # per-leaf codec assignment for the plan: ((glob, codec), ...) with
     # first-match-wins; unmatched leaves take `resolved_codec`. E.g.
     # (("embed*", "ternary2bit"), ("*", "sign1bit")). Requires
     # bucket_bytes > 0 (validated below).
     codec_map: Tuple[Tuple[str, str], ...] = ()
+    # double-buffered schedule walk (DESIGN.md §11): bucket k's exchange
+    # issued while bucket k-1 tallies. Bit-identical to the synchronous
+    # walk; needs the bucketed plan (bucket_bytes != 0).
+    overlap: bool = False
+    # delayed-vote mode (DESIGN.md §11): apply step t's majority at step
+    # t+1, hiding the entire vote round behind the next backward pass.
+    # One-round int8 vote buffer rides in opt_state beside the momentum;
+    # step 0 applies weight decay only. Mode A (per_worker) sign
+    # optimizers only.
+    delayed_vote: bool = False
     beta2: float = 0.999          # adam baseline
     eps: float = 1e-8
     warmup_steps: int = 0
     total_steps: int = 0          # 0 = constant lr
 
     def __post_init__(self):
-        if self.codec_map and self.bucket_bytes <= 0:
+        if self.bucket_bytes < -1:
+            raise ValueError(
+                f"bucket_bytes must be > 0, 0 (leaf-wise) or -1 (AUTO "
+                f"ladder), got {self.bucket_bytes}")
+        if self.codec_map and self.bucket_bytes == 0:
             # the map only applies to the VotePlan wire; accepting it
             # with the plan disabled would silently train every leaf on
             # `codec` instead of the mapped codecs
             raise ValueError(
-                "codec_map needs bucket_bytes > 0 (per-leaf codecs ride "
-                "the bucketed VotePlan wire, DESIGN.md §9)")
+                "codec_map needs bucket_bytes > 0 (or the -1 AUTO "
+                "ladder): per-leaf codecs ride the bucketed VotePlan "
+                "wire, DESIGN.md §9)")
+        if self.overlap and self.bucket_bytes == 0:
+            raise ValueError(
+                "overlap=True double-buffers the bucketed VotePlan "
+                "schedule; set bucket_bytes > 0 (or -1 for the AUTO "
+                "ladder) or drop overlap (DESIGN.md §11)")
+        if self.delayed_vote:
+            if self.kind not in ("signum_vote", "signsgd_vote"):
+                raise ValueError(
+                    "delayed_vote applies the previous step's majority "
+                    f"vote; optimizer kind {self.kind!r} has no vote "
+                    "(DESIGN.md §11)")
+            if self.momentum_mode != MomentumMode.PER_WORKER:
+                raise ValueError(
+                    "delayed_vote requires momentum_mode=per_worker "
+                    "(Mode A): Mode B's fused ZeRO leaves vote inside "
+                    "the backward reduce-scatter, which cannot be "
+                    "deferred a step (DESIGN.md §11)")
 
     @property
     def resolved_codec(self) -> str:

@@ -125,6 +125,13 @@ def make_sign_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
         if beta > 0 or mode == MomentumMode.GLOBAL:
             state["momentum"] = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, mom_dtype), params)
+        if cfg.delayed_vote:
+            # one-round vote buffer (DESIGN.md §11): step t applies the
+            # majority voted at t-1. int8 ternary signs, replicated
+            # (every replica applies the same previous decision); zeros
+            # at step 0, so the first update is weight decay only.
+            state["delayed"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.int8), params)
         if ef:
             state["error"] = {
                 k: jnp.zeros(p.shape, mom_dtype) for k, p in params.items()
@@ -156,7 +163,8 @@ def make_sign_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
         out = backend.execute(va.VoteRequest(
             payload=tree, form="tree", strategy=cfg.vote_strategy,
             codec=codec.name, plan=plan, failures=va.FailureSpec(byz=byz),
-            step=step, server_state=cstate, diagnostics=diagnostics))
+            step=step, server_state=cstate, diagnostics=diagnostics,
+            overlap=cfg.overlap))
         diag = {}
         if diagnostics:
             diag["vote_agreement"] = out.wire.agreement
@@ -206,6 +214,16 @@ def make_sign_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
                     state["momentum"], votes)
                 state = {**state, "momentum": u}
                 votes = jax.tree.map(lambda x: jnp.sign(x), u)
+        if cfg.delayed_vote:
+            # apply the PREVIOUS step's majority; bank this step's fresh
+            # decision for t+1. EF feedback and the diagnostics above
+            # observed the FRESH vote — only the parameter update lags.
+            applied = state["delayed"]
+            state = {**state, "delayed": jax.tree.map(sc.sign_ternary,
+                                                      votes)}
+        else:
+            applied = votes
+
         def apply(p, vt):
             # barrier: without it XLA CSEs this f32 cast with the ZeRO
             # hook's gather operand and all-gathers params in fp32
@@ -214,7 +232,7 @@ def make_sign_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
             upd = vt.astype(jnp.float32) + cfg.weight_decay * p32
             return (p32 - eta * upd).astype(p.dtype)
 
-        new_params = jax.tree.map(apply, params, votes)
+        new_params = jax.tree.map(apply, params, applied)
         state = {**state, "count": state["count"] + 1}
         return new_params, state, diag
 

@@ -189,11 +189,13 @@ class VoteRequest:
     `strategy` may be ``AUTO`` (resolved against the comm cost model,
     codec-aware); `plan` switches execution to the §9 bucket schedule
     (whose per-group codecs/strategies then supersede `codec`/
-    `strategy`); `failures` composes stale substitution (needs `prev`)
-    and the Byzantine model; `step`/`salt` feed the adversary PRNG
-    discipline; `server_state` threads stateful codecs' decode memory;
-    `diagnostics` (tree form only) asks for margin/agreement in the
-    :class:`WireReport`."""
+    `strategy`); `overlap` selects the double-buffered schedule walk
+    (§11: bucket k's exchange issued while bucket k-1 tallies — needs a
+    plan, bit-identical to the synchronous walk); `failures` composes
+    stale substitution (needs `prev`) and the Byzantine model;
+    `step`/`salt` feed the adversary PRNG discipline; `server_state`
+    threads stateful codecs' decode memory; `diagnostics` (tree form
+    only) asks for margin/agreement in the :class:`WireReport`."""
 
     payload: Any
     form: str = "leaf"
@@ -206,6 +208,7 @@ class VoteRequest:
     salt: int = 0
     server_state: Optional[Dict[str, Any]] = None
     diagnostics: bool = False
+    overlap: bool = False
 
     # ---- build-time validation -----------------------------------------
 
@@ -260,6 +263,11 @@ class VoteRequest:
                 "computed over a voted tree; leaf/stacked callers "
                 "measure their own quantities (form="
                 f"{self.form!r})")
+        if self.overlap and self.plan is None:
+            raise ValueError(
+                "overlap=True double-buffers a plan's bucket schedule; "
+                "attach a VotePlan (VoteRequest.plan / "
+                "OptimizerConfig.bucket_bytes) or drop overlap")
 
     def _validate_plan(self):
         if self.plan is None:
@@ -377,69 +385,24 @@ def _wire_vote_signs(signs: jax.Array, axes: Tuple[str, ...],
     return strat.vote(signs, axes), state
 
 
-def _bucket_vote_mesh(bucket, signs: jax.Array, axes: Tuple[str, ...],
-                      w: Optional[jax.Array]):
-    """One plan bucket through the production stage methods. Returns
-    (votes int8 (length,), mismatch (M,) or None, true length)."""
-    from repro.core import vote_engine as ve
-    impl = ve.STRATEGIES[bucket.strategy]
-    if bucket.codec == "ternary2bit" \
-            and bucket.strategy == VoteStrategy.ALLGATHER_1BIT:
-        from repro.core.codecs.ternary import TERNARY_WIRE
-        return TERNARY_WIRE.vote(signs, axes), None, bucket.length
-    if bucket.codec == "weighted_vote":
-        from repro.core.codecs import weighted
-        m = ve.num_voters(axes)
-        arrived = impl.exchange(impl.pack(signs, m), axes)
-        # crop the bit-pack padding lanes BEFORE decoding: padding always
-        # agrees with the vote and would dilute the flip observations
-        stacked = sc.unpack_signs(arrived, jnp.int8)[..., :bucket.length]
-        vote, mis = weighted.decode_leaf_fixed(stacked, w)
-        return vote, mis, bucket.length
-    # sign1bit / ef_sign (identical wire) / ternary over the count wire
-    return impl.vote(signs, axes), None, bucket.length
-
-
 def _plan_walk(plan, flat_signs: jax.Array, axes: Tuple[str, ...],
-               server_state):
-    """The bucket-schedule walk (absorbed ``vote_plan.plan_vote_signs``):
-    (n_params,) effective int8 signs -> ((n_params,) int8 votes, new
-    server state). Server-stateful codecs decode every bucket under
-    weights FIXED for the step and fold ONE flip-rate EMA update across
-    the schedule, normalised by the weighted buckets' true coordinate
-    count (padding lanes never observed)."""
-    state = dict(server_state) if server_state else {}
+               server_state, overlap: bool = False):
+    """The bucket-schedule walk (absorbed ``vote_plan.plan_vote_signs``,
+    now the §11 executor's mesh wire): (n_params,) effective int8 signs
+    -> ((n_params,) int8 votes, new server state). `overlap` selects the
+    double-buffered issue order (bit-identical; see
+    ``vote_plan.run_schedule``)."""
+    from repro.core import vote_plan as vp
     if not axes:                     # M=1 degenerate case: vote = sign
-        return flat_signs, state
-    w = None
-    if plan.has_server_state:
-        from repro.core.codecs import weighted
-        if "flip_ema" not in state:
-            raise ValueError(
-                "plan carries a server-stateful codec; thread its server "
-                "state (init_server_state) through the request")
-        w = weighted.reliability_weights(state["flip_ema"])
-    votes, mismatch, total_w = [], None, 0
-    for bucket in plan.buckets:
-        seg = jax.lax.slice_in_dim(flat_signs, bucket.start,
-                                   bucket.start + bucket.length, axis=-1)
-        vote, mis, n_true = _bucket_vote_mesh(bucket, seg, tuple(axes), w)
-        votes.append(vote)
-        if mis is not None:
-            mismatch = mis if mismatch is None else mismatch + mis
-            total_w += n_true
-    if mismatch is not None:
-        from repro.core.codecs import weighted
-        state["flip_ema"] = ((1.0 - weighted.RHO) * state["flip_ema"]
-                             + weighted.RHO * mismatch / total_w)
-    out = jnp.concatenate(votes) if len(votes) > 1 else votes[0]
-    return out, state
+        return flat_signs, dict(server_state) if server_state else {}
+    return vp.run_schedule(plan, flat_signs, vp.MeshBucketWire(axes),
+                           server_state, overlap=overlap)
 
 
 def _leaf_execute(values: jax.Array, axes: Tuple[str, ...],
                   strategy: VoteStrategy, codec_name: str, plan,
                   byz: Optional[ByzantineConfig], salt: int, n_stale: int,
-                  prev, step, server_state):
+                  prev, step, server_state, overlap: bool = False):
     """One replica-local vote inside the manual region, with the full
     failure composition in the pinned order: stale substitution on the
     RAW payload (a straggling adversary corrupts its stale vector), sign
@@ -456,7 +419,8 @@ def _leaf_execute(values: jax.Array, axes: Tuple[str, ...],
         if byz is not None and axes:
             signs = byzantine.apply_adversary(signs, byz, axes, step=step,
                                               salt=salt)
-        vote, new_state = _plan_walk(plan, signs, axes, server_state)
+        vote, new_state = _plan_walk(plan, signs, axes, server_state,
+                                     overlap)
         return vote.astype(values.dtype), new_state
     shape = values.shape
     s = sc.sign_ternary(values if values.ndim else values.reshape(1))
@@ -507,7 +471,8 @@ def _tree_margin(local: Dict, axes: Sequence[str],
 
 def _plan_tree_execute(plan, tree, axes: Tuple[str, ...],
                        byz: Optional[ByzantineConfig], step, salt: int,
-                       server_state, diagnostics: bool):
+                       server_state, diagnostics: bool,
+                       overlap: bool = False):
     """The trainer's plan path (absorbed ``vote_plan.plan_tree_vote``):
     sign extraction per leaf, ONE flat buffer, the compiled adversary
     applied once to the whole wire buffer, then the bucket walk.
@@ -522,7 +487,8 @@ def _plan_tree_execute(plan, tree, axes: Tuple[str, ...],
     if byz is not None and axes:
         eff = byzantine.apply_adversary(eff, byz, axes, step=step,
                                         salt=salt)
-    flat_votes, new_state = _plan_walk(plan, eff, axes, server_state)
+    flat_votes, new_state = _plan_walk(plan, eff, axes, server_state,
+                                       overlap)
     margin = agreement = None
     if diagnostics:
         m = ve.num_voters(axes) if axes else 1
@@ -698,61 +664,30 @@ def _virtual_codec_vote(signs: jax.Array, strategy: VoteStrategy,
     raise ValueError(f"virtual mesh cannot realise codec {codec!r}")
 
 
-def _virtual_plan_walk(signs: jax.Array, plan, server_state):
+def _virtual_plan_walk(signs: jax.Array, plan, server_state,
+                       overlap: bool = False):
     """(M, n_params) stacked int8 signs -> ((n_params,) int8 votes, new
     server state) through the plan's bucket schedule, exchange
-    virtualised per bucket — the SAME static schedule the mesh walk
-    drives, so plan drills hold mesh == virtual bit-identity."""
-    from repro.core.codecs.ternary import TERNARY_WIRE
-    from repro.core.vote_engine import STRATEGIES
-    state = dict(server_state) if server_state else {}
+    virtualised per bucket (the §11 executor's virtual wire) — the SAME
+    static schedule the mesh walk drives, so plan drills hold mesh ==
+    virtual bit-identity under either issue order."""
+    from repro.core import vote_plan as vp
     m, n = signs.shape
     if n != plan.n_params:
         raise ValueError(f"stacked buffer has {n} coords, plan manifest "
                          f"says {plan.n_params}")
-    w = None
-    if plan.has_server_state:
-        from repro.core.codecs import weighted
-        if "flip_ema" not in state:
-            raise ValueError("plan carries a server-stateful codec; "
-                             "thread its server state through the "
-                             "request")
-        w = weighted.reliability_weights(state["flip_ema"])
-    votes, mismatch, total_w = [], None, 0
-    for bucket in plan.buckets:
-        seg = signs[:, bucket.start:bucket.start + bucket.length]
-        if bucket.codec == "weighted_vote":
-            from repro.core.codecs import weighted
-            wire = STRATEGIES[VoteStrategy.ALLGATHER_1BIT].pack(seg, m)
-            # crop the padding lanes before decoding (they always agree
-            # with the vote and would dilute the flip observations)
-            stacked = sc.unpack_signs(wire, jnp.int8)[:, :bucket.length]
-            vote, mis = weighted.decode_leaf_fixed(stacked, w)
-            mismatch = mis if mismatch is None else mismatch + mis
-            total_w += bucket.length
-        elif bucket.codec == "ternary2bit" \
-                and bucket.strategy == VoteStrategy.ALLGATHER_1BIT:
-            wire = TERNARY_WIRE.pack(seg, m)
-            vote = TERNARY_WIRE.unpack(TERNARY_WIRE.tally(wire, m),
-                                       bucket.length, jnp.int8)
-        else:
-            vote = _virtual_wire_vote(seg, bucket.strategy)
-        votes.append(vote)
-    if mismatch is not None:
-        from repro.core.codecs import weighted
-        state["flip_ema"] = ((1.0 - weighted.RHO) * state["flip_ema"]
-                             + weighted.RHO * mismatch / total_w)
-    out = jnp.concatenate(votes) if len(votes) > 1 else votes[0]
-    return out, state
+    return vp.run_schedule(plan, signs, vp.VirtualBucketWire(m),
+                           server_state, overlap=overlap)
 
 
 @functools.partial(jax.jit, static_argnames=("strategy", "codec", "plan",
-                                             "n_stale", "byz", "salt"))
+                                             "n_stale", "byz", "salt",
+                                             "overlap"))
 def _virtual_execute(values, prev, step, server_state, *, strategy,
-                     codec, plan, n_stale, byz, salt):
+                     codec, plan, n_stale, byz, salt, overlap):
     eff = effective_stacked_signs(values, prev, n_stale, byz, step, salt)
     if plan is not None:
-        return _virtual_plan_walk(eff, plan, server_state)
+        return _virtual_plan_walk(eff, plan, server_state, overlap)
     return _virtual_codec_vote(eff, strategy, codec, server_state)
 
 
@@ -850,7 +785,7 @@ class MeshBackend(VoteBackend):
         votes, state = _leaf_execute(
             req.payload, self.axes, req.strategy, req.codec, req.plan,
             f.byz, req.salt, f.n_stale, req.prev, req.step,
-            req.server_state)
+            req.server_state, req.overlap)
         from repro.core import vote_engine as ve
         if self.axes:
             data, pod = _region_sizes(self.axes)
@@ -871,7 +806,7 @@ class MeshBackend(VoteBackend):
         if req.plan is not None:
             votes, state, margin, agreement = _plan_tree_execute(
                 req.plan, req.payload, self.axes, f.byz, req.step,
-                req.salt, req.server_state, req.diagnostics)
+                req.salt, req.server_state, req.diagnostics, req.overlap)
             resolved = None
         else:
             votes, state, margin, agreement, resolved = _tree_execute(
@@ -894,9 +829,10 @@ class MeshBackend(VoteBackend):
 
     def _stacked_fn(self, m: int, strategy: VoteStrategy, codec: str,
                     plan, byz, salt: int, n_stale: int, stateful: bool,
-                    has_prev: bool, has_step: bool):
+                    has_prev: bool, has_step: bool,
+                    overlap: bool = False):
         key = (m, strategy, codec, plan, byz, salt, n_stale, stateful,
-               has_prev, has_step)
+               has_prev, has_step, overlap)
         if key in self._cache:
             return self._cache[key]
         from jax.sharding import Mesh, PartitionSpec as P
@@ -912,7 +848,7 @@ class MeshBackend(VoteBackend):
             out, new_state = _leaf_execute(
                 vals[0], axes, strategy, codec, plan, byz, salt, n_stale,
                 prev[0] if has_prev else None,
-                step if has_step else None, cstate)
+                step if has_step else None, cstate, overlap)
             return out[None], new_state
 
         # arity/specs vary with the static request shape; every variant
@@ -944,7 +880,7 @@ class MeshBackend(VoteBackend):
         has_step = req.step is not None
         fn = self._stacked_fn(m, req.strategy, req.codec, req.plan,
                               f.byz, req.salt, f.n_stale, stateful,
-                              has_prev, has_step)
+                              has_prev, has_step, req.overlap)
         # host round-trips keep every array uncommitted: jit outputs
         # committed to one request's mesh devices would conflict with a
         # later (smaller) mesh in the same process (elastic drills)
@@ -993,6 +929,11 @@ class VirtualBackend(VoteBackend):
                     f"(M, n) payloads, not {request.form!r} (use "
                     "MeshBackend inside the mesh region)")
         if self.use_kernels:
+            if request.overlap:
+                return ("the fused-kernel path runs one fused launch per "
+                        "request and cannot double-buffer a bucket "
+                        "schedule (overlap=True); use "
+                        "VirtualBackend(use_kernels=False)")
             if request.plan is not None:
                 return ("the fused-kernel path has no bucket walk; use "
                         "vote_plan.plan_vote_stacked or "
@@ -1029,7 +970,8 @@ class VirtualBackend(VoteBackend):
             votes, state = _virtual_execute(
                 req.payload, req.prev, req.step, req.server_state,
                 strategy=resolved, codec=req.codec, plan=req.plan,
-                n_stale=f.n_stale, byz=f.byz, salt=req.salt)
+                n_stale=f.n_stale, byz=f.byz, salt=req.salt,
+                overlap=req.overlap)
         wire = _static_wire(req.plan, req.codec, resolved, n, 1, m)
         return VoteOutcome(votes=votes, server_state=state, wire=wire)
 

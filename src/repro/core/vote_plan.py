@@ -50,12 +50,17 @@ import jax.numpy as jnp
 
 from repro.configs.base import ByzantineConfig, VoteStrategy
 from repro.core import sign_compress as sc
-from repro.core.vote_engine import STRATEGIES
+from repro.core.vote_engine import STRATEGIES, num_voters
 from repro.distributed import comm_model
 
 #: base bucket alignment: lcm of the 1-bit pack (32/word) and the ternary
 #: 2-bit pack (16/word) — an aligned bucket enters every wire pad-free
 ALIGN = 32
+
+#: sentinel for ``bucket_bytes``: let the AUTO selector pick a
+#: per-strategy optimal bucket size by pricing a ladder of candidate
+#: sizes through the (overlap-aware) α–β schedule model
+AUTO_BUCKET_BYTES = -1
 
 
 # ---------------------------------------------------------------------------
@@ -94,6 +99,10 @@ class PlanGroup:
     total: int
     leaves: Tuple[LeafSlot, ...]
     buckets: Tuple[Bucket, ...]
+    #: the bucket size the schedule was actually cut at — echoes the
+    #: plan-wide request, or the AUTO selector's per-strategy choice
+    #: when the plan was built with ``bucket_bytes=AUTO_BUCKET_BYTES``
+    bucket_bytes: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,10 +152,14 @@ class VotePlan:
 
     # ---- accounting ----
 
-    def schedule_cost(self, data_size: int, pod_size: int = 1) -> float:
+    def schedule_cost(self, data_size: int, pod_size: int = 1,
+                      overlap: bool = False) -> float:
         """α–β wall-clock of the full bucket schedule (one latency term
-        per bucket message — the quantity AUTO minimised)."""
-        return _schedule_time(self.buckets, data_size, pod_size)
+        per bucket message — the quantity AUTO minimised). With
+        ``overlap=True`` the schedule is priced as the double-buffered
+        walk (:func:`run_schedule`): latency terms of every bucket after
+        the first hide behind the previous bucket's tally."""
+        return _schedule_time(self.buckets, data_size, pod_size, overlap)
 
 
 # ---------------------------------------------------------------------------
@@ -205,36 +218,60 @@ def _message_parts(codec_bits: float, strategy: VoteStrategy, length: int,
 
 
 def _schedule_time(buckets: Sequence[Bucket], data_size: int,
-                   pod_size: int) -> float:
+                   pod_size: int, overlap: bool = False) -> float:
     from repro.core import codecs as codecs_mod
     return comm_model.schedule_time(
-        _message_parts(codecs_mod.get_codec(b.codec).bits_per_param,
-                       b.strategy, b.length, data_size, pod_size)
-        for b in buckets).time_s
+        (_message_parts(codecs_mod.get_codec(b.codec).bits_per_param,
+                        b.strategy, b.length, data_size, pod_size)
+         for b in buckets), overlap=overlap).time_s
 
 
-def _resolve_group_strategy(codec_name: str, strategy: VoteStrategy,
-                            total: int, bucket_bytes: int,
-                            data_size: int, pod_size: int) -> VoteStrategy:
-    """Concrete strategy for one codec group. AUTO prices each candidate
-    wire's WHOLE bucket schedule (bucket count × per-message α + β·bytes)
-    instead of one leaf-sized message, so many small buckets can tip the
-    choice toward fewer/wider-count wires."""
+def _candidate_bucket_bytes(total: int, bits_per_param: float) -> list:
+    """Deterministic candidate ladder for ``AUTO_BUCKET_BYTES``: powers
+    of two up to the group's whole wire payload, plus the whole-group
+    single bucket itself."""
+    total_bytes = max(1, -(-int(total * bits_per_param) // 8))
+    ladder = [1 << k for k in range(3, 25) if (1 << k) < total_bytes]
+    ladder.append(total_bytes)
+    return ladder
+
+
+def _resolve_group(codec_name: str, strategy: VoteStrategy, total: int,
+                   bucket_bytes: int, data_size: int, pod_size: int,
+                   overlap: bool = False
+                   ) -> Tuple[VoteStrategy, int]:
+    """Concrete (strategy, bucket_bytes) for one codec group. AUTO
+    prices each candidate wire's WHOLE bucket schedule (bucket count ×
+    per-message α + β·bytes) instead of one leaf-sized message, so many
+    small buckets can tip the choice toward fewer/wider-count wires.
+    With ``bucket_bytes=AUTO_BUCKET_BYTES`` the selector jointly sweeps
+    a candidate size ladder per strategy — under overlap pricing the α
+    penalty of extra buckets mostly vanishes, which is what lets the
+    gathered wire keep small buckets and still win. Ties break toward
+    the larger bucket (fewer messages)."""
     from repro.core import codecs as codecs_mod
     codec = codecs_mod.get_codec(codec_name)
     if strategy != VoteStrategy.AUTO:
         codec.validate_strategy(strategy)
-        return strategy
-    candidates = codec.supported_strategies
-    if data_size * pod_size <= 1:
-        return (VoteStrategy.PSUM_INT8
-                if VoteStrategy.PSUM_INT8 in candidates else candidates[0])
-    times = {}
+        candidates = [strategy]
+    else:
+        candidates = list(codec.supported_strategies)
+        if data_size * pod_size <= 1:
+            candidates = [VoteStrategy.PSUM_INT8
+                          if VoteStrategy.PSUM_INT8 in candidates
+                          else candidates[0]]
+    sizes = ([bucket_bytes] if bucket_bytes != AUTO_BUCKET_BYTES else
+             _candidate_bucket_bytes(total, codec.bits_per_param))
+    best = None
     for cand in candidates:
-        buckets = _cut_buckets(codec_name, cand, 0, total, bucket_bytes,
-                               data_size)
-        times[cand] = _schedule_time(buckets, data_size, pod_size)
-    return min(times, key=times.get)
+        for bb in sizes:
+            buckets = _cut_buckets(codec_name, cand, 0, total, bb,
+                                   data_size)
+            key = (_schedule_time(buckets, data_size, pod_size, overlap),
+                   -bb)
+            if best is None or key < best[0]:
+                best = (key, cand, bb)
+    return best[1], best[2]
 
 
 def _cut_buckets(codec_name: str, strategy: VoteStrategy, start: int,
@@ -259,16 +296,23 @@ def build_plan(shapes: Dict[str, Tuple[int, ...]], *, bucket_bytes: int,
                default_codec: str = "sign1bit",
                strategy: VoteStrategy = VoteStrategy.AUTO,
                data_size: int = 1, pod_size: int = 1,
-               dtypes: Optional[Dict[str, str]] = None) -> VotePlan:
+               dtypes: Optional[Dict[str, str]] = None,
+               overlap: bool = False) -> VotePlan:
     """Build the static plan for a tree of `shapes` (leaf name → shape).
 
     Deterministic: leaves are laid out in sorted-name order, grouped by
     their resolved codec (groups ordered by first appearance in that
     order), so the same shapes + config always produce the same manifest
-    on every host.
+    on every host. ``bucket_bytes=AUTO_BUCKET_BYTES`` (-1) lets the AUTO
+    selector sweep a candidate size ladder per strategy; ``overlap``
+    prices candidate schedules as the double-buffered walk (it changes
+    the selector's arithmetic only — the manifest layout never depends
+    on how the schedule will be executed).
     """
-    if bucket_bytes <= 0:
-        raise ValueError(f"bucket_bytes must be positive, got {bucket_bytes}")
+    if bucket_bytes <= 0 and bucket_bytes != AUTO_BUCKET_BYTES:
+        raise ValueError(
+            f"bucket_bytes must be positive (or AUTO_BUCKET_BYTES=-1 for "
+            f"the priced ladder), got {bucket_bytes}")
     names = sorted(shapes)
     if not names:
         raise ValueError("cannot build a VotePlan over an empty tree")
@@ -292,13 +336,15 @@ def build_plan(shapes: Dict[str, Tuple[int, ...]], *, bucket_bytes: int,
                 dtype=(dtypes or {}).get(n, "float32")))
             offset += length
         total = offset - start
-        resolved = _resolve_group_strategy(codec_name, strategy, total,
-                                           bucket_bytes, data_size, pod_size)
+        resolved, group_bytes = _resolve_group(
+            codec_name, strategy, total, bucket_bytes, data_size,
+            pod_size, overlap)
         groups.append(PlanGroup(
             codec=codec_name, strategy=resolved, start=start, total=total,
             leaves=tuple(slots),
             buckets=_cut_buckets(codec_name, resolved, start, total,
-                                 bucket_bytes, data_size)))
+                                 group_bytes, data_size),
+            bucket_bytes=group_bytes))
     return VotePlan(groups=tuple(groups), bucket_bytes=bucket_bytes,
                     n_params=offset)
 
@@ -332,6 +378,184 @@ def unflatten_votes(plan: VotePlan, flat: jax.Array, tree) -> Dict:
         out[slot.name] = (flat[slot.offset:slot.offset + slot.length]
                           .reshape(slot.shape).astype(leaf.dtype))
     return out
+
+
+# ---------------------------------------------------------------------------
+# execution: the schedule executor (DESIGN.md §11) — one walk, two wires,
+# two issue orders. Each bucket's vote is split at the exchange boundary
+# into ``issue`` (pack + put the collective on the wire) and ``complete``
+# (tally + unpack + codec decode of what arrived), so the walk can either
+# run them back-to-back (the synchronous schedule) or double-buffer:
+# bucket k's exchange is issued while bucket k-1 completes, handing XLA's
+# latency-hiding scheduler an async-collective window per bucket. Both
+# orders run the SAME stage dataflow per bucket, so they are bit-identical
+# by construction — and pinned to each other by the tier-1 equivalence
+# matrix in tests/test_vote_plan.py.
+# ---------------------------------------------------------------------------
+
+
+class MeshBucketWire:
+    """issue/complete over the real collectives, inside a manual mesh
+    region over `axes` (the §2 stage methods `vote_api._plan_walk`
+    composed, split at the exchange)."""
+
+    def __init__(self, axes: Sequence[str]):
+        self.axes = tuple(axes)
+
+    def issue(self, bucket: Bucket, seg: jax.Array) -> jax.Array:
+        m = num_voters(self.axes)
+        if bucket.codec == "ternary2bit" \
+                and bucket.strategy == VoteStrategy.ALLGATHER_1BIT:
+            from repro.core.codecs.ternary import TERNARY_WIRE
+            return TERNARY_WIRE.exchange(TERNARY_WIRE.pack(seg, m),
+                                         self.axes)
+        if bucket.codec == "weighted_vote":
+            impl = STRATEGIES[VoteStrategy.ALLGATHER_1BIT]
+            return impl.exchange(impl.pack(seg, m), self.axes)
+        impl = STRATEGIES[bucket.strategy]
+        if bucket.strategy == VoteStrategy.HIERARCHICAL:
+            # the reduce-scatter's shards must stay word-aligned: pad to
+            # PACK * data_size BEFORE pack (HierarchicalStrategy.vote)
+            from repro import compat
+            data_axis, _ = impl._axes(self.axes)
+            seg, _ = sc.pad_last(seg, sc.PACK * compat.axis_size(data_axis))
+        return impl.exchange(impl.pack(seg, m), self.axes)
+
+    def complete(self, bucket: Bucket, arrived: jax.Array,
+                 w: Optional[jax.Array]):
+        """-> (votes int8 (length,), mismatch (M,) or None)."""
+        m = num_voters(self.axes)
+        if bucket.codec == "ternary2bit" \
+                and bucket.strategy == VoteStrategy.ALLGATHER_1BIT:
+            from repro.core.codecs.ternary import TERNARY_WIRE
+            return TERNARY_WIRE.unpack(TERNARY_WIRE.tally(arrived, m),
+                                       bucket.length, jnp.int8), None
+        if bucket.codec == "weighted_vote":
+            from repro.core.codecs import weighted
+            # crop the bit-pack padding lanes BEFORE decoding: padding
+            # always agrees with the vote and would dilute the flip
+            # observations
+            stacked = sc.unpack_signs(arrived, jnp.int8)[..., :bucket.length]
+            return weighted.decode_leaf_fixed(stacked, w)
+        impl = STRATEGIES[bucket.strategy]
+        # for HIERARCHICAL the unpack stage carries the second (cheap)
+        # collective — the packed all-gather of the shard decision — so
+        # under overlap it is issued alongside the NEXT bucket's
+        # reduce-scatter, exactly the double-buffering we want
+        return impl.unpack(impl.tally(arrived, m), bucket.length,
+                           jnp.int8), None
+
+
+class VirtualBucketWire:
+    """issue/complete over the host-side exchange equivalents of a
+    stacked (M, n) voter dim — `vote_api._virtual_plan_walk` split at
+    the (virtualised) exchange, so the overlapped order replays
+    bit-identically off-mesh."""
+
+    def __init__(self, m: int):
+        self.m = m
+
+    def issue(self, bucket: Bucket, seg: jax.Array) -> jax.Array:
+        m = self.m
+        if bucket.codec == "ternary2bit" \
+                and bucket.strategy == VoteStrategy.ALLGATHER_1BIT:
+            from repro.core.codecs.ternary import TERNARY_WIRE
+            return TERNARY_WIRE.pack(seg, m)   # gather = already stacked
+        if bucket.codec == "weighted_vote":
+            return STRATEGIES[VoteStrategy.ALLGATHER_1BIT].pack(seg, m)
+        impl = STRATEGIES[bucket.strategy]
+        if bucket.strategy == VoteStrategy.PSUM_INT8:
+            wire = impl.pack(seg, m)
+            # psum over the vote axes == sum over the voter dim, in the
+            # wire dtype (safe: |sum| <= M <= dtype max)
+            return jnp.sum(wire, axis=0).astype(wire.dtype)
+        if bucket.strategy == VoteStrategy.ALLGATHER_1BIT:
+            return impl.pack(seg, m)
+        if bucket.strategy == VoteStrategy.HIERARCHICAL:
+            # virtual single-pod mesh: data axis = all M voters; pad so
+            # the reduce-scatter shards stay word-aligned
+            padded, _ = sc.pad_last(seg, sc.PACK * m)
+            wire = impl.pack(padded, m)
+            summed = jnp.sum(wire, axis=0).astype(wire.dtype)
+            return summed.reshape(m, padded.shape[-1] // m)
+        raise ValueError(f"virtual wire cannot realise {bucket.strategy!r}")
+
+    def complete(self, bucket: Bucket, arrived: jax.Array,
+                 w: Optional[jax.Array]):
+        m = self.m
+        if bucket.codec == "ternary2bit" \
+                and bucket.strategy == VoteStrategy.ALLGATHER_1BIT:
+            from repro.core.codecs.ternary import TERNARY_WIRE
+            return TERNARY_WIRE.unpack(TERNARY_WIRE.tally(arrived, m),
+                                       bucket.length, jnp.int8), None
+        if bucket.codec == "weighted_vote":
+            from repro.core.codecs import weighted
+            stacked = sc.unpack_signs(arrived, jnp.int8)[:, :bucket.length]
+            return weighted.decode_leaf_fixed(stacked, w)
+        impl = STRATEGIES[bucket.strategy]
+        if bucket.strategy == VoteStrategy.HIERARCHICAL:
+            # unpack stage: pack each shard's decision, 'all-gather' =
+            # concatenate in replica order
+            decision = impl.tally(arrived, m)
+            packed = sc.pack_signs(decision).reshape(-1)
+            return sc.unpack_signs(packed, jnp.int8)[:bucket.length], None
+        return impl.unpack(impl.tally(arrived, m), bucket.length,
+                           jnp.int8), None
+
+
+def run_schedule(plan: VotePlan, buf: jax.Array, wire,
+                 server_state=None, overlap: bool = False):
+    """Walk the bucket schedule over `buf` (the (n_params,) flat signs
+    on the mesh wire, or the (M, n_params) stacked buffer on the virtual
+    wire) -> (votes (.., n_params) int8, new server state).
+
+    ``overlap=False`` completes each bucket before issuing the next (the
+    historical synchronous walk). ``overlap=True`` double-buffers:
+    bucket k is issued, THEN bucket k-1 completes, so tally/unpack of
+    one bucket overlaps the next bucket's exchange. Per-bucket dataflow
+    is identical either way — only the issue order changes — so the two
+    walks are bit-identical; server-stateful codecs decode every bucket
+    under weights FIXED for the step and fold ONE flip-rate EMA update
+    across the schedule, normalised by the weighted buckets' true
+    coordinate count (padding lanes never observed)."""
+    state = dict(server_state) if server_state else {}
+    w = None
+    if plan.has_server_state:
+        from repro.core.codecs import weighted
+        if "flip_ema" not in state:
+            raise ValueError(
+                "plan carries a server-stateful codec; thread its server "
+                "state (init_server_state) through the request")
+        w = weighted.reliability_weights(state["flip_ema"])
+    buckets = plan.buckets
+
+    def seg(b: Bucket) -> jax.Array:
+        return jax.lax.slice_in_dim(buf, b.start, b.start + b.length,
+                                    axis=-1)
+
+    done = []
+    if overlap and len(buckets) > 1:
+        inflight = wire.issue(buckets[0], seg(buckets[0]))
+        for k in range(1, len(buckets)):
+            nxt = wire.issue(buckets[k], seg(buckets[k]))
+            done.append(wire.complete(buckets[k - 1], inflight, w))
+            inflight = nxt
+        done.append(wire.complete(buckets[-1], inflight, w))
+    else:
+        for b in buckets:
+            done.append(wire.complete(b, wire.issue(b, seg(b)), w))
+    votes, mismatch, total_w = [], None, 0
+    for b, (vote, mis) in zip(buckets, done):
+        votes.append(vote)
+        if mis is not None:
+            mismatch = mis if mismatch is None else mismatch + mis
+            total_w += b.length
+    if mismatch is not None:
+        from repro.core.codecs import weighted
+        state["flip_ema"] = ((1.0 - weighted.RHO) * state["flip_ema"]
+                             + weighted.RHO * mismatch / total_w)
+    out = jnp.concatenate(votes) if len(votes) > 1 else votes[0]
+    return out, state
 
 
 # ---------------------------------------------------------------------------

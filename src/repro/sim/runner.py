@@ -94,7 +94,8 @@ class ScenarioTrace:
             plans = {m: self.spec.runtime_plan(m)
                      for m in {s.n_workers for s in self.steps}}
             est = float(np.mean(
-                [plans[s.n_workers].schedule_cost(s.n_workers)
+                [plans[s.n_workers].schedule_cost(
+                    s.n_workers, overlap=self.spec.plan.overlap)
                  for s in self.steps]))
             n_buckets = plans[self.steps[0].n_workers].n_buckets
         else:
@@ -235,9 +236,13 @@ class ScenarioRunner:
             return v2, t, fresh, eff, oracle, margin
 
         @jax.jit
-        def finish(x, vote, oracle):
+        def finish(x, applied, vote, oracle):
+            # `applied` is what moves the iterate (the PREVIOUS step's
+            # banked vote under delayed_vote, the fresh vote otherwise);
+            # the flip trace always scores the FRESH vote against the
+            # oracle — the delay shifts the update, not the decision
             flip = jnp.mean((vote != oracle).astype(jnp.float32))
-            x2 = x - spec.learning_rate * vote.astype(jnp.float32)
+            x2 = x - spec.learning_rate * applied.astype(jnp.float32)
             loss = 0.5 * jnp.mean(x2 * x2)
             return x2, flip, loss
 
@@ -264,6 +269,11 @@ class ScenarioRunner:
         # that is what a straggler re-submits; failures then apply to the
         # substituted vector (vote_with_failures order)
         prev = jnp.zeros((m, spec.dim), jnp.int8)
+        # delayed-vote buffer (§11): the one-round-old majority applied
+        # this step. Replicated (dim,), so elastic rescales never touch
+        # it; zeros at step 0 -> the first update is a no-op, matching
+        # the trainer's weight-decay-only first step
+        pending = jnp.zeros((spec.dim,), jnp.int8)
         prepare, finish, ef_feedback, byz_cfg, n_stale, plan = \
             self._segment(m)
         # codec server state: replicated decode memory (reliability EMA);
@@ -317,9 +327,13 @@ class ScenarioRunner:
                                         if byz_cfg.mode != "none"
                                         else None),
                 prev=prev, step=step_t, salt=spec.salt,
-                server_state=cstate))
+                server_state=cstate, overlap=spec.plan.overlap))
             vote, cstate = out.votes, out.server_state
-            x, flip, loss = finish(x, vote, oracle)
+            if spec.delayed_vote:
+                applied, pending = pending, vote
+            else:
+                applied = vote
+            x, flip, loss = finish(x, applied, vote, oracle)
             if codec.worker_state:
                 err = ef_feedback(t, vote)
             prev = fresh

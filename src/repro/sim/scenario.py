@@ -93,16 +93,23 @@ class PlanSpec:
     bucket_bytes: int = 0
     codec_map: Tuple[Tuple[str, str], ...] = ()
     leaves: Tuple[Tuple[str, int], ...] = ()
+    overlap: bool = False   # double-buffered bucket walk (DESIGN.md §11)
 
     def __post_init__(self):
-        if self.bucket_bytes < 0:
-            raise ValueError(f"bucket_bytes {self.bucket_bytes} < 0")
+        from repro.core.vote_plan import AUTO_BUCKET_BYTES
+        if self.bucket_bytes < 0 and self.bucket_bytes != AUTO_BUCKET_BYTES:
+            raise ValueError(f"bucket_bytes {self.bucket_bytes} < 0 "
+                             "(use -1 for the priced AUTO ladder)")
         if (self.codec_map or self.leaves) and not self.enabled:
-            raise ValueError("codec_map/leaves need bucket_bytes > 0")
+            raise ValueError("codec_map/leaves need bucket_bytes > 0 "
+                             "(or the -1 AUTO ladder)")
+        if self.overlap and not self.enabled:
+            raise ValueError("overlap=True double-buffers the bucket "
+                             "schedule; it needs bucket_bytes != 0")
 
     @property
     def enabled(self) -> bool:
-        return self.bucket_bytes > 0
+        return self.bucket_bytes != 0
 
     def leaf_shapes(self, dim: int) -> Dict[str, Tuple[int, ...]]:
         leaves = self.leaves or (("x", dim),)
@@ -146,6 +153,7 @@ class ScenarioSpec:
     momentum: float = 0.9               # per-worker (Mode A) beta; 0 = signSGD
     codec: str = "sign1bit"             # gradient codec (DESIGN.md §8)
     plan: PlanSpec = PlanSpec()         # bucketed wire schedule (§9)
+    delayed_vote: bool = False          # apply step t's vote at t+1 (§11)
 
     def __post_init__(self):
         if self.strategy == VoteStrategy.AUTO:
@@ -246,7 +254,8 @@ class ScenarioSpec:
                              codec_map=self.plan.codec_map,
                              default_codec=self.codec,
                              strategy=self.strategy,
-                             data_size=data_size)
+                             data_size=data_size,
+                             overlap=self.plan.overlap)
 
     # ---- (de)serialisation ----
 
@@ -313,13 +322,19 @@ def expand_grid(grid: Dict[str, Any],
     named ``<prefix>/<mode>/<strategy>/f<pct>``. An optional ``"codecs"``
     list adds a codec axis (§8); its cells are named
     ``<prefix>/<codec>/<mode>/<strategy>/f<pct>`` so the codec-less grid
-    keeps its historical names (and PRNG salts).
+    keeps its historical names (and PRNG salts). An optional
+    ``"delayed"`` list of booleans adds the delayed-vote axis (§11):
+    true cells insert a ``delayed`` name segment after the codec; false
+    cells keep the historical names, so adding the axis to an existing
+    grid never perturbs its PRNG streams.
     """
     base = {**(defaults or {}), **grid.get("base", {})}
     prefix = grid.get("prefix", "grid")
     codecs_axis = grid.get("codecs")
+    delayed_axis = grid.get("delayed")
     out, seen = [], set()
     for codec in (codecs_axis or [None]):
+      for delayed in (delayed_axis if delayed_axis is not None else [None]):
         for mode in grid["modes"]:
             for strategy in grid["strategies"]:
                 for frac in grid["fractions"]:
@@ -332,8 +347,12 @@ def expand_grid(grid: Dict[str, Any],
                     # cells and alias their PRNG streams).
                     eff_mode = mode if frac > 0 else "none"
                     cell = f"{eff_mode}/{strategy}/f{frac:g}"
-                    name = (f"{prefix}/{codec}/{cell}" if codec
-                            else f"{prefix}/{cell}")
+                    parts = [prefix]
+                    if codec:
+                        parts.append(codec)
+                    if delayed:
+                        parts.append("delayed")
+                    name = "/".join(parts + [cell])
                     if name in seen:
                         continue
                     seen.add(name)
@@ -347,6 +366,8 @@ def expand_grid(grid: Dict[str, Any],
                     }
                     if codec:
                         doc["codec"] = codec
+                    if delayed is not None:
+                        doc["delayed_vote"] = bool(delayed)
                     out.append(ScenarioSpec.from_dict(doc))
     return out
 

@@ -160,7 +160,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     # static — with the ORIGINAL strategy so AUTO prices the whole bucket
     # schedule per codec group instead of one tree-sized message.
     plan = None
-    if is_sign and opt_cfg.bucket_bytes > 0:
+    if is_sign and opt_cfg.bucket_bytes != 0:
         # Mode B consults voted_leaves and votes only the raw remainder
         # explicitly; Mode A votes the FULL momentum tree regardless of
         # FSDP hooks, so its plan must cover every leaf
@@ -175,7 +175,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
                 strategy=tcfg.optimizer.vote_strategy,
                 data_size=sizes.get("data", 1),
                 pod_size=sizes.get("pod", 1),
-                dtypes={k: cfg.dtype for k in explicit})
+                dtypes={k: cfg.dtype for k in explicit},
+                overlap=opt_cfg.overlap)
             # the plan's schedule is the wire that actually compiles:
             # report ITS resolution (None when a mixed map resolved
             # different strategies per group — art.plan has the detail),
@@ -296,6 +297,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
                 opt_manual[key] = {k: p_manual[k] for k in names}
         elif key in ("m", "v"):  # dense-baseline moments follow params
             opt_manual[key] = dict(p_manual)
+        elif key == "delayed":   # one-round vote buffer: param layout,
+            opt_manual[key] = dict(p_manual)   # replicated over the vote
         else:
             opt_manual[key] = P()
 
@@ -362,6 +365,13 @@ def abstract_state(cfg: ModelConfig, tcfg: TrainConfig, art: StepArtifacts,
 
     if is_sign and needs_mom:
         opt_state["momentum"] = momentum_like()
+    if is_sign and opt_cfg.delayed_vote:
+        # one-round vote buffer (§11): leaf-shaped int8, param sharding
+        # (replicated over the vote axes — every replica applies the
+        # same previous decision); refit_tree_leading_axis passes it
+        # through unchanged at elastic events (no leading voter axis)
+        opt_state["delayed"] = {k: mk(v, jnp.int8, art.param_specs[k])
+                                for k, v in shapes.items()}
     if is_sign:
         from repro.core import codecs as codecs_mod
         codec = codecs_mod.get_codec(opt_cfg.resolved_codec)

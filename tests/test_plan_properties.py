@@ -90,6 +90,34 @@ def test_flatten_unflatten_identity_arbitrary_trees(shapes, bucket_bytes,
                                       np.sign(np.asarray(leaf)))
 
 
+@given(st.integers(2, 12), st.integers(2, 120), st.integers(1, 16),
+       st.sampled_from(sorted(codecs.list_codecs())), st.randoms())
+@settings(max_examples=100, deadline=None)
+def test_overlap_walk_is_bit_identical(m, n, bucket_bytes, codec, rnd):
+    """The double-buffered issue order (DESIGN.md §11) never changes the
+    decode: overlap=True equals overlap=False bit-for-bit — votes AND
+    server state — for every codec, voter count, dim and bucket cut."""
+    from repro.core import vote_api as va
+    signs = np.array([[rnd.choice([-1, 0, 1]) for _ in range(n)]
+                      for _ in range(m)], np.int8)
+    plan = vp.build_plan({"x": (n,)}, bucket_bytes=bucket_bytes,
+                         strategy=VoteStrategy.ALLGATHER_1BIT,
+                         default_codec=codec)
+    state = codecs.get_codec(codec).init_server_state(m)
+
+    def run(ov):
+        return va.VirtualBackend().execute(va.VoteRequest(
+            payload=jnp.asarray(signs), form="stacked", plan=plan,
+            server_state=state or None, overlap=ov))
+
+    sync_o, ovl_o = run(False), run(True)
+    np.testing.assert_array_equal(np.asarray(sync_o.votes),
+                                  np.asarray(ovl_o.votes))
+    for k in sync_o.server_state:
+        np.testing.assert_array_equal(np.asarray(sync_o.server_state[k]),
+                                      np.asarray(ovl_o.server_state[k]))
+
+
 @given(st.integers(2, 10), st.integers(2, 80), st.integers(1, 10),
        st.randoms())
 @settings(max_examples=50, deadline=None)

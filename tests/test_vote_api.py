@@ -135,6 +135,14 @@ def test_bad_adversary_mode_rejected():
         va.FailureSpec(byz=ByzantineConfig(mode="martian"))
 
 
+def test_overlap_without_plan_rejected():
+    # overlap double-buffers a bucket SCHEDULE; with no plan there is
+    # nothing to pipeline and silently ignoring the flag would hide a
+    # misconfigured trainer
+    with pytest.raises(ValueError, match="overlap"):
+        va.VoteRequest(payload=_signs(), form="stacked", overlap=True)
+
+
 # ---------------------------------------------------------------------------
 # capability introspection
 # ---------------------------------------------------------------------------
@@ -169,6 +177,22 @@ def test_kernel_backend_capability():
                             strategy=VoteStrategy.ALLGATHER_1BIT,
                             failures=va.FailureSpec(byz=BYZ))
     assert not vb.supports(failed)
+
+
+def test_kernel_backend_rejects_overlap():
+    """The fused kernel is one launch per request — it cannot
+    double-buffer a bucket schedule; the rejection must say so and name
+    the way out (use_kernels=False executes the same request)."""
+    vb = va.VirtualBackend(use_kernels=True)
+    plan = vp.build_plan({"x": (70,)}, bucket_bytes=4,
+                         strategy=VoteStrategy.ALLGATHER_1BIT)
+    req = va.VoteRequest(payload=_signs(), form="stacked", plan=plan,
+                         overlap=True)
+    assert not vb.supports(req)
+    with pytest.raises(ValueError, match="double-buffer"):
+        vb.execute(req)
+    out = va.VirtualBackend(use_kernels=False).execute(req)
+    assert out.votes.shape == (70,)
 
 
 # ---------------------------------------------------------------------------

@@ -138,6 +138,56 @@ def test_comm_model_schedule_time_prices_per_message():
     assert est.bytes_ici == 2e4 and est.bytes_dci == 2e3
 
 
+def test_comm_model_overlap_discounts_trailing_alpha():
+    """Under the double-buffered walk every launch latency after the
+    first hides behind the previous bucket's tally; only the
+    OVERLAP_ALPHA_RESIDUE fraction survives. Bandwidth stays serial (one
+    wire), and a single message sees no discount at all."""
+    msgs = [(1e4, 0.0, 1)] * 100
+    one = comm_model.collective_time(1e6).time_s
+    ovl = comm_model.schedule_time(msgs, overlap=True).time_s
+    assert ovl == pytest.approx(
+        one + 99 * comm_model.OVERLAP_ALPHA_RESIDUE * comm_model.ALPHA_ICI)
+    assert ovl < comm_model.schedule_time(msgs).time_s
+    single = [(1e6, 0.0, 1)]
+    assert comm_model.schedule_time(single, overlap=True).time_s == \
+        pytest.approx(comm_model.schedule_time(single).time_s)
+
+
+def test_schedule_cost_overlap_discount():
+    many = vp.build_plan({"a": (65536,)}, bucket_bytes=64,
+                         strategy=VoteStrategy.ALLGATHER_1BIT)
+    assert many.schedule_cost(16, overlap=True) < many.schedule_cost(16)
+    one = vp.build_plan({"a": (65536,)}, bucket_bytes=1 << 20,
+                        strategy=VoteStrategy.ALLGATHER_1BIT)
+    assert one.schedule_cost(16, overlap=True) == \
+        pytest.approx(one.schedule_cost(16))
+
+
+def test_auto_bucket_bytes_ladder():
+    """bucket_bytes=-1 resolves a concrete per-group bucket size off the
+    priced candidate ladder; the resulting schedule is a valid cut (so it
+    stays semantics-free by the bucket-cut property) and never exceeds
+    the group's own payload."""
+    plan = vp.build_plan({"a": (50_000,)},
+                         bucket_bytes=vp.AUTO_BUCKET_BYTES,
+                         strategy=VoteStrategy.ALLGATHER_1BIT, data_size=8)
+    g = plan.groups[0]
+    assert 0 < g.bucket_bytes <= -(-50_000 // 8)
+    explicit = vp.build_plan({"a": (50_000,)}, bucket_bytes=g.bucket_bytes,
+                             strategy=VoteStrategy.ALLGATHER_1BIT,
+                             data_size=8)
+    assert plan.buckets == explicit.buckets
+    # joint (strategy, bucket_bytes) resolution under AUTO strategy
+    joint = vp.build_plan({"a": (50_000,)},
+                          bucket_bytes=vp.AUTO_BUCKET_BYTES,
+                          strategy=VoteStrategy.AUTO, data_size=8)
+    assert joint.groups[0].strategy != VoteStrategy.AUTO
+    assert joint.groups[0].bucket_bytes > 0
+    with pytest.raises(ValueError, match="bucket_bytes"):
+        vp.build_plan(SHAPES, bucket_bytes=-5)
+
+
 # ---------------------------------------------------------------------------
 # flatten -> bucket -> unflatten identity (deterministic twins)
 # ---------------------------------------------------------------------------
@@ -221,6 +271,86 @@ def test_plan_vote_stacked_kernel_path_matches_virtual_walk():
 
 
 # ---------------------------------------------------------------------------
+# overlapped (double-buffered) schedule executor (DESIGN.md §11): the
+# issue/complete split reorders WHEN each bucket's exchange launches,
+# never WHAT flows through it — votes, server state and the wire report
+# must be bit-identical to the synchronous walk on BOTH backends
+# ---------------------------------------------------------------------------
+
+
+OVERLAP_MATRIX = [
+    ("sign1bit", VoteStrategy.PSUM_INT8),
+    ("sign1bit", VoteStrategy.ALLGATHER_1BIT),
+    ("sign1bit", VoteStrategy.HIERARCHICAL),
+    ("ternary2bit", VoteStrategy.PSUM_INT8),
+    ("ternary2bit", VoteStrategy.ALLGATHER_1BIT),
+    ("weighted_vote", VoteStrategy.ALLGATHER_1BIT),
+]
+
+
+def _wire_fields(wire):
+    return (wire.n_voters, wire.payload_bytes, wire.n_messages,
+            wire.strategy)
+
+
+@pytest.mark.parametrize("codec,strategy", OVERLAP_MATRIX)
+def test_overlap_equivalence_virtual(codec, strategy):
+    from repro.core import vote_api as va
+    m, n = 9, 261
+    signs = jnp.asarray(RNG.integers(-1, 2, size=(m, n)).astype(np.int8))
+    plan = vp.build_plan({"x": (n,)}, bucket_bytes=8, strategy=strategy,
+                         default_codec=codec)
+    assert plan.n_buckets > 1          # a 1-bucket pipeline proves nothing
+    state = codecs.get_codec(codec).init_server_state(m)
+
+    def run(ov):
+        return va.VirtualBackend().execute(va.VoteRequest(
+            payload=signs, form="stacked", plan=plan,
+            server_state=state or None, overlap=ov))
+
+    sync_o, ovl_o = run(False), run(True)
+    np.testing.assert_array_equal(np.asarray(sync_o.votes),
+                                  np.asarray(ovl_o.votes))
+    assert sorted(sync_o.server_state) == sorted(ovl_o.server_state)
+    for k in sync_o.server_state:
+        np.testing.assert_array_equal(np.asarray(sync_o.server_state[k]),
+                                      np.asarray(ovl_o.server_state[k]))
+    assert _wire_fields(sync_o.wire) == _wire_fields(ovl_o.wire)
+
+
+@pytest.mark.parametrize("codec,strategy", OVERLAP_MATRIX)
+def test_overlap_equivalence_mesh(codec, strategy):
+    """The mesh executor's double-buffered walk (real collective issue
+    order) against its own synchronous walk AND the virtual twin, on the
+    single-device M=1 mesh — the in-process slice of the tier-2 8-device
+    guarantee."""
+    from repro.core import vote_api as va
+    n = 96
+    x = jnp.asarray(RNG.normal(size=(1, n)).astype(np.float32))
+    plan = vp.build_plan({"x": (n,)}, bucket_bytes=4, strategy=strategy,
+                         default_codec=codec)
+    assert plan.n_buckets > 1
+    state = codecs.get_codec(codec).init_server_state(1)
+
+    def run(backend, ov):
+        return backend.execute(va.VoteRequest(
+            payload=x, form="stacked", plan=plan,
+            server_state=state or None, overlap=ov))
+
+    m_sync = run(va.MeshBackend(), False)
+    m_ovl = run(va.MeshBackend(), True)
+    v_ovl = run(va.VirtualBackend(), True)
+    np.testing.assert_array_equal(np.asarray(m_sync.votes),
+                                  np.asarray(m_ovl.votes))
+    np.testing.assert_array_equal(np.asarray(m_ovl.votes),
+                                  np.asarray(v_ovl.votes))
+    for k in m_sync.server_state:
+        np.testing.assert_array_equal(np.asarray(m_sync.server_state[k]),
+                                      np.asarray(m_ovl.server_state[k]))
+    assert _wire_fields(m_sync.wire) == _wire_fields(m_ovl.wire)
+
+
+# ---------------------------------------------------------------------------
 # optimizer plan path (single-process; the mesh twin lives in
 # tests/distributed_harness.py)
 # ---------------------------------------------------------------------------
@@ -292,6 +422,62 @@ def test_optimizer_plan_ef_requires_mode_a():
                                  codec_map=(("*", "ef_sign"),),
                                  momentum_mode=MomentumMode.GLOBAL),
                         (), plan=plan)
+
+
+def test_optimizer_overlap_matches_sync_exactly():
+    """OptimizerConfig.overlap only reorders the bucket walk's issue
+    order — one optimizer step must stay bitwise identical."""
+    params, grads = _tree(), _tree()
+    plan = vp.build_plan(SHAPES, bucket_bytes=8)
+    sync = build_optimizer(_opt_cfg(bucket_bytes=8), (), plan=plan)
+    ovl = build_optimizer(_opt_cfg(bucket_bytes=8, overlap=True), (),
+                          plan=plan)
+    s0, s1 = sync.init(params), ovl.init(params)
+    p0, s0, _ = sync.update(grads, s0, params, jnp.int32(0))
+    p1, s1, _ = ovl.update(grads, s1, params, jnp.int32(0))
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(p0[k]), np.asarray(p1[k]))
+        np.testing.assert_array_equal(np.asarray(s0["momentum"][k]),
+                                      np.asarray(s1["momentum"][k]))
+
+
+def test_optimizer_delayed_vote_lags_exactly_one_step():
+    """delayed_vote banks step t's majority and applies it at t+1: step 0
+    moves nothing (zero buffer = abstain everywhere), and after step t+1
+    the delayed iterate equals the synchronous iterate after step t
+    (weight decay off isolates the vote lag)."""
+    params = _tree()
+    g1, g2 = _tree(), _tree()
+    sync = build_optimizer(_opt_cfg(), ())
+    delayed = build_optimizer(_opt_cfg(delayed_vote=True), ())
+    ss, sd = sync.init(params), delayed.init(params)
+    assert sorted(sd["delayed"]) == sorted(SHAPES)
+    assert all(np.asarray(v).dtype == np.int8 and not np.asarray(v).any()
+               for v in sd["delayed"].values())
+    ps1, ss, _ = sync.update(g1, ss, params, jnp.int32(0))
+    pd1, sd, _ = delayed.update(g1, sd, params, jnp.int32(0))
+    for k in params:
+        # step 0: buffer of zeros, parameters hold still ...
+        np.testing.assert_array_equal(np.asarray(pd1[k]),
+                                      np.asarray(params[k]))
+        # ... but momentum never lags — only the parameter update does
+        np.testing.assert_array_equal(np.asarray(sd["momentum"][k]),
+                                      np.asarray(ss["momentum"][k]))
+    pd2, sd, _ = delayed.update(g2, sd, params, jnp.int32(1))
+    for k in params:                       # step 1 applies step 0's vote
+        np.testing.assert_array_equal(np.asarray(pd2[k]),
+                                      np.asarray(ps1[k]))
+
+
+def test_delayed_vote_config_validation():
+    from repro.configs.base import MomentumMode
+    with pytest.raises(ValueError, match="no vote"):
+        OptimizerConfig(kind="sgd", learning_rate=0.1, delayed_vote=True)
+    with pytest.raises(ValueError, match="per_worker"):
+        _opt_cfg(delayed_vote=True, momentum_mode=MomentumMode.GLOBAL)
+    with pytest.raises(ValueError, match="overlap"):
+        _opt_cfg(overlap=True)             # overlap without a plan
+    _opt_cfg(overlap=True, bucket_bytes=vp.AUTO_BUCKET_BYTES)  # ok
 
 
 # ---------------------------------------------------------------------------

@@ -39,14 +39,14 @@ _WORKER = textwrap.dedent("""
 """)
 
 
-def _run(device_count: int, mode: str):
+def _run(device_count: int, mode: str, worker: str = _WORKER):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(os.path.dirname(__file__), "..", "..", "src"),
          env.get("PYTHONPATH", "")])
     env["XLA_FLAGS"] = \
         f"--xla_force_host_platform_device_count={device_count}"
-    proc = subprocess.run([sys.executable, "-c", _WORKER, mode], env=env,
+    proc = subprocess.run([sys.executable, "-c", worker, mode], env=env,
                           capture_output=True, text=True, timeout=900)
     sys.stdout.write(proc.stdout)
     sys.stderr.write(proc.stderr[-4000:])
@@ -54,7 +54,7 @@ def _run(device_count: int, mode: str):
     return {line.split()[0]: line.split()[1]
             for line in proc.stdout.splitlines()
             if line.split() and line.split()[0] in
-            ("VDIGEST", "MDIGEST", "NBUCKETS")}
+            ("VDIGEST", "MDIGEST", "SDIGEST", "NBUCKETS")}
 
 
 @pytest.mark.slow
@@ -68,3 +68,99 @@ def test_mixed_codec_plan_is_host_count_and_backend_invariant():
     assert d8["VDIGEST"] == d1["VDIGEST"], (
         "mixed-codec plan digest differs between 8-device and 1-device "
         "replays — the bucket schedule is host-count dependent")
+
+
+# ---------------------------------------------------------------------------
+# delayed-vote + overlapped-walk replay drill (DESIGN.md §11): the same
+# mixed-codec scenario with the double-buffered executor, a one-step vote
+# delay AND a mid-run elastic shrink must (a) not move a single bit of
+# the overlap axis, (b) replay identically on the real mesh, and (c) stay
+# host-count invariant
+# ---------------------------------------------------------------------------
+
+
+_DELAYED_WORKER = textwrap.dedent("""
+    import dataclasses
+    import sys
+    import jax
+    from repro.configs.base import VoteStrategy
+    from repro.sim import (AdversarySpec, ElasticEvent, PlanSpec,
+                           ScenarioRunner, ScenarioSpec)
+
+    spec = ScenarioSpec(
+        "plan-drill/delayed_overlap", n_workers=8, n_steps=8, dim=256,
+        strategy=VoteStrategy.ALLGATHER_1BIT,
+        adversary=AdversarySpec("sign_flip", 0.25),
+        elastic=(ElasticEvent(4, 6, "node loss"),),
+        delayed_vote=True,
+        plan=PlanSpec(bucket_bytes=8, overlap=True,
+                      leaves=(("embed.table", 96), ("body.blocks", 160)),
+                      codec_map=(("embed*", "ternary2bit"),
+                                 ("*", "sign1bit"))))
+    print("NBUCKETS", spec.runtime_plan(8).n_buckets)
+    print("VDIGEST", ScenarioRunner(spec, backend="virtual").run().digest)
+    # the same drill on the synchronous walk: overlap must not move a bit
+    sync = dataclasses.replace(
+        spec, plan=dataclasses.replace(spec.plan, overlap=False))
+    print("SDIGEST", ScenarioRunner(sync, backend="virtual").run().digest)
+    if sys.argv[1] == "mesh-too":
+        assert len(jax.devices()) >= 8
+        print("MDIGEST",
+              ScenarioRunner(spec, backend="mesh").run().digest)
+""")
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(900)
+def test_delayed_vote_overlap_drill_replays_bit_identically():
+    d8 = _run(8, "mesh-too", worker=_DELAYED_WORKER)
+    d1 = _run(1, "virtual-only", worker=_DELAYED_WORKER)
+    assert int(d8["NBUCKETS"]) > 1, "drill must actually bucket the wire"
+    assert d8["VDIGEST"] == d8["SDIGEST"], (
+        "overlapped walk diverged from the synchronous schedule under "
+        "delayed votes — the issue/complete split is not semantics-free")
+    assert d8["VDIGEST"] == d8["MDIGEST"], (
+        "delayed-vote drill: mesh backend diverged from the virtual walk")
+    assert d8["VDIGEST"] == d1["VDIGEST"], (
+        "delayed-vote drill digest differs between 8-device and 1-device "
+        "replays — the delay buffer is host-count dependent")
+
+
+def test_checkpoint_roundtrip_of_delayed_vote_buffer(tmp_path):
+    """Save an opt_state carrying the delayed-vote buffer, restore under
+    an elastic shrink: every per-worker leaf refits by the §6 leading-
+    axis rule while the REPLICATED param-shaped delay buffer passes
+    through bit-exact — a joiner-invariant one-round memory."""
+    import numpy as np
+    from repro.checkpoint import checkpoint as ckpt
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(3)
+    m_old, m_new = 8, 6
+    shapes = {"embed.table": (4, 3), "body.w": (5,)}
+    opt_state = {
+        "count": np.asarray(5, np.int32),
+        "momentum": {k: rng.normal(size=(m_old,) + s).astype(np.float32)
+                     for k, s in shapes.items()},
+        "delayed": {k: rng.integers(-1, 2, size=s).astype(np.int8)
+                    for k, s in shapes.items()},
+    }
+    params = {k: rng.normal(size=s).astype(np.float32)
+              for k, s in shapes.items()}
+    ckpt.save(str(tmp_path), 5, params, opt_state)
+    like_opt = {
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+        "momentum": {k: jax.ShapeDtypeStruct((m_new,) + s, jnp.float32)
+                     for k, s in shapes.items()},
+        "delayed": {k: jax.ShapeDtypeStruct(s, jnp.int8)
+                    for k, s in shapes.items()},
+    }
+    _, opt_back, _, _ = ckpt.restore(str(tmp_path), like_opt=like_opt)
+    for k, s in shapes.items():
+        assert opt_back["momentum"][k].shape == (m_new,) + s
+        np.testing.assert_array_equal(opt_back["momentum"][k],
+                                      opt_state["momentum"][k][:m_new])
+        assert opt_back["delayed"][k].dtype == np.int8
+        np.testing.assert_array_equal(opt_back["delayed"][k],
+                                      opt_state["delayed"][k])
