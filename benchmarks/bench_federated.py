@@ -1,0 +1,256 @@
+"""Federated-scale voter populations through the streamed engine (§12).
+
+The population axis (DESIGN.md §12) decouples the voter count M from
+host memory and device count: a ``"streamed"`` VoteRequest runs the
+stacked exchange in voter-chunks, so an M in the 10^4–10^5 range votes
+with peak sign-buffer memory O(chunk_size x dim) instead of O(M x dim).
+This benchmark is the CI face of that claim:
+
+* ``--smoke`` (scripts/ci.sh federated-smoke stage, <10 s) — federated
+  ScenarioRunner drills (client sampling, churn, dataset-weighted votes,
+  the weighted_vote codec over a churning population), the
+  streamed==dense bit-identity gate at every probed M <= 1024, the
+  chunk-size digest-invariance gate, and the M=100,000 scale row whose
+  value IS ``population.LAST_STATS["peak_rows"]`` — asserted bounded by
+  the chunk size, never by M. Writes the machine-readable baseline
+  ``BENCH_federated.json`` (gated by scripts/perf_gate.py).
+* ``rows()`` (the ``benchmarks.run`` driver path) — the same lane.
+
+Usage:
+    python -m benchmarks.bench_federated --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+_JSON_DEFAULT = "BENCH_federated.json"
+
+#: the streamed==dense probe size (the §12 acceptance bar is
+#: bit-identity at every M <= 1024 — the full ladder below the bar
+#: is walked by tests/test_population.py; this lane probes the bar
+#: itself, with a ragged final chunk)
+_EQ_SIZES = (1024,)
+
+
+def _drill_rows():
+    """Federated ScenarioRunner drills: one per population axis."""
+    from repro.configs.base import VoteStrategy
+    from repro.sim import (AdversarySpec, ChurnEvent, PopulationSpec,
+                           ScenarioRunner, ScenarioSpec)
+
+    # ONE tiny chunk size shared by every drill: chunk=6 divides almost
+    # every round's sampled voter count, maximizes the chunk-schedule
+    # coverage (many partial-tally accumulations per vote) AND keys the
+    # jitted chunk stages to one or two compiled shapes across all three
+    # drills — which is what keeps this lane under 10 s (the ragged-tail
+    # shapes are drilled further by tests/test_population*.py)
+    cells = [
+        ("uniform/psum_int8", ScenarioSpec(
+            "fed-smoke/uniform", n_steps=3, dim=64, momentum=0.0,
+            strategy=VoteStrategy.PSUM_INT8,
+            adversary=AdversarySpec("sign_flip", 0.2),
+            population=PopulationSpec(n_clients=200, sample_fraction=0.12,
+                                      chunk_size=6))),
+        ("dataset/allgather_1bit", ScenarioSpec(
+            "fed-smoke/dataset", n_steps=3, dim=64, momentum=0.0,
+            strategy=VoteStrategy.ALLGATHER_1BIT,
+            adversary=AdversarySpec("colluding", 0.3),
+            population=PopulationSpec(n_clients=120, sample_fraction=0.3,
+                                      weighting="dataset", max_data=50,
+                                      chunk_size=6))),
+        ("weighted_vote/churn", ScenarioSpec(
+            "fed-smoke/weighted", n_steps=5, dim=64, momentum=0.0,
+            strategy=VoteStrategy.ALLGATHER_1BIT, codec="weighted_vote",
+            adversary=AdversarySpec("blind", 0.25, flip_prob=0.8),
+            population=PopulationSpec(
+                n_clients=90, sample_fraction=0.4, weighting="dataset",
+                churn=(ChurnEvent(2, leave=30, note="dropout"),
+                       ChurnEvent(4, join=15, note="rejoin")),
+                chunk_size=6))),
+    ]
+    out = []
+    import dataclasses
+    for i, (label, spec) in enumerate(cells):
+        tr = ScenarioRunner(spec).run()
+        s = tr.summary()
+        note = ""
+        if i == 0:
+            # the chunk-size invariance gate: a one-chunk (= dense-order)
+            # chunking must reproduce the digest bit for bit (every
+            # drill is re-drilled this way in tests/test_population.py;
+            # one representative here keeps the lane under 10 s)
+            respec = dataclasses.replace(
+                spec, population=dataclasses.replace(
+                    spec.population, chunk_size=spec.population.n_clients))
+            tr2 = ScenarioRunner(respec).run()
+            # RuntimeError, not assert: the acceptance bar must survive
+            # `python -O` (the defect class pack_signs once shed)
+            if tr2.digest != tr.digest:
+                raise RuntimeError(
+                    f"{spec.name}: chunk size changed the drill digest "
+                    f"({tr.digest[:12]} != {tr2.digest[:12]})")
+            note = " chunk-invariant"
+        out.append((
+            f"federated-smoke/{label}", s["loss_drop"],
+            f"pop={spec.population.n_clients} "
+            f"sample={spec.population.sample_fraction:g} "
+            f"flip={s['mean_flip_fraction']:.3f}"
+            f"{note} {tr.digest[:12]}"))
+    return out
+
+
+def _equivalence_row():
+    """streamed == dense bit-identity at every probed M <= 1024: the
+    same voters, ids and dataset weights through (a) the dense stacked
+    annotated path and (b) the streamed engine at a ragged chunk size —
+    votes AND server state compared exactly."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import ByzantineConfig, VoteStrategy
+    from repro.core import codecs as codecs_mod
+    from repro.core import vote_api as va
+
+    # 43 leaves a ragged 35-row tail at 1024, so even and ragged
+    # chunk boundaries are both exercised
+    be = va.VirtualBackend(chunk_size=43)
+    checked = 0
+    for m in _EQ_SIZES:
+        n = 48
+        key = jax.random.PRNGKey(m)
+        vals = jax.random.normal(key, (m, n), jnp.float32)
+        rng = np.random.default_rng(m)
+        ids = np.sort(rng.choice(4 * m, size=m, replace=False)
+                      ).astype(np.int32)
+        w = rng.integers(1, 64, size=m).astype(np.int32)
+        # a FIXED adversary count: the config is a jit static arg of the
+        # chunk stage, so sharing it across probe sizes compiles each
+        # chunk shape once instead of once per M
+        byz = ByzantineConfig(mode="colluding", num_adversaries=5, seed=5)
+        # two transport-extreme cells: the integer-count wire and the
+        # reliability-weighted gathered wire (the full codec x strategy
+        # matrix is walked by tests/test_population.py)
+        for strategy, codec in [
+                (VoteStrategy.PSUM_INT8, "sign1bit"),
+                (VoteStrategy.ALLGATHER_1BIT, "weighted_vote")]:
+            state = (codecs_mod.get_codec(codec).init_server_state(4 * m)
+                     if codec == "weighted_vote" else None)
+            dense = be.execute(va.VoteRequest(
+                payload=vals, form="stacked", strategy=strategy,
+                codec=codec, voter_ids=ids, weights=w,
+                failures=va.FailureSpec(byz=byz), step=jnp.int32(3),
+                salt=11, server_state=state))
+            stream = va.PopulationStream(
+                n_voters=m, n_coords=n, ids=ids, weights=w,
+                values=lambda want, _v=vals, _i=jnp.asarray(ids):
+                    _v[jnp.searchsorted(_i, want)])
+            streamed = be.execute(va.VoteRequest(
+                payload=stream, form="streamed", strategy=strategy,
+                codec=codec, failures=va.FailureSpec(byz=byz),
+                step=jnp.int32(3), salt=11, server_state=state))
+            if not np.array_equal(np.asarray(dense.votes),
+                                  np.asarray(streamed.votes)):
+                raise RuntimeError(
+                    f"streamed != dense votes at M={m} "
+                    f"{codec}/{strategy.value}")
+            for k2 in (dense.server_state or {}):
+                if not np.array_equal(
+                        np.asarray(dense.server_state[k2]),
+                        np.asarray(streamed.server_state[k2])):
+                    raise RuntimeError(
+                        f"streamed != dense state[{k2!r}] at M={m} "
+                        f"{codec}/{strategy.value}")
+            checked += 1
+    return ("federated-smoke/streamed_eq_dense", 1.0,
+            f"bit-identical votes+state over {checked} cells at "
+            f"M={list(_EQ_SIZES)} (sampled ids, dataset weights, "
+            "colluding byz)")
+
+
+def _scale_row():
+    """The §12 acceptance row: a 100,000-client population, 10% client
+    sampling, one churn event — run on this single host, with peak
+    materialized sign rows read from ``population.LAST_STATS`` and
+    asserted bounded by the chunk size, not by M."""
+    from repro.configs.base import VoteStrategy
+    from repro.core import population
+    from repro.sim import (AdversarySpec, ChurnEvent, PopulationSpec,
+                           ScenarioRunner, ScenarioSpec)
+
+    chunk = 2000
+    # honest population: the memory bound is an engine property, and
+    # skipping the adversary also skips the oracle replay — the lane's
+    # adversarial coverage lives in the drills above. The churn sizes
+    # keep both rounds' sampled cohorts (10 000 and 12 000) exact
+    # multiples of the chunk, so the big shapes compile exactly once
+    spec = ScenarioSpec(
+        "fed-smoke/scale-100k", n_steps=2, dim=64, momentum=0.0,
+        strategy=VoteStrategy.PSUM_INT8,
+        population=PopulationSpec(
+            n_clients=100_000, sample_fraction=0.1,
+            churn=(ChurnEvent(1, join=25_000, leave=5_000,
+                              note="scale churn"),),
+            chunk_size=chunk))
+    tr = ScenarioRunner(spec).run()
+    stats = dict(population.LAST_STATS)
+    if stats["peak_rows"] > chunk:
+        raise RuntimeError(
+            f"peak materialized rows {stats['peak_rows']} exceed "
+            f"chunk_size={chunk}: the streamed engine leaked an O(M) "
+            "buffer")
+    if stats["n_voters"] < 10_000:
+        raise RuntimeError(
+            f"scale drill sampled only {stats['n_voters']} voters; "
+            "expected ~10% of a 100k population")
+    return ("federated-smoke/scale_100k_peak_rows",
+            float(stats["peak_rows"]),
+            f"M=100000 sample=0.1 churn@1 -> {stats['n_voters']} voters "
+            f"in {stats['n_chunks']} chunks, peak {stats['peak_rows']} "
+            f"rows <= chunk {chunk}; final pop "
+            f"{tr.steps[-1].n_population}")
+
+
+def smoke_rows():
+    return _drill_rows() + [_equivalence_row(), _scale_row()]
+
+
+#: the benchmarks.run driver path — the smoke lane IS the federated
+#: benchmark (the population engine is host-side by construction; there
+#: is no separate subprocess sweep to run)
+rows = smoke_rows
+
+
+def emit_json(rs, path: str) -> None:
+    """Machine-readable baseline, same ``{"rows": [...]}`` schema as
+    ``benchmarks.run --emit-json`` (gated by scripts/perf_gate.py)."""
+    doc = {"rows": [{"name": n, "value": v, "derived": d}
+                    for n, v, d in rs]}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="federated drill sweep + streamed==dense and "
+                         "memory-bound gates (CI lane, <10 s)")
+    ap.add_argument("--emit-json", dest="json_out", nargs="?",
+                    const=_JSON_DEFAULT, default=None,
+                    help=f"write rows as JSON (default {_JSON_DEFAULT})")
+    args = ap.parse_args()
+
+    rs = smoke_rows()
+    if args.smoke and args.json_out is None:   # CI smoke seeds the JSON
+        args.json_out = _JSON_DEFAULT
+    print("name,value,derived")
+    for name, value, derived in rs:
+        print(f"{name},{value:.6g},{derived}", flush=True)
+    if args.json_out:
+        emit_json(rs, args.json_out)
+        print(f"# wrote {args.json_out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

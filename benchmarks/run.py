@@ -8,6 +8,8 @@ Prints ``name,value,derived`` CSV rows:
   fig5  communication volume/time vs dense all-reduce (bench_comm)
   fig6  end-to-end step-time speedup model            (bench_speedup)
   codecs  codec frontier: convergence vs bits/param   (bench_codecs)
+  federated  streamed population engine: sampling,
+             churn, weighted votes, 100k-client bound  (bench_federated)
   roofline  per-cell terms from the dry-run artifacts (roofline)
 
 ``--emit-json FILE`` additionally writes every produced row as JSON —
@@ -29,7 +31,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module keys "
-                         "(fig1..fig6,codecs,vote_plan,roofline)")
+                         "(fig1..fig6,codecs,vote_plan,federated,"
+                         "roofline)")
     ap.add_argument("--list", action="store_true",
                     help="enumerate the registered suites (key, module, "
                          "one-line description) and exit")
@@ -38,13 +41,13 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_codecs, bench_comm, bench_convergence,
-                            bench_noise, bench_robustness, bench_speedup,
-                            bench_vote_plan, roofline)
+                            bench_federated, bench_noise, bench_robustness,
+                            bench_speedup, bench_vote_plan, roofline)
     suites = {
         "fig1": bench_convergence, "fig2": bench_noise, "fig3": bench_noise,
         "fig4": bench_robustness, "fig5": bench_comm, "fig6": bench_speedup,
         "codecs": bench_codecs, "vote_plan": bench_vote_plan,
-        "roofline": roofline,
+        "federated": bench_federated, "roofline": roofline,
     }
     if args.list:
         for key, mod in suites.items():

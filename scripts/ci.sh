@@ -9,8 +9,11 @@
 # the vote-plan smoke (golden single-bucket fixed point, per-bucket
 # kernel-launch accounting, 8-dev harness strategy x bucket x overlap
 # sweep; the companion mixed-codec host-count-invariance drill runs in
-# the tier-2 lane via tests/tier2/test_plan_drills.py), and the perf
-# gate (scripts/perf_gate.py: fresh smoke JSONs vs the committed
+# the tier-2 lane via tests/tier2/test_plan_drills.py), the federated
+# smoke (streamed population engine: sampling/churn/dataset-weighted
+# drills, streamed==dense gate, 100k-client memory-bound row,
+# BENCH_federated.json baseline written, <10 s), and the perf gate
+# (scripts/perf_gate.py: fresh smoke JSONs vs the committed
 # BENCH_*.json baselines — >15% timing regression or any bit-identity
 # row change fails).
 #
@@ -47,7 +50,7 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 # committed after the lanes finish (one bench run total, not two)
 PERF_BASE="$(mktemp -d)"
 trap 'rm -rf "$PERF_BASE"' EXIT
-cp BENCH_codecs.json BENCH_vote_plan.json "$PERF_BASE/"
+cp BENCH_codecs.json BENCH_vote_plan.json BENCH_federated.json "$PERF_BASE/"
 
 echo "== codec smoke (8-virtual-device platform; writes BENCH_codecs.json) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -64,6 +67,12 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 # in the tier-2 lane above; re-invoking it here would double its
 # multi-minute subprocess replays)
 
+echo "== federated smoke (streamed population engine; writes BENCH_federated.json) =="
+# client sampling / churn / dataset-weighted drills, the streamed==dense
+# bit-identity gate, and the 100k-client memory-bound row (peak
+# materialized sign rows <= chunk size, never O(M)); <10 s
+python -m benchmarks.bench_federated --smoke
+
 echo "== perf gate (fresh smoke numbers vs committed baselines) =="
 # >15% regression on any *_ms timing row, or ANY change on a
 # bit-identity/accounting row, fails the build; improvements pass
@@ -72,6 +81,8 @@ python scripts/perf_gate.py \
   --baseline "$PERF_BASE/BENCH_codecs.json" --fresh BENCH_codecs.json
 python scripts/perf_gate.py \
   --baseline "$PERF_BASE/BENCH_vote_plan.json" --fresh BENCH_vote_plan.json
+python scripts/perf_gate.py \
+  --baseline "$PERF_BASE/BENCH_federated.json" --fresh BENCH_federated.json
 
 echo "== api smoke (vote API examples + deprecated-surface check) =="
 # the two VoteRequest-rewritten examples, CI-sized (seconds each), then

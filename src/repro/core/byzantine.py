@@ -131,16 +131,27 @@ def apply_adversary(signs: jax.Array, cfg: ByzantineConfig,
 
 def apply_adversary_stacked(stacked: jax.Array, cfg: ByzantineConfig, *,
                             step: Optional[jax.Array] = None,
-                            salt: int = 0) -> jax.Array:
+                            salt: int = 0,
+                            ids: Optional[jax.Array] = None) -> jax.Array:
     """The same transform over a stacked (M, ...) voter tensor (virtual
     mesh path: replica index = position along the leading dim).
     Bit-identical to `apply_adversary` run on M mesh replicas (asserted
     by tests/tier2/scenario_harness.py).
+
+    ``ids`` overrides the per-row replica index with *logical* voter
+    identities (int32, shape (M,)): a client-sampled or chunk-streamed
+    round materializes only some rows of the population, but each row's
+    adversary predicate (`id < num_adversaries`) and PRNG stream
+    (:func:`adversary_key` folds the id) must depend on who the voter
+    IS, not where its row landed — the same client draws the same evil
+    vector regardless of sampling or chunking. Default (`None`) keeps
+    the historical row-position indexing.
     """
     if cfg.mode == "none" or cfg.num_adversaries == 0:
         return stacked
     m = stacked.shape[0]
-    idx = jnp.arange(m, dtype=jnp.int32)
+    idx = (jnp.arange(m, dtype=jnp.int32) if ids is None
+           else jnp.asarray(ids).astype(jnp.int32))
     evil = jax.vmap(
         lambda s, i: evil_signs(s, cfg, i, step=step, salt=salt))(stacked, idx)
     is_adv = (idx < cfg.num_adversaries).reshape(

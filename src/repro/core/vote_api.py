@@ -57,7 +57,7 @@ from repro import compat
 from repro.configs.base import ByzantineConfig, VoteStrategy
 from repro.core import byzantine, sign_compress as sc
 
-FORMS = ("leaf", "stacked", "tree")
+FORMS = ("leaf", "stacked", "tree", "streamed")
 MESH_STYLES = ("data_model", "data_only")
 
 
@@ -164,11 +164,101 @@ class WireReport:
 @dataclasses.dataclass(frozen=True)
 class VoteOutcome:
     """votes in the payload's original form + updated server state + the
-    wire report."""
+    wire report.
+
+    ``wire_signs`` is the (M, n) int8 sign tensor that actually reached
+    the wire (sign extraction -> stale substitution -> adversary, the
+    pinned §7 order) — populated by the dense VirtualBackend path so
+    trace capture observes exactly what was voted instead of recomputing
+    the failure composition (and re-drawing the adversary PRNG) outside
+    ``execute()``. ``None`` on the mesh path (the stack never exists on
+    one host), the fused-kernel path (the kernel consumes raw values),
+    and the streamed path (never materialized by design)."""
 
     votes: Any
     server_state: Dict[str, Any]
     wire: WireReport
+    wire_signs: Any = None
+
+
+@dataclasses.dataclass(frozen=True, eq=False, repr=False)
+class PopulationStream:
+    """A voter population yielded in chunks instead of materialized as
+    one dense (M, n) stack — the ``"streamed"`` request form (DESIGN.md
+    §12). The engine calls ``values`` (and ``prev``, when stale
+    substitution is requested) with int32 chunks of **logical voter
+    ids** and never holds more than ``chunk_size`` rows at once, so M
+    decouples from both host memory and device count.
+
+    * ``values``  — callable, (k,) int32 logical ids -> (k, n_coords)
+      real values (the sampled clients' gradients). Must be a pure
+      function of the ids so chunking cannot change the vote.
+    * ``ids``     — optional (n_voters,) strictly-increasing non-negative
+      logical indices (a client-sampled round); default = arange
+      (full participation). Adversary/stale predicates and PRNG streams
+      key on these ids, not row positions.
+    * ``prev``    — optional callable, same contract as ``values``,
+      returning (k, n_coords) int8 prev signs for stale substitution.
+    * ``weights`` — optional (n_voters,) positive int dataset sizes
+      aligned to ``ids``: each client casts weight-many votes
+      (FedAvg-style dataset weighting, composing with the
+      ``weighted_vote`` codec's reliability weights).
+    """
+
+    n_voters: int
+    n_coords: int
+    values: Any
+    ids: Any = None
+    prev: Any = None
+    weights: Any = None
+
+    def __post_init__(self):
+        if self.n_voters < 1:
+            raise ValueError(f"n_voters must be >= 1, got {self.n_voters}")
+        if self.n_coords < 1:
+            raise ValueError(f"n_coords must be >= 1, got {self.n_coords}")
+        if not callable(self.values):
+            raise ValueError("values must be a callable (ids) -> (k, n) "
+                             f"chunk producer, got "
+                             f"{type(self.values).__name__}")
+        if self.prev is not None and not callable(self.prev):
+            raise ValueError("prev must be a callable (ids) -> (k, n) "
+                             "int8 chunk producer (same contract as "
+                             f"values), got {type(self.prev).__name__}")
+        if self.ids is not None:
+            ids = np.asarray(self.ids)
+            if ids.shape != (self.n_voters,):
+                raise ValueError(f"ids must have shape ({self.n_voters},) "
+                                 f"aligned to the stream rows, got "
+                                 f"{ids.shape}")
+            if not np.issubdtype(ids.dtype, np.integer):
+                raise ValueError(f"ids must be integer logical indices, "
+                                 f"got dtype {ids.dtype}")
+            if ids.size and (int(ids.min()) < 0
+                             or np.any(np.diff(ids) <= 0)):
+                raise ValueError("ids must be strictly increasing "
+                                 "non-negative logical voter indices "
+                                 "(sort the sampled set)")
+        if self.weights is not None:
+            w = np.asarray(self.weights)
+            if w.shape != (self.n_voters,):
+                raise ValueError(f"weights must have shape "
+                                 f"({self.n_voters},) aligned to the "
+                                 f"stream rows, got {w.shape}")
+            if not np.issubdtype(w.dtype, np.integer):
+                raise ValueError("weights are integer vote counts "
+                                 "(dataset sizes), got dtype "
+                                 f"{w.dtype}")
+            if w.size and int(w.min()) < 1:
+                raise ValueError("weights must be >= 1 (a zero-data "
+                                 "client does not vote; drop it from "
+                                 "the sample instead)")
+
+    def row_ids(self) -> np.ndarray:
+        """The logical id of every stream row, materialized ((M,) int32)."""
+        if self.ids is None:
+            return np.arange(self.n_voters, dtype=np.int32)
+        return np.asarray(self.ids, dtype=np.int32)
 
 
 @dataclasses.dataclass(frozen=True, eq=False, repr=False)
@@ -185,6 +275,9 @@ class VoteRequest:
         values (the Scenario Lab / benchmark form).
       * ``"tree"``    — a dict of replica-local leaves (the trainer's
         form; votes come back leaf-shaped in each leaf's dtype).
+      * ``"streamed"`` — a :class:`PopulationStream` yielding voter
+        chunks on demand (the federated-population form, DESIGN.md §12;
+        VirtualBackend only — never materializes the (M, n) stack).
 
     `strategy` may be ``AUTO`` (resolved against the comm cost model,
     codec-aware); `plan` switches execution to the §9 bucket schedule
@@ -195,7 +288,13 @@ class VoteRequest:
     stale substitution (needs `prev`) and the Byzantine model;
     `step`/`salt` feed the adversary PRNG discipline; `server_state`
     threads stateful codecs' decode memory; `diagnostics` (tree form
-    only) asks for margin/agreement in the :class:`WireReport`."""
+    only) asks for margin/agreement in the :class:`WireReport`.
+
+    `voter_ids`/`weights` annotate a **stacked** payload with logical
+    voter identities / integer dataset-size vote multiplicities — the
+    dense twin of the streamed form's :class:`PopulationStream` axes
+    (VirtualBackend only; the mesh's voters are physical replicas). A
+    streamed request carries both on the stream instead."""
 
     payload: Any
     form: str = "leaf"
@@ -209,6 +308,8 @@ class VoteRequest:
     server_state: Optional[Dict[str, Any]] = None
     diagnostics: bool = False
     overlap: bool = False
+    voter_ids: Any = None
+    weights: Any = None
 
     # ---- build-time validation -----------------------------------------
 
@@ -228,6 +329,8 @@ class VoteRequest:
                 raise ValueError(
                     "tree-form payload must be a non-empty dict of "
                     f"leaves, got {type(self.payload).__name__}")
+        elif self.form == "streamed":
+            self._validate_streamed()
         else:
             if not hasattr(self.payload, "shape"):
                 raise ValueError(
@@ -237,11 +340,18 @@ class VoteRequest:
                 raise ValueError(
                     "stacked-form payload must be (M, n) — M voters by n "
                     f"coordinates — got shape {tuple(self.payload.shape)}")
-        if self.failures.n_stale > 0 and self.prev is None:
-            raise ValueError(
-                f"failures.n_stale={self.failures.n_stale} substitutes "
-                "stale votes but the request has no prev signs to "
-                "substitute (set VoteRequest.prev)")
+        if self.failures.n_stale > 0:
+            has_prev = (self.payload.prev is not None
+                        if self.form == "streamed" else
+                        self.prev is not None)
+            if not has_prev:
+                raise ValueError(
+                    f"failures.n_stale={self.failures.n_stale} substitutes "
+                    "stale votes but the request has no prev signs to "
+                    "substitute (set VoteRequest.prev"
+                    + (" / PopulationStream.prev"
+                       if self.form == "streamed" else "") + ")")
+        self._validate_voter_axes()
         self._validate_plan()
         # a stacked request always decodes through the codec (even M=1),
         # so missing server state is a build-time error there; leaf/tree
@@ -251,7 +361,8 @@ class VoteRequest:
         # raises at execution instead when the region has vote axes
         needs_state = (self.plan.has_server_state if self.plan is not None
                        else codec.server_state)
-        if needs_state and not self.server_state and self.form == "stacked":
+        if (needs_state and not self.server_state
+                and self.form in ("stacked", "streamed")):
             raise ValueError(
                 f"codec {self.codec!r} (or the plan's codec map) keeps "
                 "server-side decode state; thread it through "
@@ -268,6 +379,70 @@ class VoteRequest:
                 "overlap=True double-buffers a plan's bucket schedule; "
                 "attach a VotePlan (VoteRequest.plan / "
                 "OptimizerConfig.bucket_bytes) or drop overlap")
+
+    def _validate_streamed(self):
+        if not isinstance(self.payload, PopulationStream):
+            raise ValueError(
+                "streamed-form payload must be a PopulationStream, got "
+                f"{type(self.payload).__name__}")
+        if self.plan is not None:
+            raise ValueError(
+                "the streamed population engine accumulates one flat "
+                "coordinate buffer and has no bucket walk; drop the "
+                "plan or use the stacked form")
+        if self.overlap:
+            raise ValueError(
+                "overlap double-buffers a plan's bucket schedule; the "
+                "streamed form has no plan to overlap")
+        if self.prev is not None:
+            raise ValueError(
+                "a streamed request's prev signs are a chunk producer "
+                "on the stream (PopulationStream.prev), not a dense "
+                "VoteRequest.prev array")
+        if self.voter_ids is not None or self.weights is not None:
+            raise ValueError(
+                "a streamed request carries voter ids and weights on "
+                "the PopulationStream (ids=/weights=), not on the "
+                "VoteRequest")
+
+    def _validate_voter_axes(self):
+        if self.voter_ids is None and self.weights is None:
+            return
+        if self.form != "stacked":
+            raise ValueError(
+                "voter_ids/weights annotate the rows of a stacked "
+                f"(M, n) payload, not the {self.form!r} form (streamed "
+                "requests carry them on the PopulationStream)")
+        if self.plan is not None:
+            raise ValueError(
+                "voter_ids/weights do not compose with a bucketed plan "
+                "yet; drop the plan (the population engine accumulates "
+                "one flat buffer)")
+        m = self.payload.shape[0]
+        for name, arr in (("voter_ids", self.voter_ids),
+                          ("weights", self.weights)):
+            if arr is None:
+                continue
+            a = np.asarray(arr)
+            if a.shape != (m,):
+                raise ValueError(f"{name} must have shape ({m},) aligned "
+                                 f"to the stacked rows, got {a.shape}")
+            if not np.issubdtype(a.dtype, np.integer):
+                raise ValueError(f"{name} must be an integer array, got "
+                                 f"dtype {a.dtype}")
+        if self.voter_ids is not None:
+            ids = np.asarray(self.voter_ids)
+            if ids.size and (int(ids.min()) < 0
+                             or np.any(np.diff(ids) <= 0)):
+                raise ValueError(
+                    "voter_ids must be strictly increasing non-negative "
+                    "logical voter indices (sort the sampled set)")
+        if self.weights is not None:
+            w = np.asarray(self.weights)
+            if w.size and int(w.min()) < 1:
+                raise ValueError(
+                    "weights must be >= 1 (a zero-data client does not "
+                    "vote; drop it from the sample instead)")
 
     def _validate_plan(self):
         if self.plan is None:
@@ -572,19 +747,29 @@ def _tree_execute(tree, axes: Tuple[str, ...], strategy: VoteStrategy,
 
 def effective_stacked_signs(values: jax.Array, prev=None, n_stale: int = 0,
                             byz: Optional[ByzantineConfig] = None,
-                            step=None, salt: int = 0) -> jax.Array:
+                            step=None, salt: int = 0,
+                            ids=None) -> jax.Array:
     """The (M, n) int8 sign tensor that actually reaches the wire: sign
-    extraction -> stale substitution (row index < n_stale) -> adversary
-    perturbation (replica index = row index), in the pinned §7 order."""
+    extraction -> stale substitution (voter index < n_stale) -> adversary
+    perturbation, in the pinned §7 order.
+
+    ``ids`` (int32 (M,)) overrides the per-row voter index with logical
+    population identities: both failure predicates and the adversary
+    PRNG then depend on who each voter IS, not where its row landed, so
+    a sampled or chunk-streamed round composes the same failures as the
+    dense stack (default ``None`` = row position, the historical
+    semantics)."""
     from repro.distributed.fault_tolerance import simulate_stragglers
     signs = sc.sign_ternary(values)
+    m = signs.shape[0]
+    idx = (jnp.arange(m, dtype=jnp.int32) if ids is None
+           else jnp.asarray(ids).astype(jnp.int32))
     if n_stale and prev is not None:
-        m = signs.shape[0]
-        mask = (jnp.arange(m, dtype=jnp.int32) < n_stale)[:, None]
+        mask = (idx < n_stale)[:, None]
         signs = simulate_stragglers(signs, prev.astype(signs.dtype), mask)
     if byz is not None:
         signs = byzantine.apply_adversary_stacked(signs, byz, step=step,
-                                                  salt=salt)
+                                                  salt=salt, ids=idx)
     return signs
 
 
@@ -687,8 +872,11 @@ def _virtual_execute(values, prev, step, server_state, *, strategy,
                      codec, plan, n_stale, byz, salt, overlap):
     eff = effective_stacked_signs(values, prev, n_stale, byz, step, salt)
     if plan is not None:
-        return _virtual_plan_walk(eff, plan, server_state, overlap)
-    return _virtual_codec_vote(eff, strategy, codec, server_state)
+        votes, state = _virtual_plan_walk(eff, plan, server_state, overlap)
+    else:
+        votes, state = _virtual_codec_vote(eff, strategy, codec,
+                                           server_state)
+    return votes, state, eff
 
 
 # ---------------------------------------------------------------------------
@@ -755,6 +943,14 @@ class MeshBackend(VoteBackend):
     # ---- capability ----------------------------------------------------
 
     def why_unsupported(self, request: VoteRequest) -> Optional[str]:
+        if request.form == "streamed":
+            return ("the streamed population form virtualises more "
+                    "voters than any physical mesh holds replicas; use "
+                    "VirtualBackend")
+        if request.voter_ids is not None or request.weights is not None:
+            return ("logical voter ids / dataset-size vote weights "
+                    "describe a virtual population; the mesh backend's "
+                    "voters are physical replicas (use VirtualBackend)")
         if request.form == "stacked":
             m = request.payload.shape[0]
             have = len(jax.devices())
@@ -906,11 +1102,17 @@ class MeshBackend(VoteBackend):
 
 
 class VirtualBackend(VoteBackend):
-    """The host-count-independent backend: ``stacked`` requests only,
-    exchange collectives replaced by their mathematically-exact
-    equivalents over the leading voter dim (DESIGN.md §7). Bit-identical
-    to :class:`MeshBackend` on the same request — asserted by the tier-2
-    harness and the hypothesis property suite.
+    """The host-count-independent backend: ``stacked`` and ``streamed``
+    requests only, exchange collectives replaced by their
+    mathematically-exact equivalents over the voter dim (DESIGN.md §7).
+    Bit-identical to :class:`MeshBackend` on the same request — asserted
+    by the tier-2 harness and the hypothesis property suite.
+
+    ``streamed`` requests run the §12 population engine: the stacked
+    exchange in voter-chunks of ``chunk_size`` rows (chunk -> pack ->
+    partial tally accumulate, exact integer arithmetic), peak sign
+    memory O(chunk_size x n) instead of O(M x n), bit-identical to the
+    dense stacked path by construction.
 
     ``use_kernels=True`` routes plain gathered-1-bit requests through
     the fused Pallas sign+pack+popcount kernel (the benchmark hot path);
@@ -920,14 +1122,30 @@ class VirtualBackend(VoteBackend):
 
     name = "virtual"
 
-    def __init__(self, use_kernels: bool = False):
+    def __init__(self, use_kernels: bool = False, chunk_size: int = 2048):
         self.use_kernels = use_kernels
+        self.chunk_size = int(chunk_size)
+        if self.chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
 
     def why_unsupported(self, request: VoteRequest) -> Optional[str]:
-        if request.form != "stacked":
+        if request.form not in ("stacked", "streamed"):
             return ("the virtual backend executes host-local stacked "
-                    f"(M, n) payloads, not {request.form!r} (use "
-                    "MeshBackend inside the mesh region)")
+                    f"(M, n) payloads or streamed populations, not "
+                    f"{request.form!r} (use MeshBackend inside the mesh "
+                    "region)")
+        if request.form == "streamed":
+            if self.use_kernels:
+                return ("the fused-kernel path consumes one dense (M, n) "
+                        "buffer; the streamed population engine exists "
+                        "to never materialize it (use "
+                        "VirtualBackend(use_kernels=False))")
+            if request.strategy == VoteStrategy.HIERARCHICAL:
+                return ("hierarchical's reduce-scatter wire pads to "
+                        "PACK*M words — O(M) layout the streamed engine "
+                        "exists to avoid; use psum_int8 or "
+                        "allgather_1bit")
+            return None
         if self.use_kernels:
             if request.overlap:
                 return ("the fused-kernel path runs one fused launch per "
@@ -954,7 +1172,12 @@ class VirtualBackend(VoteBackend):
     def execute(self, request: VoteRequest) -> VoteOutcome:
         self._check(request)
         req = request
+        if req.form == "streamed":
+            return self._execute_streamed(req)
+        if req.voter_ids is not None or req.weights is not None:
+            return self._execute_annotated(req)
         m, n = req.payload.shape
+        eff = None
         if self.use_kernels:
             from repro.kernels import ops
             packed = ops.fused_majority(req.payload)
@@ -967,17 +1190,75 @@ class VirtualBackend(VoteBackend):
                         ve.resolve_strategy(req.strategy, n, m, 1,
                                             codec=req.codec))
             f = req.failures
-            votes, state = _virtual_execute(
+            votes, state, eff = _virtual_execute(
                 req.payload, req.prev, req.step, req.server_state,
                 strategy=resolved, codec=req.codec, plan=req.plan,
                 n_stale=f.n_stale, byz=f.byz, salt=req.salt,
                 overlap=req.overlap)
         wire = _static_wire(req.plan, req.codec, resolved, n, 1, m)
+        return VoteOutcome(votes=votes, server_state=state, wire=wire,
+                           wire_signs=eff)
+
+    def _execute_annotated(self, req: VoteRequest) -> VoteOutcome:
+        """A stacked payload annotated with voter_ids/weights — the
+        dense twin of a streamed request. Executes through the SAME
+        population engine (one chunk spanning all M rows), so the
+        chunked and dense decodes share one implementation and cannot
+        drift: bit-identity is by construction, not by parallel
+        maintenance of two float decode paths."""
+        from repro.core import population
+        m, n = req.payload.shape
+        payload = jnp.asarray(req.payload)
+        ids_np = (np.asarray(req.voter_ids, dtype=np.int32)
+                  if req.voter_ids is not None
+                  else np.arange(m, dtype=np.int32))
+        ids_j = jnp.asarray(ids_np)
+
+        def rows(ids):   # logical ids -> payload rows (ids_np sorted)
+            return payload[jnp.searchsorted(ids_j, ids)]
+
+        prev = None
+        if req.prev is not None:
+            prev_j = jnp.asarray(req.prev)
+            prev = lambda ids: prev_j[jnp.searchsorted(ids_j, ids)]
+        stream = PopulationStream(
+            n_voters=m, n_coords=n, values=rows,
+            ids=ids_np if req.voter_ids is not None else None,
+            prev=prev,
+            weights=(None if req.weights is None
+                     else np.asarray(req.weights)))
+        out = self._execute_stream_request(req, stream, chunk_size=m)
+        # one more pass for the wire signs (dense M is small by
+        # definition — the streamed form exists for the large-M case)
+        f = req.failures
+        eff = population._chunk_signs(stream, ids_np, req.step,
+                                      f.n_stale, f.byz, req.salt)
+        return dataclasses.replace(out, wire_signs=eff)
+
+    def _execute_streamed(self, req: VoteRequest) -> VoteOutcome:
+        return self._execute_stream_request(req, req.payload,
+                                            chunk_size=self.chunk_size)
+
+    def _execute_stream_request(self, req: VoteRequest, stream,
+                                chunk_size: int) -> VoteOutcome:
+        from repro.core import population
+        from repro.core import vote_engine as ve
+        m, n = stream.n_voters, stream.n_coords
+        resolved = ve.resolve_strategy(req.strategy, n, m, 1,
+                                       codec=req.codec)
+        f = req.failures
+        votes, state, margin = population.streamed_vote(
+            stream, strategy=resolved, codec=req.codec,
+            n_stale=f.n_stale, byz=f.byz, step=req.step, salt=req.salt,
+            server_state=req.server_state, chunk_size=chunk_size)
+        wire = _static_wire(req.plan, req.codec, resolved, n, 1, m)
+        wire = dataclasses.replace(wire, margin=margin)
         return VoteOutcome(votes=votes, server_state=state, wire=wire)
 
 
 __all__ = [
-    "FailureSpec", "MeshBackend", "VirtualBackend", "VoteBackend",
-    "VoteOutcome", "VoteRequest", "WireReport", "count_dtype",
-    "count_bytes", "effective_stacked_signs", "pad_last", "warn_legacy",
+    "FailureSpec", "MeshBackend", "PopulationStream", "VirtualBackend",
+    "VoteBackend", "VoteOutcome", "VoteRequest", "WireReport",
+    "count_dtype", "count_bytes", "effective_stacked_signs", "pad_last",
+    "warn_legacy",
 ]

@@ -29,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+from fractions import Fraction
 from typing import Callable, Optional, Sequence, Tuple
 
 import jax
@@ -60,10 +61,17 @@ def straggler_mask_for(axis_names: Sequence[str], n_stale: int,
 def count_for_fraction(fraction: float, n_replicas: int) -> int:
     """Replicas a fraction maps to, with explicit half-up rounding so the
     boundary regimes land where the paper's figures put them (0.5 of 16
-    -> 8, i.e. *exactly* 50% — the tie regime DESIGN.md §7 pins)."""
+    -> 8, i.e. *exactly* 50% — the tie regime DESIGN.md §7 pins).
+
+    The product is taken in exact rational arithmetic (the float value
+    of ``fraction`` is honored bit-for-bit): at federated-scale
+    populations ``int(fraction * n + 0.5)`` accumulates float error and
+    can land one replica off the half-up boundary.
+    """
     if not 0.0 <= fraction <= 1.0:
         raise ValueError(f"fraction {fraction} outside [0, 1]")
-    return min(n_replicas, int(fraction * n_replicas + 0.5))
+    half_up = int(Fraction(fraction) * n_replicas + Fraction(1, 2))
+    return min(n_replicas, half_up)
 
 
 def _failure_request(engine, payload, prev_signs, n_stale, step,

@@ -8,18 +8,19 @@ VoteEngine wire path (DESIGN.md §7).
     trace = ScenarioRunner(spec).run()
     print(trace.summary())
 """
-from repro.sim.scenario import (AdversarySpec, ElasticEvent, PlanSpec,
-                                ScenarioSpec, expand_grid, fig4_grid,
-                                load_scenarios, preset_scenarios,
-                                scenario_salt)
+from repro.sim.scenario import (AdversarySpec, ChurnEvent, ElasticEvent,
+                                PlanSpec, PopulationSpec, ScenarioSpec,
+                                expand_grid, fig4_grid, load_scenarios,
+                                preset_scenarios, scenario_salt)
 from repro.sim.runner import (BACKENDS, ScenarioRunner, ScenarioTrace,
                               StepTrace, run_scenarios)
 from repro.sim.virtual_mesh import (VirtualVoteEngine, virtual_plan_vote,
                                     virtual_vote, virtual_vote_codec)
 
 __all__ = [
-    "AdversarySpec", "BACKENDS", "ElasticEvent", "PlanSpec",
-    "ScenarioRunner", "ScenarioSpec", "ScenarioTrace", "StepTrace",
+    "AdversarySpec", "BACKENDS", "ChurnEvent", "ElasticEvent", "PlanSpec",
+    "PopulationSpec", "ScenarioRunner", "ScenarioSpec", "ScenarioTrace",
+    "StepTrace",
     "VirtualVoteEngine", "expand_grid", "fig4_grid", "load_scenarios",
     "preset_scenarios", "run_scenarios", "scenario_salt",
     "virtual_plan_vote", "virtual_vote", "virtual_vote_codec",

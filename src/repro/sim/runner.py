@@ -56,7 +56,14 @@ BACKENDS = ("virtual", "mesh")
 
 @dataclasses.dataclass(frozen=True)
 class StepTrace:
-    """One step's structured trace record (schema: DESIGN.md §7)."""
+    """One step's structured trace record (schema: DESIGN.md §7).
+
+    In population mode (§12) ``n_workers`` is the number of clients
+    actually *sampled* into the round (the voters), ``n_population``
+    the logical population they were drawn from (0 in the classic dense
+    drills), and ``n_adversaries`` counts adversaries over the LOGICAL
+    population — the realized adversarial fraction of a sampled round
+    varies with the draw, which is exactly the federated threat model."""
 
     step: int
     n_workers: int
@@ -65,6 +72,7 @@ class StepTrace:
     margin: float          # mean |vote count| / M  (1 = unanimous)
     flip_fraction: float   # coords where vote != honest-majority oracle
     loss: float            # convergence proxy: 0.5 * mean(x^2) after update
+    n_population: int = 0  # logical client population (§12; 0 = dense)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,6 +165,90 @@ def _init_x(spec: ScenarioSpec) -> jax.Array:
     return jax.random.normal(key, (spec.dim,), jnp.float32)
 
 
+# population-mode keys (§12): every draw is keyed by LOGICAL client id
+# and/or step — never by sampling order, chunk boundary, or device
+# placement — so a round replays bit-identically whatever the host count
+# or chunk size. Gradient noise uses the jax PRNG (tag 1, like the dense
+# drills); client sampling (tag 2) and dataset sizes (tag 3) use a
+# stateless splitmix64 hash in pure numpy — the host-side draws are
+# O(population) per round, and hashing keeps them free of per-population
+# jit recompiles (jax.random.permutation compiles once per distinct
+# population size — ruinous across a churn schedule) while staying
+# bit-stable across library versions.
+
+_SM64 = (np.uint64(0x9E3779B97F4A7C15), np.uint64(0xBF58476D1CE4E5B9),
+         np.uint64(0x94D049BB133111EB))
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """The splitmix64 finalizer over a uint64 array (elementwise,
+    vectorized, wrap-around arithmetic)."""
+    x = (x + _SM64[0]).astype(np.uint64)
+    x = ((x ^ (x >> np.uint64(30))) * _SM64[1]).astype(np.uint64)
+    x = ((x ^ (x >> np.uint64(27))) * _SM64[2]).astype(np.uint64)
+    return x ^ (x >> np.uint64(31))
+
+
+def _hash_stream(spec: ScenarioSpec, tag: int, step: int = 0) -> np.ndarray:
+    """A (1,) uint64 stream constant chaining (seed, salt, tag, step)."""
+    h = np.zeros(1, dtype=np.uint64)
+    for v in (spec.seed, spec.salt, tag, step):
+        h = _splitmix64(h ^ np.uint64(v))
+    return h
+
+
+def _sample_ids(spec: ScenarioSpec, step: int, pop: int, k: int
+                ) -> np.ndarray:
+    """The sorted logical ids of the k clients sampled into `step`'s
+    round: every id gets a (salt, step)-keyed hash score, the k smallest
+    win — a uniform draw without replacement. Full participation skips
+    the draw entirely, so turning sampling on cannot perturb any other
+    stream."""
+    if k >= pop:
+        return np.arange(pop, dtype=np.int32)
+    score = _splitmix64(np.arange(pop, dtype=np.uint64)
+                        ^ _hash_stream(spec, 2, step))
+    sel = np.argpartition(score, k - 1)[:k]
+    return np.sort(sel).astype(np.int32)
+
+
+def _client_sizes(spec: ScenarioSpec, ids: np.ndarray) -> np.ndarray:
+    """Dataset sizes for a batch of clients, uniform on
+    [min_data, max_data], hashed once per LOGICAL id (no step in the
+    key): a client's dataset size is a property of the client, stable
+    across rounds and churn — ids keep their sizes however the
+    population around them changes."""
+    pspec = spec.population
+    r = _splitmix64(np.asarray(ids, dtype=np.uint64)
+                    ^ _hash_stream(spec, 3))
+    span = np.uint64(pspec.max_data - pspec.min_data + 1)
+    return (pspec.min_data + (r % span)).astype(np.int32)
+
+
+@jax.jit
+def _pop_rows(ids, x, step, noise_root, noise_scale):
+    """A chunk of client gradient rows: x plus per-(step, client) noise.
+    Module-level jit on purpose — every spec-dependent quantity is a
+    traced argument, so the compilation is keyed by SHAPES only and one
+    compile serves every scenario in a sweep."""
+    def one(cid):
+        key = jax.random.fold_in(jax.random.fold_in(noise_root, step), cid)
+        return x + noise_scale * jax.random.normal(key, x.shape,
+                                                   jnp.float32)
+    return jax.vmap(one)(ids)
+
+
+def _population_rows(spec: ScenarioSpec):
+    """The per-chunk gradient-row callback for the population stream."""
+    noise_root = jax.random.fold_in(_root_key(spec), 1)
+    scale = jnp.float32(spec.noise_scale)
+
+    def rows(ids, x, step):
+        return _pop_rows(ids, x, step, noise_root, scale)
+
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # the runner
 # ---------------------------------------------------------------------------
@@ -183,6 +275,11 @@ class ScenarioRunner:
         self.spec = spec
         self.backend = backend
         self.mesh_style = mesh_style
+        if spec.population.enabled and backend != "virtual":
+            raise ValueError(
+                f"population mode ({spec.name!r}) virtualises more "
+                "voters than any physical mesh holds replicas; it runs "
+                "on backend='virtual' only (the streamed engine, §12)")
         # the execution backend: both build LITERALLY the same
         # VoteRequest per step; only the executor differs (DESIGN.md §10)
         if backend == "mesh":
@@ -195,7 +292,11 @@ class ScenarioRunner:
                     "or XLA_FLAGS=--xla_force_host_platform_device_count=N)")
             self._exec = va.MeshBackend(mesh_style=mesh_style)
         else:
-            self._exec = va.VirtualBackend()
+            # population mode streams in spec-pinned voter chunks; the
+            # default matches core.population.DEFAULT_CHUNK, so dense
+            # drills are unaffected
+            self._exec = va.VirtualBackend(
+                chunk_size=spec.population.chunk_size)
 
     # ---- per-segment compiled pieces (rebuilt at elastic boundaries) ----
 
@@ -258,6 +359,8 @@ class ScenarioRunner:
     # ---- the drill ----
 
     def run(self) -> ScenarioTrace:
+        if self.spec.population.enabled:
+            return self._run_population()
         spec = self.spec
         codec = codecs_mod.get_codec(spec.codec)
         x = _init_x(spec)
@@ -343,6 +446,93 @@ class ScenarioRunner:
                 n_adversaries=byz_cfg.num_adversaries, n_stale=n_stale,
                 margin=float(margin), flip_fraction=float(flip),
                 loss=float(loss)))
+        digest.update(np.asarray(x, np.float32).tobytes())
+        return ScenarioTrace(spec=spec, backend=self.backend,
+                             steps=tuple(steps), digest=digest.hexdigest())
+
+    # ---- the federated drill (population mode, DESIGN.md §12) ----
+
+    def _run_population(self) -> ScenarioTrace:
+        """The streamed-population variant of :meth:`run`: each round
+        samples clients from the logical population, streams their
+        gradient rows through :func:`repro.core.population.streamed_vote`
+        in voter-chunks (never materializing the population), and
+        applies the (optionally dataset-weighted) majority to the
+        iterate. Bit-identical across host counts, chunk sizes and
+        backend wiring because every PRNG draw is keyed by logical
+        client id / step and every tally is exact integer arithmetic."""
+        spec = self.spec
+        pspec = spec.population
+        codec = codecs_mod.get_codec(spec.codec)
+        rows = _population_rows(spec)
+        x = _init_x(spec)
+        pop = pspec.clients_at(0)
+        # codec server state lives over the LOGICAL population (the
+        # weighted vote tracks every client's reliability, sampled into
+        # a round or not)
+        cstate = codec.init_server_state(pop) if codec.server_state else {}
+        byz_cfg = spec.adversary.byz_config(pop, spec.seed)
+        pending = jnp.zeros((spec.dim,), jnp.int8)   # delayed-vote buffer
+        digest = hashlib.sha256()
+        steps: List[StepTrace] = []
+        for step in range(spec.n_steps):
+            pop_now = pspec.clients_at(step)
+            if pop_now != pop:
+                # churn: per-client server state — the weighted vote's
+                # (pop,) flip-rate EMA — refits by the checkpoint rule
+                # (§6): leavers truncate off the top of the id range,
+                # joiners zero-pad in at the uninformed prior
+                if cstate:
+                    cstate = jax.tree.map(
+                        jnp.asarray, refit_tree_leading_axis(
+                            cstate,
+                            {key: (pop_now,) + tuple(np.asarray(a).shape[1:])
+                             for key, a in cstate.items()}))
+                pop = pop_now
+                # adversary count is pinned to the LOGICAL population
+                # (ids < num_adversaries act evil); the realized count
+                # in a sampled round varies with the draw
+                byz_cfg = spec.adversary.byz_config(pop, spec.seed)
+            byz = byz_cfg if byz_cfg.mode != "none" else None
+            k = max(1, count_for_fraction(pspec.sample_fraction, pop))
+            ids = _sample_ids(spec, step, pop, k)
+            step_t = jnp.int32(step)
+
+            def values(cids, _x=x, _t=step_t):
+                return rows(cids, _x, _t)
+
+            stream = va.PopulationStream(
+                n_voters=k, n_coords=spec.dim, values=values, ids=ids,
+                weights=(_client_sizes(spec, ids)
+                         if pspec.weighting == "dataset" else None))
+            if byz is not None:
+                # honest-majority oracle for the flip trace: the same
+                # stream, failure-free, state read-only (runs FIRST so
+                # population.LAST_STATS reflects the real vote)
+                from repro.core import population as pop_engine
+                oracle, _, _ = pop_engine.streamed_vote(
+                    stream, strategy=spec.strategy, codec=spec.codec,
+                    step=step_t, salt=spec.salt, server_state=cstate,
+                    chunk_size=pspec.chunk_size)
+            out = self._exec.execute(va.VoteRequest(
+                payload=stream, form="streamed", strategy=spec.strategy,
+                codec=spec.codec, failures=va.FailureSpec(byz=byz),
+                step=step_t, salt=spec.salt, server_state=cstate))
+            vote, cstate = out.votes, out.server_state
+            flip = (float(jnp.mean((vote != oracle).astype(jnp.float32)))
+                    if byz is not None else 0.0)
+            if spec.delayed_vote:
+                applied, pending = pending, vote
+            else:
+                applied = vote
+            x = x - spec.learning_rate * applied.astype(jnp.float32)
+            loss = float(0.5 * jnp.mean(x * x))
+            digest.update(np.asarray(vote).tobytes())
+            steps.append(StepTrace(
+                step=step, n_workers=k,
+                n_adversaries=byz_cfg.num_adversaries, n_stale=0,
+                margin=float(out.wire.margin), flip_fraction=flip,
+                loss=loss, n_population=pop))
         digest.update(np.asarray(x, np.float32).tobytes())
         return ScenarioTrace(spec=spec, backend=self.backend,
                              steps=tuple(steps), digest=digest.hexdigest())

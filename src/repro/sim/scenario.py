@@ -135,6 +135,104 @@ class ElasticEvent:
 
 
 @dataclasses.dataclass(frozen=True)
+class ChurnEvent:
+    """At `step`, `join` new clients enter the logical population and
+    `leave` existing ones exit (DESIGN.md §12). The generalization of
+    :class:`ElasticEvent` to federated populations: events are *deltas*
+    on the client count, joiners take fresh logical ids at the top of
+    the id range (their dataset sizes and PRNG streams follow the id,
+    so a client that exists in two runs behaves identically), leavers
+    drop from the top — per-client server state (the weighted vote's
+    flip-rate EMA) refits by the checkpoint rule (truncate / zero-pad,
+    §6), exactly like an elastic rescale."""
+
+    step: int
+    join: int = 0
+    leave: int = 0
+    note: str = ""
+
+    def __post_init__(self):
+        if self.step < 1 or self.join < 0 or self.leave < 0:
+            raise ValueError(f"bad churn event {self} (step >= 1; "
+                             "pre-run churn is just a different "
+                             "n_clients)")
+        if self.join == 0 and self.leave == 0:
+            raise ValueError(f"churn event at step {self.step} neither "
+                             "joins nor leaves anyone")
+
+
+@dataclasses.dataclass(frozen=True)
+class PopulationSpec:
+    """The scenario's federated-population axis (DESIGN.md §12).
+
+    ``n_clients = 0`` (the default) keeps the classic dense drill —
+    every voter materialized as a row of one stacked tensor.
+    ``n_clients > 0`` switches the runner to the streamed population
+    engine: the logical population holds `n_clients` voters (far more
+    than any host stacks densely), each round samples
+    ``sample_fraction`` of them (PRNG keyed by (scenario salt, step) —
+    host-count-invariant replay), and the vote streams through
+    :func:`repro.core.population.streamed_vote` in voter-chunks of
+    ``chunk_size`` rows, so peak sign-buffer memory is O(chunk x dim)
+    however large the population.
+
+    ``weighting="dataset"`` gives every client an integer dataset size
+    drawn once per *logical id* (uniform on [min_data, max_data]; PRNG
+    follows the id, not the round) and counts its vote with that
+    multiplicity — the federated dataset-weighted majority. ``churn``
+    is the population's join/leave schedule (:class:`ChurnEvent`)."""
+
+    n_clients: int = 0
+    sample_fraction: float = 1.0
+    churn: Tuple[ChurnEvent, ...] = ()
+    weighting: str = "uniform"          # "uniform" | "dataset"
+    min_data: int = 1
+    max_data: int = 64
+    chunk_size: int = 2048
+
+    def __post_init__(self):
+        if self.n_clients < 0:
+            raise ValueError(f"n_clients {self.n_clients} < 0")
+        if not self.enabled and (self.churn or self.sample_fraction != 1.0
+                                 or self.weighting != "uniform"):
+            raise ValueError("population axes (sampling/churn/weighting) "
+                             "need n_clients > 0")
+        if not 0.0 < self.sample_fraction <= 1.0:
+            raise ValueError(f"sample_fraction {self.sample_fraction} "
+                             "not in (0, 1]")
+        if self.weighting not in ("uniform", "dataset"):
+            raise ValueError(f"weighting {self.weighting!r} not in "
+                             "('uniform', 'dataset')")
+        if not 1 <= self.min_data <= self.max_data:
+            raise ValueError(f"need 1 <= min_data <= max_data, got "
+                             f"[{self.min_data}, {self.max_data}]")
+        if self.chunk_size < 1:
+            raise ValueError(f"chunk_size {self.chunk_size} < 1")
+        steps = [e.step for e in self.churn]
+        if steps != sorted(steps) or len(set(steps)) != len(steps):
+            raise ValueError("churn events must be strictly step-sorted")
+        n = self.n_clients
+        for ev in self.churn:
+            n += ev.join - ev.leave
+            if self.enabled and n < 1:
+                raise ValueError(
+                    f"churn at step {ev.step} empties the population "
+                    f"({n} clients left); it must stay >= 1")
+
+    @property
+    def enabled(self) -> bool:
+        return self.n_clients > 0
+
+    def clients_at(self, step: int) -> int:
+        """Logical population size in effect at `step`."""
+        n = self.n_clients
+        for ev in self.churn:
+            if ev.step <= step:
+                n += ev.join - ev.leave
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
 class ScenarioSpec:
     """One deterministic failure drill through the production vote path."""
 
@@ -154,6 +252,7 @@ class ScenarioSpec:
     codec: str = "sign1bit"             # gradient codec (DESIGN.md §8)
     plan: PlanSpec = PlanSpec()         # bucketed wire schedule (§9)
     delayed_vote: bool = False          # apply step t's vote at t+1 (§11)
+    population: PopulationSpec = PopulationSpec()   # federated axis (§12)
 
     def __post_init__(self):
         if self.strategy == VoteStrategy.AUTO:
@@ -203,6 +302,42 @@ class ScenarioSpec:
         steps = [e.step for e in self.elastic]
         if steps != sorted(steps) or len(set(steps)) != len(steps):
             raise ValueError("elastic events must be strictly step-sorted")
+        if self.population.enabled:
+            # the federated axis runs the streamed population engine
+            # (core.population) — every incompatible knob is rejected
+            # here, with the reason, instead of failing deep in the run
+            if self.strategy == VoteStrategy.HIERARCHICAL:
+                raise ValueError(
+                    f"{self.name!r}: hierarchical's reduce-scatter wire "
+                    "pads to PACK*M words — an O(M) layout the streamed "
+                    "population engine exists to avoid; use psum_int8 "
+                    "or allgather_1bit")
+            if self.plan.enabled:
+                raise ValueError(
+                    f"{self.name!r}: the plan axis bucketizes a dense "
+                    "stacked buffer; population mode streams the flat "
+                    "buffer whole (set bucket_bytes=0)")
+            if self.elastic:
+                raise ValueError(
+                    f"{self.name!r}: population mode replaces elastic "
+                    "events with ChurnEvent deltas "
+                    "(PopulationSpec.churn)")
+            if self.momentum > 0:
+                raise ValueError(
+                    f"{self.name!r}: per-client momentum is O(population "
+                    "x dim) state the streamed engine exists to avoid; "
+                    "population drills run momentum=0 (pure signSGD)")
+            if self.straggler_fraction > 0:
+                raise ValueError(
+                    f"{self.name!r}: stale-vote substitution needs an "
+                    "O(population x dim) prev-signs buffer; in federated "
+                    "mode partial participation IS the straggler model "
+                    "(sample_fraction < 1)")
+            if c.worker_state:
+                raise ValueError(
+                    f"{self.name!r}: codec {self.codec!r} keeps an "
+                    "O(population x dim) per-client residual; population "
+                    "drills need a worker-stateless codec")
 
     # ---- derived ----
 
@@ -263,6 +398,10 @@ class ScenarioSpec:
         d = dataclasses.asdict(self)
         d["strategy"] = self.strategy.value
         d["elastic"] = [dataclasses.asdict(e) for e in self.elastic]
+        d["population"] = {
+            **dataclasses.asdict(self.population),
+            "churn": [dataclasses.asdict(e)
+                      for e in self.population.churn]}
         return d
 
     @classmethod
@@ -284,6 +423,12 @@ class ScenarioSpec:
             p["leaves"] = tuple(
                 (str(n), int(ln)) for n, ln in p.get("leaves", ()))
             d["plan"] = PlanSpec(**p)
+        if "population" in d and isinstance(d["population"], dict):
+            p = dict(d["population"])
+            p["churn"] = tuple(
+                e if isinstance(e, ChurnEvent) else ChurnEvent(**e)
+                for e in p.get("churn", ()))
+            d["population"] = PopulationSpec(**p)
         return cls(**d)
 
 

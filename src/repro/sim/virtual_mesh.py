@@ -94,11 +94,14 @@ class VirtualVoteEngine:
                                           self.byz, step, self.salt)
 
     def _request(self, values, prev=None, n_stale: int = 0, step=None):
+        # n_stale passes through unchanged: requesting stale substitution
+        # without prev signs is a caller error, and VoteRequest's
+        # build-time validation raises the actionable message (the shim
+        # used to zero n_stale silently, dropping a requested failure)
         return va.VoteRequest(
             payload=values, form="stacked", strategy=self.strategy,
             codec=self.codec,
-            failures=va.FailureSpec(
-                n_stale=n_stale if prev is not None else 0, byz=self.byz),
+            failures=va.FailureSpec(n_stale=n_stale, byz=self.byz),
             prev=prev, step=step, salt=self.salt)
 
     def vote(self, values: jax.Array,
@@ -112,8 +115,12 @@ class VirtualVoteEngine:
                            n_stale: int = 0,
                            step: Optional[jax.Array] = None
                            ) -> Tuple[jax.Array, jax.Array]:
-        """One aggregation under failures; returns (vote, effective signs)
-        so trace capture sees exactly what went on the wire."""
-        signs = self.effective_signs(values, prev_signs, n_stale, step)
-        return va.VirtualBackend().execute(
-            self._request(values, prev_signs, n_stale, step)).votes, signs
+        """One aggregation under failures; returns (vote, effective
+        signs). The signs come back through ``VoteOutcome.wire_signs`` —
+        the tensor ``execute()`` itself put on the wire — so trace
+        capture observes exactly what was voted instead of recomputing
+        the failure composition (and re-drawing the adversary PRNG) a
+        second time outside the backend."""
+        out = va.VirtualBackend().execute(
+            self._request(values, prev_signs, n_stale, step))
+        return out.votes, out.wire_signs

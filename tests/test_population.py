@@ -1,0 +1,495 @@
+"""The streamed population engine + the federated scenario axis
+(DESIGN.md §12):
+
+* ``streamed_vote`` is bit-identical to the dense stacked path — votes
+  AND server state — across codec x strategy, the M ladder up to the
+  1024 acceptance bar, ragged chunk boundaries, sampled voter ids,
+  dataset weights, stale substitution and every adversary mode (the
+  exactness-by-integers argument of core/population.py, asserted);
+* ``count_for_fraction`` is exact rational arithmetic (the federated-
+  scale boundary case the old float product got one replica wrong);
+* the ``VirtualVoteEngine`` shim no longer zeroes a requested
+  ``n_stale`` silently, and its ``vote_with_failures`` surfaces the
+  wire signs through ``VoteOutcome.wire_signs`` instead of recomputing
+  the failure composition;
+* ``PopulationSpec``/``ChurnEvent`` validation, JSON roundtrip, and the
+  ScenarioRunner population drills: chunk-size digest invariance,
+  churn-driven state refits, and the actionable rejection of every
+  incompatible knob.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ByzantineConfig, VoteStrategy
+from repro.core import codecs as codecs_mod
+from repro.core import population
+from repro.core import vote_api as va
+from repro.distributed.fault_tolerance import count_for_fraction
+from repro.sim import (AdversarySpec, ChurnEvent, ElasticEvent, PlanSpec,
+                       PopulationSpec, ScenarioRunner, ScenarioSpec,
+                       VirtualVoteEngine)
+
+
+# ---------------------------------------------------------------------------
+# count_for_fraction: exact integers at federated scale
+# ---------------------------------------------------------------------------
+
+
+def test_count_for_fraction_half_up_boundary():
+    # the §7 tie regime: 0.5 of 16 is EXACTLY 8 adversaries
+    assert count_for_fraction(0.5, 16) == 8
+    assert count_for_fraction(0.5, 15) == 8          # 7.5 rounds half-up
+    assert count_for_fraction(0.0, 10 ** 6) == 0
+    assert count_for_fraction(1.0, 10 ** 6) == 10 ** 6
+
+
+def test_count_for_fraction_is_exact_at_scale():
+    # float 0.1 is slightly ABOVE 1/10; at n=10^17 the true product is
+    # 10^16 + 0.55..., so the half-up count is 10^16 + 1. A float
+    # product (int(f * n + 0.5)) loses that — the rational path keeps it
+    assert count_for_fraction(0.1, 10 ** 17) == 10 ** 16 + 1
+    # representable fractions stay exact however large n grows
+    for k in (3, 6, 9, 12):
+        assert count_for_fraction(0.25, 4 * 10 ** k) == 10 ** k
+    assert count_for_fraction(0.3, 10) == 3
+
+
+def test_count_for_fraction_rejects_out_of_range():
+    with pytest.raises(ValueError):
+        count_for_fraction(-0.1, 8)
+    with pytest.raises(ValueError):
+        count_for_fraction(1.5, 8)
+
+
+# ---------------------------------------------------------------------------
+# the VirtualVoteEngine shim: no silent n_stale drop; wire_signs surfaced
+# ---------------------------------------------------------------------------
+
+
+def test_engine_rejects_stale_request_without_prev():
+    # the shim used to zero n_stale when prev was None, silently
+    # dropping a requested failure; now the build-time validation raises
+    eng = VirtualVoteEngine(strategy=VoteStrategy.PSUM_INT8)
+    vals = jnp.asarray(np.random.default_rng(0).normal(
+        size=(4, 16)).astype(np.float32))
+    with pytest.raises(ValueError, match="prev"):
+        eng.vote_with_failures(vals, None, n_stale=2, step=jnp.int32(0))
+
+
+def test_vote_with_failures_returns_the_wire_signs():
+    rng = np.random.default_rng(1)
+    vals = jnp.asarray(rng.normal(size=(6, 24)).astype(np.float32))
+    prev = jnp.asarray(rng.integers(-1, 2, size=(6, 24)).astype(np.int8))
+    eng = VirtualVoteEngine(
+        strategy=VoteStrategy.ALLGATHER_1BIT,
+        byz=ByzantineConfig(mode="sign_flip", num_adversaries=2, seed=3),
+        salt=7)
+    vote, signs = eng.vote_with_failures(vals, prev, n_stale=1,
+                                         step=jnp.int32(4))
+    # the outcome's signs ARE the effective composition (stale
+    # substitution -> adversary) — not a re-derivation with fresh PRNG
+    np.testing.assert_array_equal(
+        np.asarray(signs),
+        np.asarray(eng.effective_signs(vals, prev, 1, jnp.int32(4))))
+    assert np.asarray(vote).shape == (24,)
+
+
+# ---------------------------------------------------------------------------
+# streamed == dense (the §12 bit-identity bar)
+# ---------------------------------------------------------------------------
+
+_CELLS = [
+    (VoteStrategy.PSUM_INT8, "sign1bit"),
+    (VoteStrategy.PSUM_INT8, "ternary2bit"),
+    (VoteStrategy.ALLGATHER_1BIT, "sign1bit"),
+    (VoteStrategy.ALLGATHER_1BIT, "ternary2bit"),
+    (VoteStrategy.ALLGATHER_1BIT, "ef_sign"),
+    (VoteStrategy.ALLGATHER_1BIT, "weighted_vote"),
+]
+
+
+def _dense_vs_streamed(m, n, strategy, codec, *, chunk, ids=None,
+                       weights=None, n_stale=0, byz=None, seed=0):
+    """Execute the same voters through the dense stacked path and the
+    streamed engine; assert votes and server state bit-identical."""
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    prev_arr = (jnp.asarray(rng.integers(-1, 2, size=(m, n))
+                            .astype(np.int8)) if n_stale else None)
+    pop = int(ids[-1]) + 1 if ids is not None else m
+    state = (codecs_mod.get_codec(codec).init_server_state(pop)
+             if codecs_mod.get_codec(codec).server_state else None)
+    dense = va.VirtualBackend().execute(va.VoteRequest(
+        payload=vals, form="stacked", strategy=strategy, codec=codec,
+        voter_ids=ids, weights=weights,
+        failures=va.FailureSpec(n_stale=n_stale, byz=byz), prev=prev_arr,
+        step=jnp.int32(2), salt=5, server_state=state))
+    stream = va.PopulationStream(
+        n_voters=m, n_coords=n, ids=ids, weights=weights,
+        values=lambda want, _v=vals, _i=jnp.asarray(
+            ids if ids is not None else np.arange(m)):
+            _v[jnp.searchsorted(_i, want)],
+        prev=(None if prev_arr is None else
+              lambda want, _p=prev_arr, _i=jnp.asarray(
+                  ids if ids is not None else np.arange(m)):
+              _p[jnp.searchsorted(_i, want)]))
+    streamed = va.VirtualBackend(chunk_size=chunk).execute(va.VoteRequest(
+        payload=stream, form="streamed", strategy=strategy, codec=codec,
+        failures=va.FailureSpec(n_stale=n_stale, byz=byz),
+        step=jnp.int32(2), salt=5, server_state=state))
+    np.testing.assert_array_equal(np.asarray(dense.votes),
+                                  np.asarray(streamed.votes))
+    assert set(dense.server_state) == set(streamed.server_state)
+    for k in dense.server_state:
+        np.testing.assert_array_equal(
+            np.asarray(dense.server_state[k]),
+            np.asarray(streamed.server_state[k]))
+    return streamed
+
+
+@pytest.mark.parametrize("strategy,codec", _CELLS)
+def test_streamed_matches_dense_across_codecs(strategy, codec):
+    # full participation, a ragged chunk (33 = 4x7 + 5), sign-flippers.
+    # weighted_vote pins ids=arange: its dense twin is the ANNOTATED
+    # stacked path (one-chunk population engine) — the legacy stacked
+    # decode runs the EMA update inside jit, where XLA may fuse the
+    # float expression 1 ulp away from the eager evaluation; votes are
+    # exact either way, so the un-annotated form is asserted votes-only
+    # below
+    ids = np.arange(33) if codec == "weighted_vote" else None
+    _dense_vs_streamed(
+        33, 40, strategy, codec, chunk=7, ids=ids,
+        byz=ByzantineConfig(mode="sign_flip", num_adversaries=5, seed=2))
+
+
+def test_streamed_matches_legacy_weighted_votes_exactly():
+    # the un-annotated legacy stacked decode: votes must still be
+    # bit-identical (the integer wire tally); only the float EMA state
+    # is allowed its known jit-vs-eager ulp (see above)
+    m, n = 33, 40
+    rng = np.random.default_rng(2)
+    vals = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    state = codecs_mod.get_codec("weighted_vote").init_server_state(m)
+    dense = va.VirtualBackend().execute(va.VoteRequest(
+        payload=vals, form="stacked",
+        strategy=VoteStrategy.ALLGATHER_1BIT, codec="weighted_vote",
+        server_state=state))
+    stream = va.PopulationStream(
+        n_voters=m, n_coords=n, values=lambda ids, _v=vals: _v[ids])
+    streamed = va.VirtualBackend(chunk_size=7).execute(va.VoteRequest(
+        payload=stream, form="streamed",
+        strategy=VoteStrategy.ALLGATHER_1BIT, codec="weighted_vote",
+        server_state=state))
+    np.testing.assert_array_equal(np.asarray(dense.votes),
+                                  np.asarray(streamed.votes))
+    np.testing.assert_allclose(
+        np.asarray(dense.server_state["flip_ema"]),
+        np.asarray(streamed.server_state["flip_ema"]), rtol=1e-6)
+
+
+@pytest.mark.parametrize("m", [1, 2, 7, 33, 128, 1024])
+def test_streamed_matches_dense_up_the_m_ladder(m):
+    # the acceptance bar: bit-identical at every M <= 1024 (fixed
+    # adversary count so the jitted chunk stage compiles per shape only)
+    byz = (ByzantineConfig(mode="colluding", num_adversaries=1, seed=4)
+           if m > 1 else None)
+    _dense_vs_streamed(m, 24, VoteStrategy.ALLGATHER_1BIT, "sign1bit",
+                       chunk=13, byz=byz, seed=m)
+
+
+def test_streamed_matches_dense_with_sampled_ids_and_weights():
+    # a client-sampled round with dataset weights: logical ids drive the
+    # adversary PRNG, weights multiply the votes — dense annotated twin
+    m, n = 29, 31
+    rng = np.random.default_rng(9)
+    ids = np.sort(rng.choice(200, size=m, replace=False)).astype(np.int32)
+    w = rng.integers(1, 50, size=m).astype(np.int32)
+    for strategy, codec in [(VoteStrategy.PSUM_INT8, "sign1bit"),
+                            (VoteStrategy.ALLGATHER_1BIT, "sign1bit"),
+                            (VoteStrategy.ALLGATHER_1BIT,
+                             "weighted_vote")]:
+        _dense_vs_streamed(
+            m, n, strategy, codec, chunk=6, ids=ids, weights=w,
+            byz=ByzantineConfig(mode="blind", num_adversaries=40, seed=8,
+                                flip_prob=0.7))
+
+
+def test_streamed_matches_dense_under_stale_substitution():
+    _dense_vs_streamed(
+        17, 20, VoteStrategy.PSUM_INT8, "sign1bit", chunk=4, n_stale=3,
+        byz=ByzantineConfig(mode="zero", num_adversaries=2, seed=1))
+
+
+def test_streamed_is_chunk_size_invariant():
+    # integer partial sums commute and associate exactly: every chunking
+    # of the same stream lands on the same bits
+    m, n = 65, 48
+    rng = np.random.default_rng(3)
+    vals = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    stream = va.PopulationStream(
+        n_voters=m, n_coords=n, values=lambda ids, _v=vals: _v[ids])
+    outs = []
+    for chunk in (1, 9, 64, 65, 1000):
+        v, _, margin = population.streamed_vote(
+            stream, strategy=VoteStrategy.ALLGATHER_1BIT,
+            codec="sign1bit", chunk_size=chunk)
+        outs.append((np.asarray(v), margin))
+    for v, margin in outs[1:]:
+        np.testing.assert_array_equal(outs[0][0], v)
+        assert margin == outs[0][1]
+
+
+def test_streamed_stats_accounting():
+    m, chunk = 50, 8
+    vals = jnp.asarray(np.random.default_rng(0).normal(
+        size=(m, 16)).astype(np.float32))
+    stream = va.PopulationStream(
+        n_voters=m, n_coords=16, values=lambda ids, _v=vals: _v[ids])
+    population.streamed_vote(stream, strategy=VoteStrategy.PSUM_INT8,
+                             codec="sign1bit", chunk_size=chunk)
+    stats = dict(population.LAST_STATS)
+    assert stats["n_voters"] == m
+    assert stats["peak_rows"] <= chunk
+    assert stats["n_chunks"] == -(-m // chunk)
+    assert stats["n_passes"] == 1
+    # the weighted_vote codec walks the stream twice (vote, then the
+    # flip-rate observation against the final vote)
+    state = codecs_mod.get_codec("weighted_vote").init_server_state(m)
+    population.streamed_vote(stream,
+                             strategy=VoteStrategy.ALLGATHER_1BIT,
+                             codec="weighted_vote", chunk_size=chunk,
+                             server_state=state)
+    assert population.LAST_STATS["n_passes"] == 2
+    assert population.LAST_STATS["peak_rows"] <= chunk
+
+
+# ---------------------------------------------------------------------------
+# engine + stream + request validation
+# ---------------------------------------------------------------------------
+
+
+def _tiny_stream(m=4, n=8, **kw):
+    vals = jnp.ones((m, n), jnp.float32)
+    return va.PopulationStream(n_voters=m, n_coords=n,
+                               values=lambda ids, _v=vals: _v[ids], **kw)
+
+
+def test_streamed_engine_rejects_hierarchical_and_bad_chunk():
+    with pytest.raises(ValueError, match="[Hh]ierarchical"):
+        population.streamed_vote(_tiny_stream(),
+                                 strategy=VoteStrategy.HIERARCHICAL,
+                                 codec="sign1bit")
+    with pytest.raises(ValueError, match="chunk_size"):
+        population.streamed_vote(_tiny_stream(),
+                                 strategy=VoteStrategy.PSUM_INT8,
+                                 codec="sign1bit", chunk_size=0)
+
+
+def test_streamed_engine_guards_int32_partial_overflow():
+    big_w = np.full(4, 2 ** 20, dtype=np.int64)
+    with pytest.raises(ValueError, match="int32"):
+        population.streamed_vote(
+            _tiny_stream(weights=big_w),
+            strategy=VoteStrategy.PSUM_INT8, codec="sign1bit",
+            chunk_size=2 ** 12)
+
+
+def test_streamed_engine_demands_population_sized_weighted_state():
+    ids = np.asarray([0, 5, 9, 11], dtype=np.int32)
+    state = codecs_mod.get_codec("weighted_vote").init_server_state(10)
+    with pytest.raises(ValueError, match="flip_ema"):
+        population.streamed_vote(
+            _tiny_stream(ids=ids),
+            strategy=VoteStrategy.ALLGATHER_1BIT, codec="weighted_vote",
+            chunk_size=2, server_state=state)   # id 11 >= pop 10
+
+
+def test_population_stream_validation():
+    with pytest.raises(ValueError, match="callable"):
+        va.PopulationStream(n_voters=4, n_coords=8,
+                            values=np.zeros((4, 8)))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        _tiny_stream(ids=np.asarray([3, 1, 2, 0], dtype=np.int32))
+    with pytest.raises(ValueError, match="shape"):
+        _tiny_stream(ids=np.arange(5, dtype=np.int32))
+    with pytest.raises(ValueError, match=">= 1"):
+        _tiny_stream(weights=np.asarray([1, 0, 2, 3], dtype=np.int32))
+
+
+def test_streamed_request_validation():
+    stream = _tiny_stream()
+    with pytest.raises(ValueError, match="PopulationStream"):
+        va.VoteRequest(payload=jnp.ones((4, 8)), form="streamed")
+    with pytest.raises(ValueError, match="prev"):
+        # stale substitution needs a prev chunk producer ON the stream
+        va.VoteRequest(payload=stream, form="streamed",
+                       strategy=VoteStrategy.PSUM_INT8,
+                       failures=va.FailureSpec(n_stale=1))
+    with pytest.raises(ValueError, match="PopulationStream"):
+        va.VoteRequest(payload=stream, form="streamed",
+                       voter_ids=np.arange(4))
+    with pytest.raises(ValueError, match="MeshBackend|mesh"):
+        va.MeshBackend().execute(va.VoteRequest(
+            payload=stream, form="streamed",
+            strategy=VoteStrategy.PSUM_INT8))
+
+
+# ---------------------------------------------------------------------------
+# PopulationSpec / ChurnEvent (spec layer)
+# ---------------------------------------------------------------------------
+
+
+def test_churn_event_validation():
+    with pytest.raises(ValueError, match="step >= 1"):
+        ChurnEvent(0, join=4)
+    with pytest.raises(ValueError, match="neither"):
+        ChurnEvent(3)
+    ev = ChurnEvent(3, join=2, leave=1, note="ok")
+    assert (ev.join, ev.leave) == (2, 1)
+
+
+def test_population_spec_validation_and_clients_at():
+    with pytest.raises(ValueError, match="n_clients > 0"):
+        PopulationSpec(sample_fraction=0.5)      # axes without a pop
+    with pytest.raises(ValueError, match="sample_fraction"):
+        PopulationSpec(n_clients=10, sample_fraction=0.0)
+    with pytest.raises(ValueError, match="weighting"):
+        PopulationSpec(n_clients=10, weighting="loss")
+    with pytest.raises(ValueError, match="min_data"):
+        PopulationSpec(n_clients=10, min_data=5, max_data=2)
+    with pytest.raises(ValueError, match="step-sorted"):
+        PopulationSpec(n_clients=10,
+                       churn=(ChurnEvent(4, join=1), ChurnEvent(2, join=1)))
+    with pytest.raises(ValueError, match="empties"):
+        PopulationSpec(n_clients=10, churn=(ChurnEvent(2, leave=10),))
+    p = PopulationSpec(n_clients=10, churn=(ChurnEvent(2, leave=4),
+                                            ChurnEvent(5, join=7)))
+    assert [p.clients_at(s) for s in (0, 1, 2, 4, 5, 99)] == \
+        [10, 10, 6, 6, 13, 13]
+
+
+def test_population_spec_json_roundtrip():
+    spec = ScenarioSpec(
+        "pop/roundtrip", n_steps=2, dim=16, momentum=0.0,
+        strategy=VoteStrategy.PSUM_INT8,
+        adversary=AdversarySpec("sign_flip", 0.1),
+        population=PopulationSpec(
+            n_clients=40, sample_fraction=0.5, weighting="dataset",
+            max_data=9, churn=(ChurnEvent(1, join=5, note="j"),),
+            chunk_size=8))
+    back = ScenarioSpec.from_dict(spec.to_dict())
+    assert back == spec
+    assert isinstance(back.population.churn[0], ChurnEvent)
+
+
+@pytest.mark.parametrize("kw,msg", [
+    (dict(strategy=VoteStrategy.HIERARCHICAL), "hierarchical"),
+    (dict(plan=PlanSpec(bucket_bytes=8)), "plan"),
+    (dict(elastic=(ElasticEvent(1, 4),)), "ChurnEvent"),
+    (dict(momentum=0.9), "momentum"),
+    (dict(straggler_fraction=0.25), "straggler|participation"),
+    (dict(codec="ef_sign"), "worker-stateless"),
+])
+def test_population_spec_rejects_incompatible_knobs(kw, msg):
+    base = dict(n_steps=2, dim=16, momentum=0.0,
+                strategy=VoteStrategy.ALLGATHER_1BIT,
+                population=PopulationSpec(n_clients=20))
+    base.update(kw)
+    with pytest.raises(ValueError, match=msg):
+        ScenarioSpec("pop/bad", **base)
+
+
+def test_population_mode_is_virtual_backend_only():
+    spec = ScenarioSpec("pop/mesh", n_steps=1, dim=8, momentum=0.0,
+                        strategy=VoteStrategy.PSUM_INT8,
+                        population=PopulationSpec(n_clients=12))
+    with pytest.raises(ValueError, match="virtual"):
+        ScenarioRunner(spec, backend="mesh")
+
+
+# ---------------------------------------------------------------------------
+# ScenarioRunner population drills
+# ---------------------------------------------------------------------------
+
+
+def _pop_spec(**kw):
+    pop_kw = dict(n_clients=30, sample_fraction=0.4, chunk_size=5)
+    pop_kw.update(kw.pop("population", {}))
+    base = dict(n_steps=3, dim=24, momentum=0.0,
+                strategy=VoteStrategy.ALLGATHER_1BIT,
+                adversary=AdversarySpec("sign_flip", 0.2),
+                population=PopulationSpec(**pop_kw))
+    base.update(kw)
+    return ScenarioSpec(kw.get("name", "pop/drill"), **{
+        k: v for k, v in base.items() if k != "name"})
+
+
+def test_population_drill_runs_and_traces():
+    tr = ScenarioRunner(_pop_spec()).run()
+    assert len(tr.steps) == 3
+    for s in tr.steps:
+        assert s.n_population == 30
+        assert s.n_workers == count_for_fraction(0.4, 30)
+        # adversaries counted over the LOGICAL population
+        assert s.n_adversaries == count_for_fraction(0.2, 30)
+        assert 0.0 <= s.flip_fraction <= 1.0
+    assert population.LAST_STATS["peak_rows"] <= 5
+
+
+def test_population_drill_is_chunk_size_invariant():
+    spec = _pop_spec(population=dict(weighting="dataset", max_data=20))
+    d1 = ScenarioRunner(spec).run().digest
+    respec = dataclasses.replace(
+        spec, population=dataclasses.replace(spec.population,
+                                             chunk_size=30))
+    assert ScenarioRunner(respec).run().digest == d1
+
+
+def test_population_drill_churn_refits_state():
+    # weighted_vote keeps a (pop,) flip-rate EMA; churn must refit it by
+    # the §6 leading-axis rule (truncate leavers, pad joiners) mid-run
+    spec = _pop_spec(
+        codec="weighted_vote",
+        population=dict(n_clients=24, sample_fraction=0.5,
+                        churn=(ChurnEvent(1, leave=8, note="drop"),
+                               ChurnEvent(2, join=10, note="rejoin")),
+                        chunk_size=4))
+    tr = ScenarioRunner(spec).run()
+    assert [s.n_population for s in tr.steps] == [24, 16, 26]
+    # sampled voter count follows the current population
+    assert [s.n_workers for s in tr.steps] == \
+        [count_for_fraction(0.5, p) for p in (24, 16, 26)]
+    # and the run stays chunk-size invariant THROUGH the churn refits
+    respec = dataclasses.replace(
+        spec, population=dataclasses.replace(spec.population,
+                                             chunk_size=26))
+    assert ScenarioRunner(respec).run().digest == tr.digest
+
+
+def test_population_sampling_is_step_keyed_and_stable():
+    from repro.sim.runner import _sample_ids
+    spec = _pop_spec()
+    a = _sample_ids(spec, 3, 30, 10)
+    b = _sample_ids(spec, 3, 30, 10)
+    c = _sample_ids(spec, 4, 30, 10)
+    np.testing.assert_array_equal(a, b)          # deterministic replay
+    assert not np.array_equal(a, c)              # fresh draw per step
+    assert a.size == 10 and np.all(np.diff(a) > 0)
+    np.testing.assert_array_equal(_sample_ids(spec, 0, 6, 9),
+                                  np.arange(6))  # k >= pop: everyone
+
+
+def test_client_sizes_follow_the_logical_id():
+    from repro.sim.runner import _client_sizes
+    spec = _pop_spec(population=dict(weighting="dataset", min_data=2,
+                                     max_data=11))
+    ids = np.asarray([1, 4, 17, 29], dtype=np.int32)
+    sizes = _client_sizes(spec, ids)
+    assert sizes.min() >= 2 and sizes.max() <= 11
+    # a client keeps its size whatever batch it is queried in
+    np.testing.assert_array_equal(
+        sizes[2:], _client_sizes(spec, ids[2:]))

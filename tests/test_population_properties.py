@@ -1,0 +1,153 @@
+"""Property-based tests (hypothesis) for the streamed population engine
+(DESIGN.md §12): a randomly composed population vote — voter count,
+coordinate count, chunk size, sampled ids, dataset weights, adversary
+mode/count, codec x strategy cell — either fails validation at BUILD
+time with ValueError on BOTH forms, or executes on the dense stacked
+path and the streamed engine with bit-identical votes (and, when routed
+through the shared annotated implementation, bit-identical state). The
+exactness-by-integers chunking argument, fuzzed.
+
+``hypothesis`` is optional: without it this module skips; the
+deterministic twins below the property test always run (tier-1).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ByzantineConfig, VoteStrategy
+from repro.core import codecs as codecs_mod
+from repro.core import vote_api as va
+
+#: the streamed engine's realisable cells (hierarchical is rejected at
+#: build time — its wire layout is O(M); asserted in test_population.py)
+CELLS = [
+    (VoteStrategy.PSUM_INT8, "sign1bit"),
+    (VoteStrategy.PSUM_INT8, "ternary2bit"),
+    (VoteStrategy.ALLGATHER_1BIT, "sign1bit"),
+    (VoteStrategy.ALLGATHER_1BIT, "ternary2bit"),
+    (VoteStrategy.ALLGATHER_1BIT, "weighted_vote"),
+]
+MODES = ["none", "sign_flip", "random", "zero", "colluding", "blind"]
+
+
+def _check_pair(m, n, chunk, cell_i, mode, n_adv, sampled, weighted,
+                seed):
+    """Build the dense annotated request and its streamed twin from the
+    same raw draws; both must validate identically, and when they
+    execute, agree bit for bit (votes AND server state — both routes
+    share the population engine, so state is exact)."""
+    strategy, codec = CELLS[cell_i]
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    ids = (np.sort(rng.choice(4 * m, size=m, replace=False)
+                   ).astype(np.int32) if sampled else
+           np.arange(m, dtype=np.int32))
+    w = (rng.integers(1, 100, size=m).astype(np.int32) if weighted
+         else None)
+    byz = (ByzantineConfig(mode=mode, num_adversaries=min(n_adv, m),
+                           seed=1) if mode != "none" else None)
+    pop = int(ids[-1]) + 1
+    state = (codecs_mod.get_codec(codec).init_server_state(pop)
+             if codec == "weighted_vote" else None)
+
+    def build_dense():
+        return va.VoteRequest(
+            payload=vals, form="stacked", strategy=strategy, codec=codec,
+            voter_ids=ids, weights=w, failures=va.FailureSpec(byz=byz),
+            step=jnp.int32(5), salt=seed % 7, server_state=state)
+
+    def build_streamed():
+        stream = va.PopulationStream(
+            n_voters=m, n_coords=n, ids=ids, weights=w,
+            values=lambda want, _v=vals, _i=jnp.asarray(ids):
+                _v[jnp.searchsorted(_i, want)])
+        return va.VoteRequest(
+            payload=stream, form="streamed", strategy=strategy,
+            codec=codec, failures=va.FailureSpec(byz=byz),
+            step=jnp.int32(5), salt=seed % 7, server_state=state)
+
+    try:
+        dense_req = build_dense()
+    except ValueError:
+        # invalid draws reject on BOTH forms — neither backend consulted
+        with pytest.raises(ValueError):
+            build_streamed()
+        return "rejected"
+    dense = va.VirtualBackend().execute(dense_req)
+    streamed = va.VirtualBackend(chunk_size=chunk).execute(
+        build_streamed())
+    np.testing.assert_array_equal(np.asarray(dense.votes),
+                                  np.asarray(streamed.votes))
+    assert set(dense.server_state) == set(streamed.server_state)
+    for k in dense.server_state:
+        np.testing.assert_array_equal(
+            np.asarray(dense.server_state[k]),
+            np.asarray(streamed.server_state[k]))
+    votes = np.asarray(streamed.votes)
+    assert votes.shape == (n,) and votes.dtype == np.int8
+    assert set(np.unique(votes)) <= {-1, 0, 1}
+    return "executed"
+
+
+# ---------------------------------------------------------------------------
+# deterministic twins (always run; every cell, both outcomes, ragged and
+# degenerate chunkings)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cell", [
+    # m, n, chunk, cell_i, mode, n_adv, sampled, weighted, seed
+    (1, 16, 1, 0, "none", 0, False, False, 0),
+    (9, 33, 4, 1, "sign_flip", 3, True, False, 1),
+    (17, 24, 5, 2, "colluding", 6, True, True, 2),
+    (33, 40, 33, 3, "blind", 8, False, True, 3),
+    (26, 31, 7, 4, "random", 4, True, True, 4),
+    (12, 20, 100, 4, "zero", 2, False, False, 5),
+])
+def test_twins_deterministic(cell):
+    assert _check_pair(*cell) == "executed"
+
+
+def test_twins_deterministic_rejection():
+    # weighted_vote cannot ride the integer-count psum wire: both the
+    # dense annotated form and the streamed form reject at build time
+    vals = jnp.ones((8, 16), jnp.float32)
+    state = codecs_mod.get_codec("weighted_vote").init_server_state(8)
+    with pytest.raises(ValueError):
+        va.VoteRequest(payload=vals, form="stacked",
+                       strategy=VoteStrategy.PSUM_INT8,
+                       codec="weighted_vote",
+                       voter_ids=np.arange(8), server_state=state)
+    stream = va.PopulationStream(
+        n_voters=8, n_coords=16, values=lambda ids, _v=vals: _v[ids])
+    with pytest.raises(ValueError):
+        va.VoteRequest(payload=stream, form="streamed",
+                       strategy=VoteStrategy.PSUM_INT8,
+                       codec="weighted_vote", server_state=state)
+
+
+# ---------------------------------------------------------------------------
+# the hypothesis sweep (guarded import so the twins above ALWAYS run)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
+
+
+if given is not None:
+    @given(st.integers(1, 40), st.integers(1, 48), st.integers(1, 50),
+           st.integers(0, len(CELLS) - 1), st.sampled_from(MODES),
+           st.integers(0, 6), st.booleans(), st.booleans(),
+           st.integers(0, 5))
+    @settings(max_examples=25, deadline=None)
+    def test_random_population_votes_match_dense(
+            m, n, chunk, cell_i, mode, n_adv, sampled, weighted, seed):
+        _check_pair(m, n, chunk, cell_i, mode, n_adv, sampled, weighted,
+                    seed)
+else:
+    @pytest.mark.skip(reason="property sweep needs hypothesis; the "
+                      "deterministic twins above cover the invariant")
+    def test_random_population_votes_match_dense():
+        pass
