@@ -206,15 +206,21 @@ def smoke() -> int:
 
 
 def main() -> None:
+    from repro.obs import recorder as obs
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast correctness+accounting pass for CI")
+    obs.add_trace_arg(ap)
     args = ap.parse_args()
+    rec = obs.activate_trace(args)
     if args.smoke:
-        sys.exit(1 if smoke() else 0)
+        failures = smoke()
+        obs.finish_trace(rec)
+        sys.exit(1 if failures else 0)
     print("name,value,derived")
     for name, value, derived in rows():
         print(f"{name},{value:.6g},{derived}", flush=True)
+    obs.finish_trace(rec)
 
 
 if __name__ == "__main__":

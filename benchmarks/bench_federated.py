@@ -224,14 +224,14 @@ rows = smoke_rows
 
 def emit_json(rs, path: str) -> None:
     """Machine-readable baseline, same ``{"rows": [...]}`` schema as
-    ``benchmarks.run --emit-json`` (gated by scripts/perf_gate.py)."""
-    doc = {"rows": [{"name": n, "value": v, "derived": d}
-                    for n, v, d in rs]}
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=1)
+    ``benchmarks.run --emit-json`` (gated by scripts/perf_gate.py);
+    delegates to :func:`repro.obs.emit_bench_json` (one shared writer)."""
+    from repro.obs import emit_bench_json
+    emit_bench_json(rs, path)
 
 
 def main() -> None:
+    from repro.obs import recorder as obs
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="federated drill sweep + streamed==dense and "
@@ -239,8 +239,10 @@ def main() -> None:
     ap.add_argument("--emit-json", dest="json_out", nargs="?",
                     const=_JSON_DEFAULT, default=None,
                     help=f"write rows as JSON (default {_JSON_DEFAULT})")
+    obs.add_trace_arg(ap)
     args = ap.parse_args()
 
+    rec = obs.activate_trace(args)
     rs = smoke_rows()
     if args.smoke and args.json_out is None:   # CI smoke seeds the JSON
         args.json_out = _JSON_DEFAULT
@@ -250,6 +252,7 @@ def main() -> None:
     if args.json_out:
         emit_json(rs, args.json_out)
         print(f"# wrote {args.json_out}", flush=True)
+    obs.finish_trace(rec)
 
 
 if __name__ == "__main__":

@@ -167,6 +167,8 @@ def main() -> None:
                     help="--scenario-grid backend")
     ap.add_argument("--json", dest="json_out", default=None,
                     help="also dump full per-step traces to this file")
+    from repro.obs import recorder as obs
+    obs.add_trace_arg(ap)
     args = ap.parse_args()
 
     if args.scenario_smoke and args.scenario_grid:
@@ -183,18 +185,22 @@ def main() -> None:
         if "xla_force_host_platform_device_count" not in flags:
             os.environ["XLA_FLAGS"] = (
                 flags + " --xla_force_host_platform_device_count=8").strip()
+        rec = obs.activate_trace(args)
         rs = smoke_rows()
     elif args.scenario_grid:
+        rec = obs.activate_trace(args)
         traces = scenario_traces(args.config, args.backend)
         rs = scenario_rows(traces=traces)
         if args.json_out:
             with open(args.json_out, "w") as f:
                 json.dump([t.to_dict() for t in traces], f, indent=1)
     else:
+        rec = obs.activate_trace(args)
         rs = rows()
     print("name,value,derived")
     for name, value, derived in rs:
         print(f"{name},{value:.6g},{derived}", flush=True)
+    obs.finish_trace(rec)
 
 
 if __name__ == "__main__":

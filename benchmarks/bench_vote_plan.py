@@ -393,15 +393,14 @@ def _mesh_harness_rows(shapes, stacked):
 
 
 def emit_json(rs, path: str) -> None:
-    """Same ``{"rows": [...]}`` schema as ``benchmarks.run --emit-json``,
-    so the committed baseline diffs cleanly row by row."""
-    doc = {"rows": [{"name": n, "value": v, "derived": d}
-                    for n, v, d in rs]}
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=1)
+    """Same ``{"rows": [...]}`` schema as ``benchmarks.run --emit-json``;
+    delegates to :func:`repro.obs.emit_bench_json` (one shared writer)."""
+    from repro.obs import emit_bench_json
+    emit_bench_json(rs, path)
 
 
 def main() -> None:
+    from repro.obs import recorder as obs
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="fast plan sweep + golden/mesh==virtual asserts "
@@ -409,6 +408,7 @@ def main() -> None:
     ap.add_argument("--emit-json", dest="json_out", nargs="?",
                     const=_JSON_DEFAULT, default=None,
                     help=f"write rows as JSON (default {_JSON_DEFAULT})")
+    obs.add_trace_arg(ap)
     args = ap.parse_args()
 
     if args.smoke:
@@ -418,6 +418,8 @@ def main() -> None:
         if "xla_force_host_platform_device_count" not in flags:
             os.environ["XLA_FLAGS"] = (
                 flags + " --xla_force_host_platform_device_count=8").strip()
+    rec = obs.activate_trace(args)
+    if args.smoke:
         rs = smoke_rows()
         if args.json_out is None:        # CI smoke always seeds the JSON
             args.json_out = _JSON_DEFAULT
@@ -429,6 +431,7 @@ def main() -> None:
     if args.json_out:
         emit_json(rs, args.json_out)
         print(f"# wrote {args.json_out}", flush=True)
+    obs.finish_trace(rec)
 
 
 if __name__ == "__main__":

@@ -22,9 +22,10 @@ Run:  PYTHONPATH=src python -m benchmarks.run [--only fig1,fig5]
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import traceback
+
+from repro.obs import recorder as obs
 
 
 def main() -> None:
@@ -38,7 +39,9 @@ def main() -> None:
                          "one-line description) and exit")
     ap.add_argument("--emit-json", dest="json_out", default=None,
                     help="also write the produced rows to this JSON file")
+    obs.add_trace_arg(ap)
     args = ap.parse_args()
+    rec = obs.activate_trace(args)
 
     from benchmarks import (bench_codecs, bench_comm, bench_convergence,
                             bench_federated, bench_noise, bench_robustness,
@@ -66,7 +69,9 @@ def main() -> None:
             continue
         seen_mods.add(id(mod))
         try:
-            for name, value, derived in mod.rows():
+            with obs.get_recorder().span("bench.suite", key=key):
+                suite_rows = mod.rows()
+            for name, value, derived in suite_rows:
                 print(f"{name},{value:.6g},{derived}", flush=True)
                 collected.append({"name": name, "value": value,
                                   "derived": derived})
@@ -79,9 +84,11 @@ def main() -> None:
             collected.append({"name": f"{key}/ERROR", "value": -1.0,
                               "derived": "see stderr"})
     if args.json_out:
-        with open(args.json_out, "w") as f:
-            json.dump({"rows": collected}, f, indent=1)
+        # the ONE shared bench-JSON writer (same schema every bench
+        # emits; gated by scripts/perf_gate.py)
+        obs.emit_bench_json(collected, args.json_out)
         print(f"# wrote {args.json_out}", flush=True)
+    obs.finish_trace(rec)
     sys.exit(1 if failures else 0)
 
 

@@ -15,7 +15,9 @@
 # BENCH_federated.json baseline written, <10 s), and the perf gate
 # (scripts/perf_gate.py: fresh smoke JSONs vs the committed
 # BENCH_*.json baselines — >15% timing regression or any bit-identity
-# row change fails).
+# row change fails), and the obs smoke (telemetry layer end to end:
+# traced scenario -> JSONL -> trace_report, digest bit-identical with
+# tracing on, <2% disabled-recorder overhead).
 #
 #   scripts/ci.sh          # everything
 #   scripts/ci.sh --quick  # skip tests marked slow (the distributed
@@ -83,6 +85,18 @@ python scripts/perf_gate.py \
   --baseline "$PERF_BASE/BENCH_vote_plan.json" --fresh BENCH_vote_plan.json
 python scripts/perf_gate.py \
   --baseline "$PERF_BASE/BENCH_federated.json" --fresh BENCH_federated.json
+
+echo "== obs smoke (telemetry layer: traced drill -> JSONL -> report) =="
+# 5-step traced bucketed-overlap scenario; asserts the golden digest is
+# bit-identical with tracing on, every trace_report section renders,
+# the wire-byte counters moved, and the disabled recorder stays under
+# its 2% overhead budget (DESIGN.md §13)
+OBS_TRACE="$PERF_BASE/obs_smoke_trace.jsonl"
+python scripts/obs_smoke.py --out "$OBS_TRACE"
+python scripts/trace_report.py "$OBS_TRACE" > /dev/null
+# the committed sample must keep rendering (the README's example; also
+# regression-tested by tests/test_obs.py)
+python scripts/trace_report.py benchmarks/traces/sample_trace.jsonl > /dev/null
 
 echo "== api smoke (vote API examples + deprecated-surface check) =="
 # the two VoteRequest-rewritten examples, CI-sized (seconds each), then

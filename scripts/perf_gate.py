@@ -3,8 +3,9 @@
 committed baseline, row by row.
 
 Both files use the ``{"rows": [{"name", "value", "derived"}, ...]}``
-schema that ``benchmarks.run --emit-json`` and the ``--smoke`` lanes
-write. Two row classes, decided by the row NAME:
+schema that ``repro.obs.emit_bench_json`` writes (every bench and the
+``benchmarks.run`` driver route through it). Two row classes, decided
+by the row NAME:
 
 * ``*_ms`` (timing rows): fail when the fresh value regresses past the
   committed value by more than ``--tol`` (default 15%). One-sided —
@@ -17,6 +18,18 @@ write. Two row classes, decided by the row NAME:
 sizes, digest prefixes) and are never compared. Missing or extra rows
 fail in both directions: a silently dropped acceptance row is as bad as
 a regression.
+
+On failure the gate prints the FULL per-row comparison table — every
+row with its baseline value, fresh value, class, threshold and status —
+so a CI log shows the whole picture, not just the first delta.
+
+Exit codes (distinct so CI wiring can tell schema drift from a slow
+host):
+
+* ``0`` — gate passes.
+* ``1`` — a timing regression or an exact-match accounting change.
+* ``2`` — a row is missing or unexpected (schema/coverage drift).
+  Takes precedence when both kinds of failure are present.
 
 Usage (the ci.sh wiring snapshots the committed JSON before the smoke
 lane overwrites it in place):
@@ -31,7 +44,12 @@ from __future__ import annotations
 import argparse
 import json
 import sys
-from typing import Dict
+from typing import Dict, List, Optional
+
+#: gate verdicts: OK < REGRESS/CHANGED (exit 1) < MISSING/EXTRA (exit 2)
+EXIT_OK = 0
+EXIT_REGRESSION = 1
+EXIT_MISSING_ROW = 2
 
 
 def load_rows(path: str) -> Dict[str, float]:
@@ -47,33 +65,93 @@ def load_rows(path: str) -> Dict[str, float]:
     return out
 
 
+def compare(base: Dict[str, float], fresh: Dict[str, float],
+            tol: float) -> List[dict]:
+    """One structured verdict per row (union of both files), sorted by
+    name: ``{"name", "baseline", "fresh", "class", "threshold",
+    "status"}``. Statuses: ``OK``, ``IMPROVED`` (timing got faster),
+    ``REGRESS`` (timing past tolerance), ``CHANGED`` (exact row moved),
+    ``MISSING`` (row disappeared), ``EXTRA`` (unblessed new row)."""
+    out = []
+    for name in sorted(set(base) | set(fresh)):
+        b: Optional[float] = base.get(name)
+        f: Optional[float] = fresh.get(name)
+        timing = name.endswith("_ms")
+        row = {"name": name, "baseline": b, "fresh": f,
+               "class": "timing" if timing else "exact",
+               "threshold": f"+{tol * 100:.0f}%" if timing else "=="}
+        if b is None:
+            row["status"] = "EXTRA"
+        elif f is None:
+            row["status"] = "MISSING"
+        elif timing:
+            if f > b * (1.0 + tol):
+                row["status"] = "REGRESS"
+            elif f < b:
+                row["status"] = "IMPROVED"
+            else:
+                row["status"] = "OK"
+        else:
+            row["status"] = "OK" if f == b else "CHANGED"
+        out.append(row)
+    return out
+
+
+def verdict_exit_code(rows: List[dict]) -> int:
+    """Exit code for a :func:`compare` table. MISSING/EXTRA (coverage
+    drift, exit 2) takes precedence over REGRESS/CHANGED (exit 1)."""
+    statuses = {r["status"] for r in rows}
+    if statuses & {"MISSING", "EXTRA"}:
+        return EXIT_MISSING_ROW
+    if statuses & {"REGRESS", "CHANGED"}:
+        return EXIT_REGRESSION
+    return EXIT_OK
+
+
+def _fmt(v: Optional[float]) -> str:
+    return "-" if v is None else f"{v:.6g}"
+
+
+def render_table(rows: List[dict]) -> str:
+    """The full comparison table (printed whole on any failure)."""
+    head = ("name", "baseline", "fresh", "class", "threshold", "status")
+    body = [(r["name"], _fmt(r["baseline"]), _fmt(r["fresh"]),
+             r["class"], r["threshold"], r["status"]) for r in rows]
+    widths = [max(len(head[i]), *(len(b[i]) for b in body)) if body
+              else len(head[i]) for i in range(len(head))]
+    lines = ["  ".join(h.ljust(w) for h, w in zip(head, widths)),
+             "  ".join("-" * w for w in widths)]
+    lines += ["  ".join(c.ljust(w) for c, w in zip(b, widths))
+              for b in body]
+    return "\n".join(lines)
+
+
 def diff(base: Dict[str, float], fresh: Dict[str, float],
          tol: float) -> list:
-    """The list of human-readable failures (empty = gate passes)."""
+    """Back-compat surface: the list of human-readable failures (empty
+    = gate passes), derived from :func:`compare`."""
     failures = []
-    for name in sorted(set(base) - set(fresh)):
-        failures.append(f"row disappeared: {name} "
-                        f"(baseline {base[name]:.6g})")
-    for name in sorted(set(fresh) - set(base)):
-        failures.append(f"new row without a committed baseline: {name} "
-                        f"(fresh {fresh[name]:.6g}) — re-commit the "
-                        "JSON to bless it")
-    for name in sorted(set(base) & set(fresh)):
-        b, f = base[name], fresh[name]
-        if name.endswith("_ms"):
-            if f > b * (1.0 + tol):
-                failures.append(
-                    f"timing regression: {name} {f:.3f} ms vs baseline "
-                    f"{b:.3f} ms (+{(f / b - 1.0) * 100:.1f}% > "
-                    f"{tol * 100:.0f}% tolerance)")
-        elif f != b:
+    for r in compare(base, fresh, tol):
+        name, b, f = r["name"], r["baseline"], r["fresh"]
+        if r["status"] == "MISSING":
+            failures.append(f"row disappeared: {name} (baseline {b:.6g})")
+        elif r["status"] == "EXTRA":
+            failures.append(f"new row without a committed baseline: "
+                            f"{name} (fresh {f:.6g}) — re-commit the "
+                            "JSON to bless it")
+        elif r["status"] == "REGRESS":
+            failures.append(
+                f"timing regression: {name} {f:.3f} ms vs baseline "
+                f"{b:.3f} ms (+{(f / b - 1.0) * 100:.1f}% > "
+                f"{tol * 100:.0f}% tolerance)")
+        elif r["status"] == "CHANGED":
             failures.append(
                 f"bit-identity/accounting row changed: {name} "
                 f"{f:.6g} vs baseline {b:.6g} (exact match required)")
     return failures
 
 
-def main() -> int:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter)
@@ -85,21 +163,30 @@ def main() -> int:
     ap.add_argument("--tol", type=float, default=0.15,
                     help="one-sided relative tolerance for *_ms timing "
                          "rows (default 0.15 = 15%%)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     base = load_rows(args.baseline)
     fresh = load_rows(args.fresh)
-    failures = diff(base, fresh, args.tol)
-    if failures:
-        print(f"perf_gate: {len(failures)} failure(s) "
+    rows = compare(base, fresh, args.tol)
+    code = verdict_exit_code(rows)
+    if code != EXIT_OK:
+        bad = [r for r in rows if r["status"] not in ("OK", "IMPROVED")]
+        print(f"perf_gate: {len(bad)} failure(s) "
               f"({args.fresh} vs {args.baseline}):")
-        for f in failures:
-            print(f"  FAIL {f}")
-        return 1
+        for r in bad:
+            print(f"  FAIL [{r['status']}] {r['name']}: "
+                  f"baseline {_fmt(r['baseline'])} -> "
+                  f"fresh {_fmt(r['fresh'])} ({r['class']} "
+                  f"{r['threshold']})")
+        print("\nfull comparison table:")
+        print(render_table(rows))
+        print(f"\nperf_gate: exit {code} "
+              f"({'missing/extra row' if code == EXIT_MISSING_ROW else 'regression/accounting change'})")
+        return code
     n_timing = sum(1 for n in base if n.endswith("_ms"))
     print(f"perf_gate: OK — {len(base)} rows ({n_timing} timing within "
           f"{args.tol * 100:.0f}%, {len(base) - n_timing} exact)")
-    return 0
+    return EXIT_OK
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+#!/usr/bin/env python
+"""Render an obs JSONL trace as the standard report (DESIGN.md §13).
+
+Thin CLI over :mod:`repro.obs.report`. Sections: trace meta, per-phase
+time, overlap pipeline utilization, measured-vs-predicted exchange per
+bucket (the alpha-beta comm model's prediction rides on every
+``plan.issue`` span), steps / wire (bytes per step vs the paper's 1/32
+ideal), final counters.
+
+Usage:
+    PYTHONPATH=src python scripts/trace_report.py TRACE.jsonl [--json]
+
+(The PYTHONPATH is optional — the script falls back to the repo's
+``src/`` next to it.)
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+try:
+    from repro.obs import report
+except ImportError:                       # bare invocation, no PYTHONPATH
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+    from repro.obs import report
+
+if __name__ == "__main__":
+    sys.exit(report.main(sys.argv[1:]))

@@ -37,15 +37,22 @@ codec x strategy, and chunk-size-invariance is drilled in tier 2.
 coordinate buffer to ``PACK * M`` words — an O(M) layout this engine
 exists to avoid.
 
-``LAST_STATS`` records the most recent run's chunk accounting (peak
-materialized rows, chunk count, passes) — the federated benchmark's
-memory-bound row reads it, mirroring the kernel-launch counters in
-``kernels.ops``.
+Chunk accounting lives in the global :data:`repro.obs.COUNTERS`
+registry (DESIGN.md §13): cumulative ``population.chunks`` /
+``population.passes``, high-water ``population.peak_rows``, and the
+most recent run's gauges under ``population.last.*`` — the federated
+benchmark's memory-bound row reads those, mirroring the kernel-launch
+counters in ``kernels.ops``. The old ``LAST_STATS`` module-global
+remains as a deprecation shim reading the registry; unlike the mutable
+dict it replaced, concurrent requests in one process can no longer
+clobber each other's accounting mid-read (each run publishes its
+gauges atomically at the end of ``streamed_vote``).
 """
 from __future__ import annotations
 
 import functools
 import math
+from collections.abc import Mapping
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -56,6 +63,7 @@ from repro.configs.base import ByzantineConfig, VoteStrategy
 from repro.core import sign_compress as sc
 from repro.core import vote_api as va
 from repro.core.codecs import weighted
+from repro.obs.recorder import COUNTERS, warn_deprecated
 
 #: default voter-chunk size (rows materialized at once)
 DEFAULT_CHUNK = 2048
@@ -65,10 +73,46 @@ DEFAULT_CHUNK = 2048
 W256_CAP = int(round(math.log((1.0 - weighted.P_MIN) / weighted.P_MIN)
                      * 256.0))
 
-#: chunk accounting of the most recent streamed_vote call (the
-#: federated benchmark's memory-bound row; see module docstring)
-LAST_STATS: Dict[str, int] = {"n_voters": 0, "peak_rows": 0,
-                              "n_chunks": 0, "n_passes": 0}
+#: the registry namespace of the streamed engine's counters
+STATS_PREFIX = "population."
+
+_STAT_KEYS = ("n_voters", "peak_rows", "n_chunks", "n_passes")
+
+
+def _publish_stats(stats: Dict[str, int]) -> None:
+    """Publish one run's chunk accounting to the registry: last-run
+    gauges under ``population.last.*`` plus the cumulative/high-water
+    process counters."""
+    for k in _STAT_KEYS:
+        COUNTERS.set(STATS_PREFIX + "last." + k, stats[k])
+    COUNTERS.inc(STATS_PREFIX + "chunks", stats["n_chunks"])
+    COUNTERS.inc(STATS_PREFIX + "passes", stats["n_passes"])
+    COUNTERS.inc(STATS_PREFIX + "votes")
+    COUNTERS.record_max(STATS_PREFIX + "peak_rows", stats["peak_rows"])
+
+
+class _LastStatsShim(Mapping):
+    """DEPRECATED read-only view of the most recent run's chunk
+    accounting (``population.last.*`` in :data:`repro.obs.COUNTERS`) —
+    keeps old readers of the ``LAST_STATS`` module-global working while
+    the registry is the single source of truth."""
+
+    def __getitem__(self, key: str) -> int:
+        if key not in _STAT_KEYS:
+            raise KeyError(key)
+        warn_deprecated("population.LAST_STATS",
+                        "read repro.obs.COUNTERS (population.last.*)")
+        return COUNTERS.get(STATS_PREFIX + "last." + key)
+
+    def __iter__(self):
+        return iter(_STAT_KEYS)
+
+    def __len__(self) -> int:
+        return len(_STAT_KEYS)
+
+
+#: DEPRECATED shim over the registry (see :class:`_LastStatsShim`)
+LAST_STATS = _LastStatsShim()
 
 _CODECS = ("sign1bit", "ef_sign", "ternary2bit", "weighted_vote")
 
@@ -266,7 +310,7 @@ def streamed_vote(stream, *, strategy: VoteStrategy, codec: str,
         signed = 2 * acc.reshape(-1)[:n] - m
         margin = float(np.mean(np.abs(signed)) / m)
 
-    LAST_STATS.update(stats)
+    _publish_stats(stats)
     return votes, state, margin
 
 

@@ -32,6 +32,7 @@ from repro.core import sign_compress as sc
 from repro.core import vote_api as va
 from repro.core import vote_plan as vp
 from repro.core.majority_vote import tree_mean
+from repro.obs import recorder as obs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,13 +146,17 @@ def make_sign_optimizer(cfg: OptimizerConfig, axes: Sequence[str],
     def encode(tree, err):
         # codec encode: fold each EF leaf's residual into the vote input
         # (identity for residual-free leaves/codecs)
-        return {k: _leaf_codec(k).encode_leaf(v, err.get(k))
-                for k, v in tree.items()}
+        with obs.get_recorder().span("codec.encode", codec=codec.name,
+                                     n_leaves=len(tree)):
+            return {k: _leaf_codec(k).encode_leaf(v, err.get(k))
+                    for k, v in tree.items()}
 
     def feedback(encoded, votes, err):
         # codec feedback: residual vs the APPLIED vote, EF leaves only
-        return {k: _leaf_codec(k).feedback_leaf(encoded[k], votes[k], e)
-                for k, e in err.items()}
+        with obs.get_recorder().span("codec.feedback", codec=codec.name,
+                                     n_leaves=len(err)):
+            return {k: _leaf_codec(k).feedback_leaf(encoded[k], votes[k], e)
+                    for k, e in err.items()}
 
     backend = va.MeshBackend(axes=tuple(axes))
 

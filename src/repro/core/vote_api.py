@@ -56,6 +56,7 @@ import numpy as np
 from repro import compat
 from repro.configs.base import ByzantineConfig, VoteStrategy
 from repro.core import byzantine, sign_compress as sc
+from repro.obs import recorder as obs
 
 FORMS = ("leaf", "stacked", "tree", "streamed")
 MESH_STYLES = ("data_model", "data_only")
@@ -901,10 +902,37 @@ class VoteBackend(abc.ABC):
     def why_unsupported(self, request: VoteRequest) -> Optional[str]:
         """None if supported, else an actionable reason."""
 
-    @abc.abstractmethod
     def execute(self, request: VoteRequest) -> VoteOutcome:
         """Run the vote; raises ValueError (with the
-        :meth:`why_unsupported` reason) on unsupported requests."""
+        :meth:`why_unsupported` reason) on unsupported requests.
+
+        Concrete template (DESIGN.md §13): capability check, the
+        backend's :meth:`_execute`, then telemetry — a ``vote.execute``
+        span when a recorder is active, and the exact wire counters
+        (``vote.requests`` / ``vote.wire.bytes`` / ``vote.wire.
+        messages``) from the outcome's once-computed WireReport,
+        always. Both backends emit identical counter values for the
+        same request because both count the SAME static report (the
+        tier-2 obs drill asserts it). Under ``jit`` the increments run
+        at trace time — once per compilation, the `kernels.ops`
+        launch-count semantics."""
+        self._check(request)
+        rec = obs.get_recorder()
+        if rec.enabled:
+            with rec.span("vote.execute", backend=self.name,
+                          form=request.form, codec=request.codec):
+                out = self._execute(request)
+        else:
+            out = self._execute(request)
+        c = obs.COUNTERS
+        c.inc("vote.requests")
+        c.inc("vote.wire.bytes", int(round(out.wire.payload_bytes)))
+        c.inc("vote.wire.messages", out.wire.n_messages)
+        return out
+
+    @abc.abstractmethod
+    def _execute(self, request: VoteRequest) -> VoteOutcome:
+        """The backend's execution body (request already validated)."""
 
     def _check(self, request: VoteRequest) -> None:
         why = self.why_unsupported(request)
@@ -968,8 +996,7 @@ class MeshBackend(VoteBackend):
 
     # ---- execution -----------------------------------------------------
 
-    def execute(self, request: VoteRequest) -> VoteOutcome:
-        self._check(request)
+    def _execute(self, request: VoteRequest) -> VoteOutcome:
         if request.form == "stacked":
             return self._execute_stacked(request)
         if request.form == "tree":
@@ -1169,8 +1196,7 @@ class VirtualBackend(VoteBackend):
                         "VirtualBackend(use_kernels=False)")
         return None
 
-    def execute(self, request: VoteRequest) -> VoteOutcome:
-        self._check(request)
+    def _execute(self, request: VoteRequest) -> VoteOutcome:
         req = request
         if req.form == "streamed":
             return self._execute_streamed(req)

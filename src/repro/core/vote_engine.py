@@ -50,6 +50,7 @@ from repro import compat
 from repro.configs.base import ByzantineConfig, VoteStrategy
 from repro.core import sign_compress as sc
 from repro.distributed import comm_model
+from repro.obs import recorder as obs
 
 
 # ---------------------------------------------------------------------------
@@ -117,13 +118,30 @@ class VoteStrategyImpl(abc.ABC):
         """Decode the decision to (..., n) ±1/0 signs in `dtype`."""
 
     def vote(self, signs: jax.Array, axes: Sequence[str]) -> jax.Array:
-        """signs int8 (..., n) -> int8 majority (..., n) over `axes`."""
+        """signs int8 (..., n) -> int8 majority (..., n) over `axes`.
+
+        With a recorder active, each stage is wrapped in a host-side
+        span (``stage.pack`` .. ``stage.unpack``, DESIGN.md §13); under
+        ``jit`` the spans measure trace time and insert NO ops, so the
+        compiled program — and the golden digest — is bit-identical
+        with tracing on."""
         m = num_voters(axes)
         n = signs.shape[-1]
-        wire = self.pack(signs, m)
-        arrived = self.exchange(wire, axes)
-        decision = self.tally(arrived, m)
-        return self.unpack(decision, n, jnp.int8)
+        rec = obs.get_recorder()
+        if not rec.enabled:
+            wire = self.pack(signs, m)
+            arrived = self.exchange(wire, axes)
+            decision = self.tally(arrived, m)
+            return self.unpack(decision, n, jnp.int8)
+        kind = self.kind.value
+        with rec.span("stage.pack", strategy=kind, n=n):
+            wire = self.pack(signs, m)
+        with rec.span("stage.exchange", strategy=kind, n=n):
+            arrived = self.exchange(wire, axes)
+        with rec.span("stage.tally", strategy=kind, n=n):
+            decision = self.tally(arrived, m)
+        with rec.span("stage.unpack", strategy=kind, n=n):
+            return self.unpack(decision, n, jnp.int8)
 
     # ---- accounting (per-chip bytes; ring collective terms) ----
 

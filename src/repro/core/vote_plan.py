@@ -52,6 +52,7 @@ from repro.configs.base import ByzantineConfig, VoteStrategy
 from repro.core import sign_compress as sc
 from repro.core.vote_engine import STRATEGIES, num_voters
 from repro.distributed import comm_model
+from repro.obs import recorder as obs_rec
 
 #: base bucket alignment: lcm of the 1-bit pack (32/word) and the ternary
 #: 2-bit pack (16/word) — an aligned bucket enters every wire pad-free
@@ -528,22 +529,68 @@ def run_schedule(plan: VotePlan, buf: jax.Array, wire,
                 "state (init_server_state) through the request")
         w = weighted.reliability_weights(state["flip_ema"])
     buckets = plan.buckets
+    # exact bucket accounting, always on (trace-time semantics under jit:
+    # one increment per compile = buckets walked per execution)
+    obs_rec.COUNTERS.inc("plan.buckets", len(buckets))
 
     def seg(b: Bucket) -> jax.Array:
         return jax.lax.slice_in_dim(buf, b.start, b.start + b.length,
                                     axis=-1)
 
-    done = []
-    if overlap and len(buckets) > 1:
-        inflight = wire.issue(buckets[0], seg(buckets[0]))
-        for k in range(1, len(buckets)):
-            nxt = wire.issue(buckets[k], seg(buckets[k]))
-            done.append(wire.complete(buckets[k - 1], inflight, w))
-            inflight = nxt
-        done.append(wire.complete(buckets[-1], inflight, w))
+    rec = obs_rec.get_recorder()
+    if rec.enabled:
+        # host-side spans per bucket issue/complete, the issue span
+        # carrying the α–β model's predicted exchange time — the
+        # measured-vs-predicted pair trace_report.py aggregates. The
+        # virtual wire's voter dim is its own mesh; the real wire reads
+        # the region's axis sizes.
+        data = (wire.m if hasattr(wire, "m") else num_voters(wire.axes))
+        from repro.core import codecs as codecs_mod
+
+        def _issue(k: int) -> jax.Array:
+            b = buckets[k]
+            ici, dci, ncoll = _message_parts(
+                codecs_mod.get_codec(b.codec).bits_per_param, b.strategy,
+                b.length, data, 1)
+            pred = comm_model.collective_time(
+                ici, dci, n_collectives=ncoll).time_s
+            with rec.span("plan.issue", bucket=k, codec=b.codec,
+                          strategy=b.strategy.value, length=b.length,
+                          pred_s=pred):
+                return wire.issue(b, seg(b))
+
+        def _complete(k: int, inflight):
+            b = buckets[k]
+            with rec.span("plan.complete", bucket=k, codec=b.codec,
+                          strategy=b.strategy.value):
+                return wire.complete(b, inflight, w)
     else:
-        for b in buckets:
-            done.append(wire.complete(b, wire.issue(b, seg(b)), w))
+        def _issue(k: int) -> jax.Array:
+            return wire.issue(buckets[k], seg(buckets[k]))
+
+        def _complete(k: int, inflight):
+            return wire.complete(buckets[k], inflight, w)
+
+    def _walk():
+        done = []
+        if overlap and len(buckets) > 1:
+            inflight = _issue(0)
+            for k in range(1, len(buckets)):
+                nxt = _issue(k)
+                done.append(_complete(k - 1, inflight))
+                inflight = nxt
+            done.append(_complete(len(buckets) - 1, inflight))
+        else:
+            for k in range(len(buckets)):
+                done.append(_complete(k, _issue(k)))
+        return done
+
+    if rec.enabled:
+        with rec.span("plan.schedule", n_buckets=len(buckets),
+                      overlap=bool(overlap and len(buckets) > 1)):
+            done = _walk()
+    else:
+        done = _walk()
     votes, mismatch, total_w = [], None, 0
     for b, (vote, mis) in zip(buckets, done):
         votes.append(vote)

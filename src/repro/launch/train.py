@@ -28,6 +28,7 @@ from repro.configs.presets import default_train_config
 from repro.data.pipeline import SyntheticLMPipeline
 from repro.distributed.fault_tolerance import Watchdog
 from repro.models import model as M
+from repro.obs import recorder as obs
 from repro.train import train_step as TS
 
 
@@ -64,7 +65,10 @@ def main() -> None:
     ap.add_argument("--watchdog-s", type=float, default=600.0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    obs.add_trace_arg(ap)
     args = ap.parse_args()
+    trace_rec = obs.activate_trace(args)
+    rec = obs.get_recorder()
 
     cfg, tcfg = build(args.arch, reduced=args.reduced, batch=args.batch,
                       seq=args.seq, opt_kind=args.opt, lr=args.lr,
@@ -92,9 +96,14 @@ def main() -> None:
     for step in range(start_step, args.steps):
         batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
         with Watchdog(args.watchdog_s) as wd:
-            params, opt_state, metrics = art.step_fn(
-                params, opt_state, batch, jnp.int32(step))
-            loss = float(metrics["loss"])
+            with rec.span("train.step", step=step) as sp:
+                params, opt_state, metrics = art.step_fn(
+                    params, opt_state, batch, jnp.int32(step))
+                loss = float(metrics["loss"])
+        if rec.enabled:
+            rec.step(kind_detail="train", step=step, loss=loss,
+                     arch=args.arch, opt=args.opt,
+                     phase_s={"step": sp.dur_s})
         if wd.fired:
             raise TimeoutError(f"step {step} exceeded {args.watchdog_s}s")
         if step % args.log_every == 0 or step == args.steps - 1:
@@ -109,6 +118,7 @@ def main() -> None:
         ckpt.save(args.steps - 1, params, opt_state, pipe.checkpoint(),
                   meta={"arch": args.arch, "step": args.steps - 1})
         ckpt.wait()
+    obs.finish_trace(trace_rec)
     print("done.")
 
 

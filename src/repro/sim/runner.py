@@ -44,6 +44,7 @@ from repro.core import sign_compress as sc
 from repro.core import vote_api as va
 from repro.core.vote_engine import STRATEGIES
 from repro.distributed.fault_tolerance import count_for_fraction
+from repro.obs import recorder as obs
 from repro.sim.scenario import ScenarioSpec
 
 BACKENDS = ("virtual", "mesh")
@@ -356,6 +357,29 @@ class ScenarioRunner:
 
         return prepare, finish, ef_feedback, byz_cfg, n_stale, plan
 
+    # ---- telemetry (DESIGN.md §13) ----
+
+    def _record_step(self, rec, trace: StepTrace, wire,
+                     phase_s: Dict[str, float], n_chunks: int = 0) -> None:
+        """One unified step record: the StepTrace drill fields joined
+        with the WireReport wire accounting and the per-phase span
+        times, written to the active recorder's JSONL sink."""
+        d = self.spec.dim
+        payload = float(wire.payload_bytes)
+        fields = dict(
+            scenario=self.spec.name, backend=self.backend,
+            step=trace.step, n_voters=trace.n_workers,
+            n_population=trace.n_population,
+            n_adversaries=trace.n_adversaries, n_stale=trace.n_stale,
+            strategy=self.spec.strategy.value, codec=self.spec.codec,
+            payload_bytes=payload, n_messages=int(wire.n_messages),
+            n_coords=d, compression_vs_f32=payload / (4.0 * d),
+            margin=trace.margin, flip_fraction=trace.flip_fraction,
+            loss=trace.loss, phase_s=phase_s)
+        if n_chunks:
+            fields["n_chunks"] = n_chunks
+        rec.step(**fields)
+
     # ---- the drill ----
 
     def run(self) -> ScenarioTrace:
@@ -388,6 +412,7 @@ class ScenarioRunner:
                       else {})
         digest = hashlib.sha256()
         steps: List[StepTrace] = []
+        rec = obs.get_recorder()
         for step in range(spec.n_steps):
             m_now = spec.workers_at(step)
             if m_now != m:
@@ -411,9 +436,17 @@ class ScenarioRunner:
                     self._segment(m)
             noise = _noise(spec, step, m)
             step_t = jnp.int32(step)
-            v, t, fresh, eff, oracle, margin = prepare(x, v, err, prev,
-                                                       cstate, noise,
-                                                       step_t)
+            # tracing never touches a traced value — the spans time host
+            # perf_counter around each phase (block_until_ready so the
+            # async dispatch doesn't bill one phase's work to the next),
+            # so the run digest is bit-identical with the recorder on
+            # (regression-tested by tests/test_obs.py)
+            with rec.span("scenario.prepare", step=step) as sp_prep:
+                v, t, fresh, eff, oracle, margin = prepare(x, v, err, prev,
+                                                           cstate, noise,
+                                                           step_t)
+                if rec.enabled:
+                    jax.block_until_ready(oracle)
             # ONE declarative request per step, identical on both
             # backends — payload is the raw stacked encode input, the
             # failure composition is data, the executor is the only
@@ -423,29 +456,41 @@ class ScenarioRunner:
             # executor re-derives the effective signs prepare() captured
             # for the margin trace — the cost of keeping the request
             # backend-identical; both derivations are jitted.)
-            out = self._exec.execute(va.VoteRequest(
-                payload=t, form="stacked", strategy=spec.strategy,
-                codec=spec.codec, plan=plan,
-                failures=va.FailureSpec(n_stale=n_stale, byz=byz_cfg
-                                        if byz_cfg.mode != "none"
-                                        else None),
-                prev=prev, step=step_t, salt=spec.salt,
-                server_state=cstate, overlap=spec.plan.overlap))
+            with rec.span("scenario.vote", step=step,
+                          backend=self.backend) as sp_vote:
+                out = self._exec.execute(va.VoteRequest(
+                    payload=t, form="stacked", strategy=spec.strategy,
+                    codec=spec.codec, plan=plan,
+                    failures=va.FailureSpec(n_stale=n_stale, byz=byz_cfg
+                                            if byz_cfg.mode != "none"
+                                            else None),
+                    prev=prev, step=step_t, salt=spec.salt,
+                    server_state=cstate, overlap=spec.plan.overlap))
+                if rec.enabled:
+                    jax.block_until_ready(out.votes)
             vote, cstate = out.votes, out.server_state
             if spec.delayed_vote:
                 applied, pending = pending, vote
             else:
                 applied = vote
-            x, flip, loss = finish(x, applied, vote, oracle)
-            if codec.worker_state:
-                err = ef_feedback(t, vote)
+            with rec.span("scenario.finish", step=step) as sp_fin:
+                x, flip, loss = finish(x, applied, vote, oracle)
+                if codec.worker_state:
+                    err = ef_feedback(t, vote)
+                if rec.enabled:
+                    jax.block_until_ready(x)
             prev = fresh
             digest.update(np.asarray(vote).tobytes())
-            steps.append(StepTrace(
+            trace = StepTrace(
                 step=step, n_workers=m,
                 n_adversaries=byz_cfg.num_adversaries, n_stale=n_stale,
                 margin=float(margin), flip_fraction=float(flip),
-                loss=float(loss)))
+                loss=float(loss))
+            steps.append(trace)
+            if rec.enabled:
+                self._record_step(rec, trace, out.wire, phase_s={
+                    "prepare": sp_prep.dur_s, "vote": sp_vote.dur_s,
+                    "finish": sp_fin.dur_s})
         digest.update(np.asarray(x, np.float32).tobytes())
         return ScenarioTrace(spec=spec, backend=self.backend,
                              steps=tuple(steps), digest=digest.hexdigest())
@@ -475,6 +520,7 @@ class ScenarioRunner:
         pending = jnp.zeros((spec.dim,), jnp.int8)   # delayed-vote buffer
         digest = hashlib.sha256()
         steps: List[StepTrace] = []
+        rec = obs.get_recorder()
         for step in range(spec.n_steps):
             pop_now = pspec.clients_at(step)
             if pop_now != pop:
@@ -508,16 +554,21 @@ class ScenarioRunner:
             if byz is not None:
                 # honest-majority oracle for the flip trace: the same
                 # stream, failure-free, state read-only (runs FIRST so
-                # population.LAST_STATS reflects the real vote)
+                # the population.last.* counters reflect the real vote)
                 from repro.core import population as pop_engine
                 oracle, _, _ = pop_engine.streamed_vote(
                     stream, strategy=spec.strategy, codec=spec.codec,
                     step=step_t, salt=spec.salt, server_state=cstate,
                     chunk_size=pspec.chunk_size)
-            out = self._exec.execute(va.VoteRequest(
-                payload=stream, form="streamed", strategy=spec.strategy,
-                codec=spec.codec, failures=va.FailureSpec(byz=byz),
-                step=step_t, salt=spec.salt, server_state=cstate))
+            chunks_before = obs.COUNTERS.get("population.chunks")
+            with rec.span("scenario.vote", step=step,
+                          backend=self.backend) as sp_vote:
+                out = self._exec.execute(va.VoteRequest(
+                    payload=stream, form="streamed", strategy=spec.strategy,
+                    codec=spec.codec, failures=va.FailureSpec(byz=byz),
+                    step=step_t, salt=spec.salt, server_state=cstate))
+                if rec.enabled:
+                    jax.block_until_ready(out.votes)
             vote, cstate = out.votes, out.server_state
             flip = (float(jnp.mean((vote != oracle).astype(jnp.float32)))
                     if byz is not None else 0.0)
@@ -528,11 +579,17 @@ class ScenarioRunner:
             x = x - spec.learning_rate * applied.astype(jnp.float32)
             loss = float(0.5 * jnp.mean(x * x))
             digest.update(np.asarray(vote).tobytes())
-            steps.append(StepTrace(
+            trace = StepTrace(
                 step=step, n_workers=k,
                 n_adversaries=byz_cfg.num_adversaries, n_stale=0,
                 margin=float(out.wire.margin), flip_fraction=flip,
-                loss=loss, n_population=pop))
+                loss=loss, n_population=pop)
+            steps.append(trace)
+            if rec.enabled:
+                self._record_step(
+                    rec, trace, out.wire, phase_s={"vote": sp_vote.dur_s},
+                    n_chunks=obs.COUNTERS.get("population.chunks")
+                    - chunks_before)
         digest.update(np.asarray(x, np.float32).tobytes())
         return ScenarioTrace(spec=spec, backend=self.backend,
                              steps=tuple(steps), digest=digest.hexdigest())

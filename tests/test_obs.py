@@ -1,0 +1,348 @@
+"""The unified telemetry layer (DESIGN.md §13): spans, counters, step
+records, the JSONL schema, the deprecation shims over the absorbed
+accounting surfaces, the shared bench-JSON writer, the perf gate's
+verdict table/exit codes, and the committed sample trace's report.
+
+The two invariants everything else leans on:
+
+* tracing must never move a bit of any traced computation — the golden
+  scenario digest is asserted identical with the recorder on;
+* the disabled recorder must be structurally free — one module-level
+  no-op span singleton, no allocation on the unparameterized hot path.
+"""
+from __future__ import annotations
+
+import importlib.util
+import io
+import json
+import os
+
+import pytest
+
+from repro.core import population
+from repro.kernels import ops
+from repro.obs import recorder as obs
+from repro.obs import report
+
+_REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+# ---------------------------------------------------------------------------
+# counters: exact integers, three verbs, namespaced snapshots
+# ---------------------------------------------------------------------------
+
+
+def test_counter_registry_exactness():
+    reg = obs.CounterRegistry()
+    reg.inc("a.x")
+    reg.inc("a.x", 41)
+    reg.inc("a.y", 2**70)            # arbitrary precision, no float drift
+    reg.set("b.gauge", 7)
+    reg.set("b.gauge", 3)
+    reg.record_max("b.high", 5)
+    reg.record_max("b.high", 2)      # lower value must not move the mark
+    assert reg.get("a.x") == 42
+    assert reg.get("a.y") == 2**70
+    assert reg.get("b.gauge") == 3
+    assert reg.get("b.high") == 5
+    assert reg.get("missing") == 0
+    assert reg.snapshot("a.") == {"a.x": 42, "a.y": 2**70}
+
+
+def test_counter_delta_and_prefix_reset():
+    reg = obs.CounterRegistry()
+    reg.inc("a.x", 10)
+    reg.inc("b.y", 1)
+    before = reg.snapshot()
+    reg.inc("a.x", 5)
+    reg.inc("c.z", 3)
+    assert reg.delta_since(before) == {"a.x": 5, "c.z": 3}
+    assert reg.delta_since(before, "a.") == {"a.x": 5}
+    reg.reset("a.")
+    assert reg.get("a.x") == 0 and reg.get("b.y") == 1
+
+
+# ---------------------------------------------------------------------------
+# spans: nesting, ordering, the no-op singleton
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_and_ordering():
+    buf = io.StringIO()
+    rec = obs.TraceRecorder(buf)
+    with rec.span("outer", kind="test"):
+        with rec.span("inner1"):
+            pass
+        with rec.span("inner2") as s:
+            s.set(late=1)
+    rec.close()
+    rows = [json.loads(line) for line in buf.getvalue().splitlines()]
+    spans = {r["name"]: r for r in rows if r["kind"] == "span"}
+    outer, i1, i2 = spans["outer"], spans["inner1"], spans["inner2"]
+    # children close before the parent, so they appear first; nesting is
+    # carried by parent seq + depth
+    assert i1["parent"] == outer["seq"] and i2["parent"] == outer["seq"]
+    assert i1["depth"] == 1 and i2["depth"] == 1 and outer["depth"] == 0
+    assert outer["parent"] == -1
+    assert i1["seq"] < i2["seq"]
+    assert i2["attrs"] == {"late": 1}
+    assert outer["attrs"] == {"kind": "test"}
+    # parent wall time covers both children
+    assert outer["dur_s"] >= i1["dur_s"] + i2["dur_s"] - 1e-9
+    # every row is versioned
+    assert all(r["v"] == obs.SCHEMA_VERSION for r in rows)
+
+
+def test_noop_recorder_is_singleton_and_free():
+    rec = obs.Recorder()
+    assert not rec.enabled
+    s1 = rec.span("a", x=1)
+    s2 = rec.span("b")
+    assert s1 is s2                       # the module-level singleton
+    with s1 as s:
+        s.set(anything=1)
+    assert s1.dur_s == 0.0
+    # unparameterized hot path allocates nothing: same object back, and
+    # the call accepts being hammered
+    for _ in range(1000):
+        assert rec.span("hot") is s1
+    rec.event("x")                        # all no-ops, no errors
+    rec.step(loss=1.0)
+    rec.close()
+
+
+def test_get_set_recording_scoping():
+    assert not obs.get_recorder().enabled
+    rec = obs.TraceRecorder(io.StringIO())
+    with obs.recording(rec) as r:
+        assert obs.get_recorder() is r is rec
+    assert not obs.get_recorder().enabled
+    prev = obs.set_recorder(rec)
+    assert obs.get_recorder() is rec
+    obs.set_recorder(None)                # None restores the no-op
+    assert not obs.get_recorder().enabled
+    assert not prev.enabled
+
+
+# ---------------------------------------------------------------------------
+# the JSONL sink: schema round-trip, version/kind validation
+# ---------------------------------------------------------------------------
+
+
+def test_trace_roundtrip_and_final_counters(tmp_path):
+    p = tmp_path / "t.jsonl"
+    before = obs.COUNTERS.get("test.obs.roundtrip")
+    rec = obs.TraceRecorder(str(p), meta={"harness": "unit"})
+    with rec.span("s1"):
+        pass
+    rec.event("e1", detail="x")
+    rec.step(step=0, loss=1.5, payload_bytes=32.0, n_coords=64)
+    obs.COUNTERS.inc("test.obs.roundtrip")
+    rec.close()
+    rows = obs.read_trace(str(p))
+    kinds = [r["kind"] for r in rows]
+    assert kinds[0] == "meta" and kinds[-1] == "counters"
+    assert rows[0]["harness"] == "unit" and rows[0]["host_side"] is True
+    assert {"span", "event", "step"} <= set(kinds)
+    # the close() snapshot carries the registry state at close time
+    assert rows[-1]["values"]["test.obs.roundtrip"] == before + 1
+    step = next(r for r in rows if r["kind"] == "step")
+    assert step["loss"] == 1.5 and step["payload_bytes"] == 32.0
+
+
+def test_read_trace_rejects_schema_drift(tmp_path):
+    bad_version = tmp_path / "v.jsonl"
+    bad_version.write_text(json.dumps({"v": 999, "kind": "meta"}) + "\n")
+    with pytest.raises(ValueError, match="schema"):
+        obs.read_trace(str(bad_version))
+    bad_kind = tmp_path / "k.jsonl"
+    bad_kind.write_text(
+        json.dumps({"v": obs.SCHEMA_VERSION, "kind": "mystery"}) + "\n")
+    with pytest.raises(ValueError, match="kind"):
+        obs.read_trace(str(bad_kind))
+
+
+# ---------------------------------------------------------------------------
+# the absorbed surfaces: LAUNCHES and LAST_STATS are registry shims
+# ---------------------------------------------------------------------------
+
+
+def test_launches_shim_reads_registry():
+    ops.reset_launch_counts()
+    obs.COUNTERS.inc(ops.LAUNCH_PREFIX + "bitpack", 3)
+    assert ops.LAUNCHES["bitpack"] == 3
+    # the read went through the deprecation gate (warns once/process)
+    assert "kernels.ops.LAUNCHES" in obs._WARNED
+    assert ops.launch_counts() == {"bitpack": 3}
+    assert len(ops.LAUNCHES) == 1 and list(ops.LAUNCHES) == ["bitpack"]
+    ops.LAUNCHES.clear()
+    assert ops.launch_counts() == {}
+
+
+def test_last_stats_shim_reads_registry():
+    obs.COUNTERS.set(population.STATS_PREFIX + "last.n_voters", 17)
+    obs.COUNTERS.set(population.STATS_PREFIX + "last.peak_rows", 4)
+    obs.COUNTERS.set(population.STATS_PREFIX + "last.n_chunks", 5)
+    obs.COUNTERS.set(population.STATS_PREFIX + "last.n_passes", 1)
+    assert population.LAST_STATS["n_voters"] == 17
+    assert dict(population.LAST_STATS)["peak_rows"] == 4
+    assert len(population.LAST_STATS) == 4
+    with pytest.raises(KeyError):
+        population.LAST_STATS["not_a_stat"]
+
+
+# ---------------------------------------------------------------------------
+# tracing never moves a bit: the golden scenario digest
+# ---------------------------------------------------------------------------
+
+
+def test_golden_digest_unchanged_with_tracing_on(tmp_path):
+    from repro.sim import ScenarioRunner, ScenarioSpec
+    spec = ScenarioSpec("obs-unit/golden", n_workers=4, n_steps=2, dim=64)
+    ref = ScenarioRunner(spec).run()
+    rec = obs.TraceRecorder(str(tmp_path / "g.jsonl"))
+    with obs.recording(rec):
+        traced = ScenarioRunner(spec).run()
+    rec.close()
+    assert traced.digest == ref.digest, (
+        "the recorder perturbed a traced value — telemetry must be "
+        "host-side only")
+    rows = obs.read_trace(str(tmp_path / "g.jsonl"))
+    steps = [r for r in rows if r["kind"] == "step"]
+    assert len(steps) == 2
+    s = steps[0]
+    # the unified step record: StepTrace drill fields + WireReport wire
+    # accounting + per-phase span seconds in ONE row
+    for field in ("scenario", "backend", "n_voters", "strategy", "codec",
+                  "payload_bytes", "n_messages", "n_coords",
+                  "compression_vs_f32", "margin", "flip_fraction",
+                  "loss", "phase_s"):
+        assert field in s, f"step record lost {field}"
+    assert s["payload_bytes"] > 0
+    assert set(s["phase_s"]) == {"prepare", "vote", "finish"}
+    assert [r["name"] for r in rows if r["kind"] == "span"
+            and r["name"].startswith("scenario.")].count(
+                "scenario.vote") == 2
+
+
+# ---------------------------------------------------------------------------
+# the shared bench JSON writer
+# ---------------------------------------------------------------------------
+
+
+def test_emit_bench_json_tuples_and_dicts(tmp_path):
+    p = tmp_path / "bench.json"
+    obs.emit_bench_json([("a_ms", 1.25, "timing"),
+                         {"name": "b", "value": 2.0}], str(p))
+    doc = json.loads(p.read_text())
+    assert doc == {"rows": [
+        {"name": "a_ms", "value": 1.25, "derived": "timing"},
+        {"name": "b", "value": 2.0, "derived": ""}]}
+
+
+# ---------------------------------------------------------------------------
+# perf gate: verdict table + distinct exit codes
+# ---------------------------------------------------------------------------
+
+
+def _load_perf_gate():
+    spec = importlib.util.spec_from_file_location(
+        "perf_gate", os.path.join(_REPO, "scripts", "perf_gate.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _write_bench(path, rows):
+    obs.emit_bench_json(rows, str(path))
+
+
+def test_perf_gate_exit_codes(tmp_path):
+    pg = _load_perf_gate()
+    base = tmp_path / "base.json"
+    _write_bench(base, [("t_ms", 10.0, ""), ("exact", 5.0, "")])
+
+    ok = tmp_path / "ok.json"          # within tol + improvement
+    _write_bench(ok, [("t_ms", 9.0, ""), ("exact", 5.0, "")])
+    assert pg.main(["--baseline", str(base), "--fresh", str(ok)]) \
+        == pg.EXIT_OK
+
+    slow = tmp_path / "slow.json"      # timing regression -> 1
+    _write_bench(slow, [("t_ms", 20.0, ""), ("exact", 5.0, "")])
+    assert pg.main(["--baseline", str(base), "--fresh", str(slow)]) \
+        == pg.EXIT_REGRESSION
+
+    drift = tmp_path / "drift.json"    # accounting change -> 1
+    _write_bench(drift, [("t_ms", 10.0, ""), ("exact", 6.0, "")])
+    assert pg.main(["--baseline", str(base), "--fresh", str(drift)]) \
+        == pg.EXIT_REGRESSION
+
+    missing = tmp_path / "missing.json"   # dropped row -> 2
+    _write_bench(missing, [("t_ms", 10.0, "")])
+    assert pg.main(["--baseline", str(base), "--fresh", str(missing)]) \
+        == pg.EXIT_MISSING_ROW
+
+    # missing takes precedence even when a regression is also present
+    both = tmp_path / "both.json"
+    _write_bench(both, [("t_ms", 99.0, ""), ("new_row", 1.0, "")])
+    assert pg.main(["--baseline", str(base), "--fresh", str(both)]) \
+        == pg.EXIT_MISSING_ROW
+
+
+def test_perf_gate_full_table_on_failure(tmp_path, capsys):
+    pg = _load_perf_gate()
+    base, fresh = tmp_path / "b.json", tmp_path / "f.json"
+    _write_bench(base, [("t_ms", 10.0, ""), ("good", 1.0, ""),
+                        ("exact", 5.0, "")])
+    _write_bench(fresh, [("t_ms", 20.0, ""), ("good", 1.0, ""),
+                         ("exact", 5.0, "")])
+    assert pg.main(["--baseline", str(base), "--fresh", str(fresh)]) \
+        == pg.EXIT_REGRESSION
+    out = capsys.readouterr().out
+    # the FULL table renders — passing rows included, with class and
+    # threshold columns
+    assert "full comparison table" in out
+    for token in ("t_ms", "good", "exact", "REGRESS", "OK", "timing",
+                  "+15%", "=="):
+        assert token in out, f"comparison table lost {token!r}"
+
+
+def test_perf_gate_compare_statuses():
+    pg = _load_perf_gate()
+    rows = pg.compare({"a_ms": 10.0, "b": 1.0, "gone": 2.0},
+                      {"a_ms": 8.0, "b": 1.0, "new": 3.0}, tol=0.15)
+    st = {r["name"]: r["status"] for r in rows}
+    assert st == {"a_ms": "IMPROVED", "b": "OK", "gone": "MISSING",
+                  "new": "EXTRA"}
+    assert pg.verdict_exit_code(rows) == pg.EXIT_MISSING_ROW
+
+
+# ---------------------------------------------------------------------------
+# the committed sample trace renders every report section
+# ---------------------------------------------------------------------------
+
+
+def test_sample_trace_report_renders():
+    sample = os.path.join(_REPO, "benchmarks", "traces",
+                          "sample_trace.jsonl")
+    text = report.render(sample)
+    for sec in report.SECTIONS:
+        assert f"== {sec} ==" in text, f"section {sec} missing"
+    # the per-bucket measured-vs-predicted breakdown is the acceptance
+    # bar: buckets with labels, measured times AND alpha-beta
+    # predictions must be present in the committed sample
+    s = report.summarize(sample)
+    assert s["buckets"], "sample trace has no bucketed walks"
+    assert all(b["predicted_s"] is not None for b in s["buckets"]), \
+        "plan.issue spans lost the alpha-beta pred_s attr"
+    assert all(b["measured_s"] > 0 for b in s["buckets"])
+    assert s["schedules"], "sample trace has no plan.schedule walks"
+    # both walk flavors of the PR-6 executor are in the sample
+    assert {w["overlap"] for w in s["schedules"]} == {True, False}
+    assert s["steps"]["n_steps"] > 0
+    assert s["counters"].get("vote.wire.bytes", 0) > 0
+    assert "1/32" in text        # the paper's ideal ratio is cited
+
+
+def test_report_ideal_ratio_matches_paper():
+    assert report.IDEAL_RATIO == pytest.approx(1.0 / 32.0)
