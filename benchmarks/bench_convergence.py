@@ -56,3 +56,12 @@ def rows():
         out.append((f"fig1/{name}_final_f", t[-1],
                     f"f0={t[0]:.1f};reduction={t[0] / max(t[-1], 1e-12):.1f}x"))
     return out
+
+
+def main() -> None:
+    from benchmarks.common import rows_main
+    rows_main("convergence", __doc__, rows)
+
+
+if __name__ == "__main__":
+    main()

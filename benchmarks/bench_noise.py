@@ -53,3 +53,12 @@ def rows():
          "paper: ~1.0 after warmup"),
         ("fig3/max_snr", float(np.max(snr)), ""),
     ]
+
+
+def main() -> None:
+    from benchmarks.common import rows_main
+    rows_main("noise", __doc__, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,234 @@
+"""Serving benchmark: continuous vs static batching under fixed load.
+
+The CI face of the serve engine (DESIGN.md §14). One deterministic
+Poisson request schedule (splitmix64-keyed, like the Scenario Lab's
+draws) is served four ways and the lanes cross-check each other:
+
+* **continuous** — the headline lane: in-flight admission over a
+  recycled slot pool. Reports goodput (tokens/tick), TTFT/TPOT and
+  p50/p95/p99 latency in *virtual ticks* — schedule-deterministic
+  numbers the perf gate compares exactly — plus wall-clock ``*_ms``
+  rows under the usual one-sided tolerance.
+* **static** — same engine, same compiled step, but admission waits for
+  the whole pool to drain (classic static batching). The
+  ``goodput_ratio`` row is the paper-style headline: continuous must
+  beat static at equal offered load (RuntimeError if not).
+* **prefill** — continuous again but admitting via batched prefill at
+  bucketed prompt lengths; must be bit-identical in sampled tokens to
+  inline admission.
+* **hot swap** — a trainer-side CheckpointEmitter publishes new params
+  mid-run; the engine swaps them between ticks. Zero dropped in-flight
+  requests, and every request admitted *after* the swap must match a
+  fresh server started on the new params, token for token.
+
+A final traced replay (TraceRecorder active) must reproduce the
+untraced token stream bit for bit, and the obs compile counter must
+show EXACTLY ONE decode-step compilation across every lane — the
+static-shape claim the whole engine design rests on.
+
+Usage:
+    python -m benchmarks.bench_serving --smoke   # CI lane, <10 s
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+
+_JSON_DEFAULT = "BENCH_serving.json"
+
+#: one schedule for every lane: modest pool, mixed prompt lengths, load
+#: high enough that static batching visibly queues (rate in req/tick)
+_N_REQUESTS = 14
+_RATE = 0.35
+_PROMPT_LENS = (4, 8, 12)
+_GEN_RANGE = (4, 10)
+_SEED = 7
+
+
+def _gate(ok: bool, msg: str) -> float:
+    """Acceptance bar: RuntimeError (not assert — survives ``-O``)."""
+    if not ok:
+        raise RuntimeError(f"bench_serving: {msg}")
+    return 1.0
+
+
+def smoke_rows():
+    import jax
+
+    from repro.configs.base import get_config, reduced_config
+    from repro.models import model as M
+    from repro.obs import recorder as obs
+    from repro.serve import (CheckpointEmitter, CheckpointWatcher,
+                             ServeConfig, ServeEngine, like_tree,
+                             poisson_requests)
+
+    cfg = reduced_config(get_config("glm4-9b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    sc = ServeConfig(n_slots=4, max_len=48,
+                     prompt_pad=max(_PROMPT_LENS), seed=_SEED)
+    reqs = poisson_requests(
+        n_requests=_N_REQUESTS, rate=_RATE, vocab_size=cfg.vocab_size,
+        prompt_lens=_PROMPT_LENS, gen_range=_GEN_RANGE, seed=_SEED)
+    compiles0 = obs.COUNTERS.get("serve.decode.compiles")
+
+    # -- lane 1: continuous batching (the headline) --
+    rep_c = ServeEngine(cfg, params, sc).run(reqs)
+    toks_c = rep_c.tokens_by_request()
+
+    # -- lane 2: static batching baseline (same compiled step) --
+    rep_s = ServeEngine(
+        cfg, params,
+        ServeConfig(n_slots=sc.n_slots, max_len=sc.max_len,
+                    prompt_pad=sc.prompt_pad, seed=_SEED,
+                    scheduler="static")).run(reqs)
+    ratio = (rep_c.goodput_tokens_per_tick
+             / max(rep_s.goodput_tokens_per_tick, 1e-12))
+
+    # -- lane 3: prefill admission == inline admission, token for token --
+    rep_p = ServeEngine(
+        cfg, params,
+        ServeConfig(n_slots=sc.n_slots, max_len=sc.max_len,
+                    prompt_pad=sc.prompt_pad, seed=_SEED,
+                    admit="prefill",
+                    prefill_buckets=_PROMPT_LENS)).run(reqs)
+    prefill_eq = _gate(rep_p.tokens_by_request() == toks_c,
+                       "prefill admission diverged from inline")
+
+    # -- lane 4: hot checkpoint swap mid-run --
+    params2 = M.init_params(cfg, jax.random.PRNGKey(1))
+    with tempfile.TemporaryDirectory() as d:
+        emitter = CheckpointEmitter(d)
+        eng = ServeEngine(cfg, params, sc,
+                          watcher=CheckpointWatcher(d, like_tree(params)))
+        swap_tick = rep_c.ticks // 2
+
+        def on_tick(_e, t):
+            if t == swap_tick:
+                emitter.emit(100, params2)
+
+        rep_w = eng.run(reqs, on_tick=on_tick)
+    _gate(rep_w.swaps == 1, f"expected 1 swap, saw {rep_w.swaps}")
+    swap_ok = _gate(rep_w.dropped == 0,
+                    f"hot swap dropped {rep_w.dropped} in-flight requests")
+    post = {rid for rid, r in rep_w.records.items()
+            if r.param_version_admit == eng.param_version}
+    _gate(0 < len(post) < _N_REQUESTS,
+          f"swap at tick {swap_tick} split nothing ({len(post)} post)")
+    oracle = ServeEngine(cfg, params2, sc).run(
+        [r.with_arrival(0.0) for r in reqs if r.req_id in post]
+    ).tokens_by_request()
+    got = {rid: t for rid, t in rep_w.tokens_by_request().items()
+           if rid in post}
+    swap_oracle = _gate(got == oracle,
+                        "post-swap requests diverged from a fresh "
+                        "server on the new params")
+
+    # -- lane 5: traced replay must be bit-identical --
+    with tempfile.TemporaryDirectory() as d:
+        trace_path = os.path.join(d, "serve_trace.jsonl")
+        rec = obs.TraceRecorder(trace_path)
+        with obs.recording(rec):
+            rep_t = ServeEngine(cfg, params, sc).run(reqs)
+        rec.close()
+        n_steps = sum(1 for r in obs.read_trace(trace_path)
+                      if r["kind"] == "step")
+    traced_eq = _gate(rep_t.tokens_by_request() == toks_c,
+                      "traced serve run diverged from untraced")
+    _gate(n_steps == rep_c.ticks,
+          f"trace carries {n_steps} step records for {rep_c.ticks} ticks")
+
+    # -- the static-shape claim: one decode compile across ALL lanes --
+    compiles = obs.COUNTERS.get("serve.decode.compiles") - compiles0
+    _gate(compiles == 1,
+          f"{compiles} decode-step compiles across the lanes (want 1)")
+
+    # -- wall-clock lane (compiles warm): per-tick decode dispatch --
+    t0 = time.perf_counter()
+    rep_hot = ServeEngine(cfg, params, sc).run(reqs)
+    wall_ms = (time.perf_counter() - t0) * 1e3
+
+    g = "tokens/tick over the run (virtual ticks; schedule-exact)"
+    return [
+        ("serving/continuous_goodput_tok_per_tick",
+         rep_c.goodput_tokens_per_tick, g),
+        ("serving/static_goodput_tok_per_tick",
+         rep_s.goodput_tokens_per_tick, g),
+        ("serving/goodput_ratio_continuous_over_static",
+         _gate(ratio > 1.0,
+               f"continuous ({rep_c.goodput_tokens_per_tick:.3f}) did "
+               f"not beat static ({rep_s.goodput_tokens_per_tick:.3f}) "
+               "at equal offered load") and ratio,
+         f"continuous {rep_c.ticks} ticks vs static {rep_s.ticks}"),
+        ("serving/continuous_ttft_p50_ticks", rep_c.ttft_p50,
+         "arrival -> first token"),
+        ("serving/continuous_tpot_mean_ticks", rep_c.tpot_mean,
+         "ticks per output token after the first"),
+        ("serving/continuous_latency_p50_ticks", rep_c.latency_p50, ""),
+        ("serving/continuous_latency_p95_ticks", rep_c.latency_p95, ""),
+        ("serving/continuous_latency_p99_ticks", rep_c.latency_p99, ""),
+        ("serving/continuous_occupancy", rep_c.occupancy_mean,
+         "mean busy-slot fraction"),
+        ("serving/completed_requests", float(rep_c.completed),
+         f"of {_N_REQUESTS} offered"),
+        ("serving/total_tokens", float(rep_c.total_tokens), ""),
+        ("serving/decode_step_compiles", float(compiles),
+         "across continuous+static+prefill+swap+traced lanes (static "
+         "shapes: admissions/retirements never recompile)"),
+        ("serving/prefill_eq_inline", prefill_eq,
+         "bucketed prefill admission == inline, token for token"),
+        ("serving/hot_swap_zero_dropped", swap_ok,
+         f"swap at tick {swap_tick}; {rep_w.completed} completed"),
+        ("serving/swap_post_match_oracle", swap_oracle,
+         f"{len(post)} post-swap requests == fresh server on new params"),
+        ("serving/traced_eq_untraced", traced_eq,
+         f"{n_steps} step records; identical sampled tokens"),
+        ("serving/continuous_run_wall_ms", wall_ms,
+         f"{rep_hot.ticks} ticks, warm compiles"),
+        ("serving/decode_tick_ms", wall_ms / max(rep_hot.ticks, 1),
+         "mean wall-clock per engine tick (host loop + dispatch)"),
+    ]
+
+
+#: the benchmarks.run driver path — the smoke lane IS the serving
+#: benchmark (CPU-scale engine; the production mesh runs the same
+#: compiled steps via the dry-run shardings)
+rows = smoke_rows
+
+
+def emit_json(rs, path: str) -> None:
+    """Machine-readable baseline, same ``{"rows": [...]}`` schema as
+    ``benchmarks.run --emit-json`` (gated by scripts/perf_gate.py);
+    delegates to :func:`repro.obs.emit_bench_json` (one shared writer)."""
+    from repro.obs import emit_bench_json
+    emit_bench_json(rs, path)
+
+
+def main() -> None:
+    from repro.obs import recorder as obs
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="continuous/static/prefill/swap/traced lanes "
+                         "+ the one-compile gate (CI lane, <10 s)")
+    ap.add_argument("--emit-json", dest="json_out", nargs="?",
+                    const=_JSON_DEFAULT, default=None,
+                    help=f"write rows as JSON (default {_JSON_DEFAULT})")
+    obs.add_trace_arg(ap)
+    args = ap.parse_args()
+
+    rec = obs.activate_trace(args)
+    rs = smoke_rows()
+    if args.smoke and args.json_out is None:   # CI smoke seeds the JSON
+        args.json_out = _JSON_DEFAULT
+    print("name,value,derived")
+    for name, value, derived in rs:
+        print(f"{name},{value:.6g},{derived}", flush=True)
+    if args.json_out:
+        emit_json(rs, args.json_out)
+        print(f"# wrote {args.json_out}", flush=True)
+    obs.finish_trace(rec)
+
+
+if __name__ == "__main__":
+    main()

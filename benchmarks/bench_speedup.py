@@ -61,3 +61,12 @@ def rows():
                     f"{t_vote * 1e3:.2f}ms dense={t_dense * 1e3:.2f}ms "
                     f"({src})"))
     return out
+
+
+def main() -> None:
+    from benchmarks.common import rows_main
+    rows_main("speedup", __doc__, rows)
+
+
+if __name__ == "__main__":
+    main()

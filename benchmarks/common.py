@@ -1,0 +1,51 @@
+"""Shared CLI for the ``rows()``-only bench modules.
+
+`bench_speedup`, `bench_convergence`, `bench_noise` and `roofline`
+predate the telemetry layer: they expose ``rows()`` for the
+``benchmarks.run`` driver but had no entry point of their own, so a
+standalone invocation could neither trace nor emit the perf-gate JSON.
+:func:`rows_main` is the one adapter — the shared ``--trace`` flag
+(``repro.obs.add_trace_arg``) plus ``--emit-json`` routed through
+``repro.obs.emit_bench_json``, the single writer whose schema
+``scripts/perf_gate.py`` gates — so every benchmark in the repo emits
+uniform JSON and spans whichever way it is launched.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.obs import recorder as obs
+
+Row = Tuple[str, float, str]
+
+
+def rows_main(key: str, doc: Optional[str],
+              rows_fn: Callable[[], List[Row]],
+              argv: Optional[Sequence[str]] = None) -> None:
+    """Run one bench module standalone: print the ``name,value,derived``
+    CSV (the same rows ``benchmarks.run`` would collect), honour
+    ``--trace`` (suite span + counters into a JSONL trace) and
+    ``--emit-json`` (perf-gate schema; default file ``BENCH_<key>.json``
+    when the flag is given bare)."""
+    ap = argparse.ArgumentParser(description=doc)
+    default_json = f"BENCH_{key}.json"
+    ap.add_argument("--emit-json", dest="json_out", nargs="?",
+                    const=default_json, default=None,
+                    help=f"write rows as perf-gate JSON "
+                         f"(default {default_json})")
+    obs.add_trace_arg(ap)
+    args = ap.parse_args(argv)
+
+    rec = obs.activate_trace(args)
+    try:
+        with obs.get_recorder().span("bench.suite", key=key):
+            rs = rows_fn()
+        print("name,value,derived")
+        for name, value, derived in rs:
+            print(f"{name},{value:.6g},{derived}", flush=True)
+        if args.json_out:
+            obs.emit_bench_json(rs, args.json_out)
+            print(f"# wrote {args.json_out}", flush=True)
+    finally:
+        obs.finish_trace(rec)

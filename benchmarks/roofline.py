@@ -205,3 +205,12 @@ def rows():
             f"coll={r['collective_s'] * 1e3:.2f}ms "
             f"useful={r['useful_flops_ratio']:.2f}"))
     return out
+
+
+def main() -> None:
+    from benchmarks.common import rows_main
+    rows_main("roofline", __doc__, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,8 @@ Prints ``name,value,derived`` CSV rows:
   codecs  codec frontier: convergence vs bits/param   (bench_codecs)
   federated  streamed population engine: sampling,
              churn, weighted votes, 100k-client bound  (bench_federated)
+  serving  continuous vs static batching, hot swap,
+           one-compile + bit-identity gates            (bench_serving)
   roofline  per-cell terms from the dry-run artifacts (roofline)
 
 ``--emit-json FILE`` additionally writes every produced row as JSON —
@@ -33,7 +35,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated module keys "
                          "(fig1..fig6,codecs,vote_plan,federated,"
-                         "roofline)")
+                         "serving,roofline)")
     ap.add_argument("--list", action="store_true",
                     help="enumerate the registered suites (key, module, "
                          "one-line description) and exit")
@@ -45,12 +47,14 @@ def main() -> None:
 
     from benchmarks import (bench_codecs, bench_comm, bench_convergence,
                             bench_federated, bench_noise, bench_robustness,
-                            bench_speedup, bench_vote_plan, roofline)
+                            bench_serving, bench_speedup, bench_vote_plan,
+                            roofline)
     suites = {
         "fig1": bench_convergence, "fig2": bench_noise, "fig3": bench_noise,
         "fig4": bench_robustness, "fig5": bench_comm, "fig6": bench_speedup,
         "codecs": bench_codecs, "vote_plan": bench_vote_plan,
-        "federated": bench_federated, "roofline": roofline,
+        "federated": bench_federated, "serving": bench_serving,
+        "roofline": roofline,
     }
     if args.list:
         for key, mod in suites.items():

@@ -12,7 +12,12 @@
 # the tier-2 lane via tests/tier2/test_plan_drills.py), the federated
 # smoke (streamed population engine: sampling/churn/dataset-weighted
 # drills, streamed==dense gate, 100k-client memory-bound row,
-# BENCH_federated.json baseline written, <10 s), and the perf gate
+# BENCH_federated.json baseline written, <10 s), the serving smoke
+# (continuous-batching serve engine: continuous vs static goodput,
+# prefill==inline and traced==untraced bit-identity, hot-swap
+# zero-dropped + fresh-oracle gates, one decode-step compile across
+# all lanes, BENCH_serving.json baseline written, <10 s), and the
+# perf gate
 # (scripts/perf_gate.py: fresh smoke JSONs vs the committed
 # BENCH_*.json baselines — >15% timing regression or any bit-identity
 # row change fails), and the obs smoke (telemetry layer end to end:
@@ -52,7 +57,8 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 # committed after the lanes finish (one bench run total, not two)
 PERF_BASE="$(mktemp -d)"
 trap 'rm -rf "$PERF_BASE"' EXIT
-cp BENCH_codecs.json BENCH_vote_plan.json BENCH_federated.json "$PERF_BASE/"
+cp BENCH_codecs.json BENCH_vote_plan.json BENCH_federated.json \
+   BENCH_serving.json "$PERF_BASE/"
 
 echo "== codec smoke (8-virtual-device platform; writes BENCH_codecs.json) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -75,6 +81,13 @@ echo "== federated smoke (streamed population engine; writes BENCH_federated.jso
 # materialized sign rows <= chunk size, never O(M)); <10 s
 python -m benchmarks.bench_federated --smoke
 
+echo "== serving smoke (continuous-batching engine; writes BENCH_serving.json) =="
+# continuous vs static goodput at equal offered load, prefill==inline
+# and traced==untraced bit-identity, the hot-swap zero-dropped +
+# fresh-oracle gates, and the one-decode-compile row (static shapes
+# across admissions/retirements/swaps); <10 s
+python -m benchmarks.bench_serving --smoke
+
 echo "== perf gate (fresh smoke numbers vs committed baselines) =="
 # >15% regression on any *_ms timing row, or ANY change on a
 # bit-identity/accounting row, fails the build; improvements pass
@@ -85,6 +98,8 @@ python scripts/perf_gate.py \
   --baseline "$PERF_BASE/BENCH_vote_plan.json" --fresh BENCH_vote_plan.json
 python scripts/perf_gate.py \
   --baseline "$PERF_BASE/BENCH_federated.json" --fresh BENCH_federated.json
+python scripts/perf_gate.py \
+  --baseline "$PERF_BASE/BENCH_serving.json" --fresh BENCH_serving.json
 
 echo "== obs smoke (telemetry layer: traced drill -> JSONL -> report) =="
 # 5-step traced bucketed-overlap scenario; asserts the golden digest is

@@ -5,6 +5,16 @@ production mesh in the dry-run):
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced \\
       --batch 4 --prompt-len 32 --gen 16
+
+``--engine`` switches from the fixed-batch loop to the continuous-
+batching :class:`repro.serve.ServeEngine` (in-flight admission over a
+recycled slot pool) fed by the deterministic Poisson generator:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced \\
+      --engine --requests 16 --rate 0.5
+
+``--trace FILE`` records obs spans/counters either way (render with
+scripts/trace_report.py).
 """
 from __future__ import annotations
 
@@ -17,7 +27,78 @@ import numpy as np
 
 from repro.configs.base import get_config, reduced_config
 from repro.models import model as M
-from repro.train.serve_step import make_decode_step
+from repro.obs import recorder as obs
+from repro.train.serve_step import make_cache_rehome, make_decode_step
+
+
+def _run_engine(cfg, params, args) -> None:
+    from repro.serve import ServeConfig, ServeEngine, poisson_requests
+
+    max_len = args.prompt_len + args.gen
+    sc = ServeConfig(n_slots=args.batch, max_len=max_len,
+                     prompt_pad=args.prompt_len,
+                     temperature=args.temperature, seed=args.seed)
+    eng = ServeEngine(cfg, params, sc)
+    reqs = poisson_requests(
+        n_requests=args.requests, rate=args.rate,
+        vocab_size=cfg.vocab_size, prompt_lens=(args.prompt_len,),
+        gen_range=(args.gen, args.gen), seed=args.seed)
+    t0 = time.time()
+    rep = eng.run(reqs)
+    dt = time.time() - t0
+    print(f"engine: {rep.completed}/{rep.n_requests} requests, "
+          f"{rep.total_tokens} tokens in {rep.ticks} ticks "
+          f"({dt:.2f}s, goodput {rep.goodput_tokens_per_tick:.2f} "
+          f"tok/tick, occupancy {rep.occupancy_mean:.2f})")
+    print(f"latency ticks p50/p95/p99: {rep.latency_p50:.1f}/"
+          f"{rep.latency_p95:.1f}/{rep.latency_p99:.1f}  "
+          f"ttft p50: {rep.ttft_p50:.1f}")
+    first = min(rep.records)
+    print("sampled token ids (first request):",
+          rep.records[first].tokens)
+
+
+def _run_batch(cfg, params, args) -> None:
+    rec = obs.get_recorder()
+    key = jax.random.PRNGKey(args.seed)
+    batch = M.make_batch(cfg, args.batch, args.prompt_len, key)
+
+    max_len = args.prompt_len + args.gen
+    # prefill token-by-token through the decode path for recurrent archs;
+    # transformer archs use the batched prefill
+    t0 = time.time()
+    with rec.span("serve.prefill", batch=args.batch,
+                  prompt_len=args.prompt_len):
+        logits, cache = jax.jit(
+            lambda p, b: M.prefill(cfg, p, b))(params, batch)
+        # one jitted re-home into the max_len decode cache (recurrent
+        # state passes through, seq leaves land at the origin)
+        cache = make_cache_rehome(cfg, args.batch, max_len)(cache)
+    prefill_s = time.time() - t0
+    print(f"prefill: {args.batch}x{args.prompt_len} in {prefill_s:.2f}s")
+
+    decode = make_decode_step(cfg)
+    tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    out = [tokens]
+    t0 = time.time()
+    with rec.span("serve.decode", steps=args.gen):
+        for i in range(args.gen):
+            pos = jnp.int32(args.prompt_len + i)
+            logits_t, cache = decode(params, tokens, cache, pos)
+            if args.temperature > 0:
+                key, sub = jax.random.split(key)
+                tokens = jax.random.categorical(
+                    sub, logits_t / args.temperature, axis=-1
+                ).astype(jnp.int32)[:, None]
+            else:
+                tokens = jnp.argmax(logits_t, axis=-1
+                                    ).astype(jnp.int32)[:, None]
+            out.append(tokens)
+    gen_s = time.time() - t0
+    toks = jnp.concatenate(out, axis=1)
+    print(f"decode: {args.gen} steps x batch {args.batch} in {gen_s:.2f}s "
+          f"({args.gen * args.batch / max(gen_s, 1e-9):.1f} tok/s)")
+    print("sampled token ids (first row):", np.asarray(toks)[0].tolist())
 
 
 def main() -> None:
@@ -29,53 +110,29 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous batching via repro.serve.ServeEngine "
+                         "(slot pool of --batch, in-flight admission)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="--engine: number of Poisson requests")
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="--engine: offered load in requests/tick")
+    obs.add_trace_arg(ap)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_config(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = M.init_params(cfg, key)
-    batch = M.make_batch(cfg, args.batch, args.prompt_len, key)
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
 
-    max_len = args.prompt_len + args.gen
-    # prefill token-by-token through the decode path for recurrent archs;
-    # transformer archs use the batched prefill
-    t0 = time.time()
-    logits, cache = jax.jit(lambda p, b: M.prefill(cfg, p, b))(params, batch)
-    # re-home the cache to max_len for decoding
-    cache_full = M.init_cache(cfg, args.batch, max_len)
-    if "k" in cache and cache["k"].shape[2] <= max_len:
-        S = cache["k"].shape[2]
-        for kk in cache:
-            cache_full[kk] = jax.lax.dynamic_update_slice(
-                cache_full[kk], cache[kk].astype(cache_full[kk].dtype),
-                (0,) * 2 + (0,) * (cache_full[kk].ndim - 2))
-    else:
-        cache_full = cache
-    prefill_s = time.time() - t0
-    print(f"prefill: {args.batch}x{args.prompt_len} in {prefill_s:.2f}s")
-
-    decode = make_decode_step(cfg)
-    tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    out = [tokens]
-    t0 = time.time()
-    for i in range(args.gen):
-        pos = jnp.int32(args.prompt_len + i)
-        logits_t, cache_full = decode(params, tokens, cache_full, pos)
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tokens = jax.random.categorical(
-                sub, logits_t / args.temperature, axis=-1
-            ).astype(jnp.int32)[:, None]
+    rec = obs.activate_trace(args)
+    try:
+        if args.engine:
+            _run_engine(cfg, params, args)
         else:
-            tokens = jnp.argmax(logits_t, axis=-1).astype(jnp.int32)[:, None]
-        out.append(tokens)
-    gen_s = time.time() - t0
-    toks = jnp.concatenate(out, axis=1)
-    print(f"decode: {args.gen} steps x batch {args.batch} in {gen_s:.2f}s "
-          f"({args.gen * args.batch / max(gen_s, 1e-9):.1f} tok/s)")
-    print("sampled token ids (first row):", np.asarray(toks)[0].tolist())
+            _run_batch(cfg, params, args)
+    finally:
+        obs.finish_trace(rec)
 
 
 if __name__ == "__main__":

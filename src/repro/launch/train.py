@@ -62,6 +62,12 @@ def main() -> None:
     ap.add_argument("--adversaries", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--serve-dir", default=None,
+                    help="publish params-only serving checkpoints here "
+                         "(repro.serve.CheckpointWatcher hot-swaps them "
+                         "into a live ServeEngine)")
+    ap.add_argument("--serve-every", type=int, default=50,
+                    help="publish to --serve-dir every N steps")
     ap.add_argument("--watchdog-s", type=float, default=600.0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
@@ -79,6 +85,11 @@ def main() -> None:
     params, opt_state = TS.materialize_state(
         cfg, tcfg, art, jax.random.PRNGKey(args.seed))
     pipe = SyntheticLMPipeline(cfg, args.batch, args.seq, seed=args.seed)
+
+    emitter = None
+    if args.serve_dir:
+        from repro.serve import CheckpointEmitter
+        emitter = CheckpointEmitter(args.serve_dir)
 
     ckpt: Optional[AsyncCheckpointer] = None
     start_step = 0
@@ -114,10 +125,15 @@ def main() -> None:
         if ckpt and (step + 1) % args.ckpt_every == 0:
             ckpt.save(step, params, opt_state, pipe.checkpoint(),
                       meta={"arch": args.arch, "step": step})
+        if emitter and (step + 1) % args.serve_every == 0:
+            with rec.span("serve.emit", step=step):
+                emitter.emit(step, params, meta={"arch": args.arch})
     if ckpt:
         ckpt.save(args.steps - 1, params, opt_state, pipe.checkpoint(),
                   meta={"arch": args.arch, "step": args.steps - 1})
         ckpt.wait()
+    if emitter and args.steps % args.serve_every != 0:
+        emitter.emit(args.steps - 1, params, meta={"arch": args.arch})
     obs.finish_trace(trace_rec)
     print("done.")
 

@@ -1,0 +1,18 @@
+"""Continuous-batching serve engine + hot checkpoint swap (DESIGN.md §14).
+
+The serving counterpart of the training stack: a fixed decode-slot pool
+under one jitted step (``engine``), deterministic splitmix64-keyed
+Poisson traffic (``traffic``), and the trainer->server parameter
+handoff over atomic checkpoints (``swap``).
+"""
+from repro.serve.engine import (RequestRecord, ServeConfig, ServeEngine,
+                                ServeReport)
+from repro.serve.swap import (CheckpointEmitter, CheckpointWatcher,
+                              ParamUpdate, like_tree)
+from repro.serve.traffic import Request, poisson_requests
+
+__all__ = [
+    "CheckpointEmitter", "CheckpointWatcher", "ParamUpdate", "Request",
+    "RequestRecord", "ServeConfig", "ServeEngine", "ServeReport",
+    "like_tree", "poisson_requests",
+]

@@ -1,0 +1,563 @@
+"""Continuous-batching serve engine (DESIGN.md §14).
+
+A fixed pool of decode *slots* under ONE jitted decode step: finished
+sequences retire (EOS / generation budget / cache exhaustion) and queued
+prompts are admitted mid-flight, yet the compiled program never changes
+— every array in the engine state has a static shape keyed only to
+``(n_slots, max_len, prompt_pad)``, and per-slot scheduling is carried
+by *values* (position / length / budget vectors and an active mask),
+never by shapes. The obs compile counters prove it: a whole serve run —
+admissions, retirements, a hot parameter swap — performs exactly one
+``serve.decode.compiles`` increment (`benchmarks/bench_serving.py`
+gates this row).
+
+Slot recycling is safe without clearing attention caches because decode
+attends under a ``kv_pos <= pos`` mask and writes position ``pos``
+before the mask ever permits reading it — a recycled slot overwrites
+each stale KV row strictly before its new occupant can attend to it.
+Recurrent leaves (``ssm``/``conv``) carry no position mask, so
+:func:`_serve_fns` zeroes exactly those lanes at admission.
+
+Two admission paths share one sampling rule (so they are bit-identical
+and the tests cross-check them):
+
+* ``inline`` — prompt tokens are streamed through the decode step one
+  per tick; universal (works for SSM / hybrid state too).
+* ``prefill`` — the prompt runs through ``model.prefill`` at a padded
+  bucket length and the produced cache is written into the slot with a
+  slot-indexed ``dynamic_update_slice``; right-padding is harmless
+  because causal attention never reads past ``plen - 1`` for the first
+  token, and decode overwrites each padded KV row before attending to
+  it. Transformer-family only (``model.prefill`` returns unpopulated
+  state for recurrent archs).
+
+Hot checkpoint swap: :meth:`ServeEngine.swap` replaces the parameter
+tree *between* decode ticks. Slot state (cache included) is donated
+through every step, the decode jit is keyed on shapes only, and
+requests never reference parameters outside the step — so a swap drops
+nothing in flight and triggers no recompile; step records carry the
+``param_version`` tag so traces show which params produced which
+tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchFamily, ModelConfig
+from repro.models import model as M
+from repro.obs import recorder as obs
+from repro.serve.traffic import Request
+
+#: cache leaves holding recurrent state — no position mask protects
+#: them, so admission must zero the slot's lane (attention leaves are
+#: protected by the write-before-read ``kv_pos <= pos`` discipline)
+_RECURRENT_LEAVES = ("ssm", "conv")
+
+#: families whose ``model.prefill`` returns a populated cache
+_PREFILL_FAMILIES = (ArchFamily.DENSE, ArchFamily.MOE, ArchFamily.VLM)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Static engine shape + policy. Every field is part of the jit
+    key (via the lru-cached :func:`_serve_fns` builder), so two engines
+    with equal configs share one compiled decode step."""
+
+    n_slots: int = 4
+    max_len: int = 64              # KV/position capacity per slot
+    prompt_pad: int = 32           # prompt buffer width (inline path)
+    temperature: float = 0.0       # <=0 -> greedy argmax
+    seed: int = 0                  # sampling PRNG root (keyed per req/pos)
+    eos_id: Optional[int] = None   # None -> retire on budget only
+    admit: str = "inline"          # "inline" | "prefill"
+    scheduler: str = "continuous"  # "continuous" | "static"
+    prefill_buckets: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {self.n_slots}")
+        if not (1 <= self.prompt_pad <= self.max_len):
+            raise ValueError(
+                f"need 1 <= prompt_pad <= max_len, got prompt_pad="
+                f"{self.prompt_pad}, max_len={self.max_len}")
+        if self.admit not in ("inline", "prefill"):
+            raise ValueError(f"admit must be 'inline' or 'prefill', "
+                             f"got {self.admit!r}")
+        if self.scheduler not in ("continuous", "static"):
+            raise ValueError(f"scheduler must be 'continuous' or "
+                             f"'static', got {self.scheduler!r}")
+        if self.admit == "prefill":
+            b = self.prefill_buckets
+            if not b or tuple(sorted(b)) != tuple(b) or b[0] < 1 \
+                    or b[-1] > self.max_len:
+                raise ValueError(
+                    "prefill admission needs ascending prefill_buckets "
+                    f"within [1, max_len], got {b}")
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Host-side lifecycle of one request (ticks are engine-loop
+    rounds; ``arrival`` keeps the generator's fractional tick)."""
+
+    req_id: int
+    arrival: float
+    admit_tick: int = -1
+    first_token_tick: int = -1
+    finish_tick: int = -1
+    slot: int = -1
+    param_version_admit: int = -1
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def finished(self) -> bool:
+        return self.finish_tick >= 0
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_tick - self.arrival
+
+    @property
+    def latency(self) -> float:
+        return self.finish_tick - self.arrival
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """One run's outcome. Everything except occupancy is derived from
+    the deterministic tick schedule, so equal seeds give equal reports
+    bit for bit (the perf gate's exact rows rely on this)."""
+
+    ticks: int
+    n_requests: int
+    completed: int
+    dropped: int
+    total_tokens: int
+    goodput_tokens_per_tick: float
+    ttft_p50: float
+    latency_p50: float
+    latency_p95: float
+    latency_p99: float
+    tpot_mean: float
+    occupancy_mean: float
+    swaps: int
+    records: Dict[int, RequestRecord]
+
+    def tokens_by_request(self) -> Dict[int, Tuple[int, ...]]:
+        """req_id -> sampled token ids (the bit-identity surface the
+        traced-vs-untraced and swap-oracle gates compare)."""
+        return {rid: tuple(r.tokens) for rid, r in
+                sorted(self.records.items())}
+
+
+def _percentile(xs: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile — integer index into the sorted sample,
+    no interpolation, so the value is exactly reproducible."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    i = min(len(s) - 1, max(0, math.ceil(q / 100.0 * len(s)) - 1))
+    return float(s[i])
+
+
+# ---------------------------------------------------------------------------
+# the compiled kernel set (shared across engines via lru_cache)
+# ---------------------------------------------------------------------------
+
+
+class _ServeFns:
+    """The jitted callables for one (cfg, ServeConfig) key: ``step``,
+    ``admit`` and per-bucket ``admit_prefill_for(Lb)``. Built once per
+    key; every :class:`ServeEngine` with equal configs reuses the same
+    instance (hence the same XLA executables — the one-compile
+    acceptance row holds across engine instances, not just ticks)."""
+
+    def __init__(self, cfg: ModelConfig, sc: ServeConfig):
+        self.cfg, self.sc = cfg, sc
+        self._prefill: Dict[int, Callable] = {}
+        n_slots, max_len = sc.n_slots, sc.max_len
+        prompt_pad = sc.prompt_pad
+
+        def _slot_decode(params, tok, cache_b, pos):
+            # one lane: re-add the batch=1 axis the model API expects
+            # (cache leaves are (L, B, ...) — B sits at axis 1)
+            cache1 = {k: v[:, None] for k, v in cache_b.items()}
+            logits, cache1 = M.decode_step(
+                cfg, params, tok[None, None], cache1, pos)
+            return logits[0], {k: v[:, 0] for k, v in cache1.items()}
+
+        vdecode = jax.vmap(_slot_decode, in_axes=(None, 0, 1, 0),
+                           out_axes=(0, 1))
+
+        def _sample_one(logits, req, pos):
+            """One slot's next token. The key depends only on
+            (seed, req_id, position), so inline and prefill admission
+            sample identically and replays are order-independent."""
+            if sc.temperature <= 0.0:
+                return jnp.argmax(logits).astype(jnp.int32)
+            k = jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(sc.seed), req), pos)
+            return jax.random.categorical(
+                k, logits / sc.temperature).astype(jnp.int32)
+
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def step(params, state):
+            # trace-time increment == compiles (recorder.py contract)
+            obs.COUNTERS.inc("serve.decode.compiles")
+            pos, active = state["pos"], state["active"]
+            logits, cache = vdecode(params, state["tokens"],
+                                    state["cache"], pos)
+            nxt = jax.vmap(_sample_one)(logits, state["req"], pos)
+            in_prompt = (pos + 1) < state["plen"]
+            emit = active & ~in_prompt
+            gen = state["gen"] + emit.astype(jnp.int32)
+            stop = gen >= state["max_gen"]
+            if sc.eos_id is not None:
+                stop = stop | (nxt == sc.eos_id)
+            done = active & ((emit & stop) | (pos + 1 >= max_len))
+            nactive = active & ~done
+            idx = jnp.minimum(pos + 1, prompt_pad - 1)
+            prompt_next = jnp.take_along_axis(
+                state["prompts"], idx[:, None], axis=1)[:, 0]
+            fed = jnp.where(in_prompt, prompt_next, nxt)
+            out = {"tok": nxt, "emit": emit, "done": done}
+            return {
+                "cache": cache,
+                "tokens": jnp.where(active, fed, state["tokens"]),
+                "pos": jnp.where(nactive, pos + 1, pos),
+                "plen": state["plen"],
+                "gen": gen,
+                "max_gen": state["max_gen"],
+                "req": state["req"],
+                "active": nactive,
+                "prompts": state["prompts"],
+            }, out
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def admit(state, slot, prompt, plen, max_gen, req):
+            obs.COUNTERS.inc("serve.admit.compiles")
+            cache = dict(state["cache"])
+            for k in _RECURRENT_LEAVES:
+                if k in cache:
+                    cache[k] = cache[k].at[:, slot].set(0)
+            return {
+                "cache": cache,
+                "tokens": state["tokens"].at[slot].set(prompt[0]),
+                "pos": state["pos"].at[slot].set(0),
+                "plen": state["plen"].at[slot].set(plen),
+                "gen": state["gen"].at[slot].set(0),
+                "max_gen": state["max_gen"].at[slot].set(max_gen),
+                "req": state["req"].at[slot].set(req),
+                "active": state["active"].at[slot].set(True),
+                "prompts": state["prompts"].at[slot].set(prompt),
+            }
+
+        self.step = step
+        self.admit = admit
+        self._sample_one = _sample_one
+        self._max_len = max_len
+
+    def admit_prefill_for(self, lb: int) -> Callable:
+        """The jitted prefill-admission for bucket length ``lb`` (one
+        compile per bucket, cached for the life of the fns object)."""
+        fn = self._prefill.get(lb)
+        if fn is not None:
+            return fn
+        cfg, sc, max_len = self.cfg, self.sc, self._max_len
+        sample_one = self._sample_one
+
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def admitp(params, state, slot, prompt, plen, max_gen, req):
+            obs.COUNTERS.inc("serve.prefill.compiles")
+            logits, pcache = M.prefill(cfg, params,
+                                       {"tokens": prompt[:lb][None]})
+            cache = {}
+            for k, v in state["cache"].items():
+                src = pcache[k].astype(v.dtype)
+                starts = (0, slot) + (0,) * (v.ndim - 2)
+                cache[k] = jax.lax.dynamic_update_slice(v, src, starts)
+            lg = jax.lax.dynamic_index_in_dim(logits[0], plen - 1,
+                                              axis=0, keepdims=False)
+            first = sample_one(lg, req, plen - 1)
+            stop = max_gen <= 1
+            if sc.eos_id is not None:
+                stop = stop | (first == sc.eos_id)
+            done0 = stop | (plen >= max_len)
+            return {
+                "cache": cache,
+                "tokens": state["tokens"].at[slot].set(first),
+                "pos": state["pos"].at[slot].set(plen),
+                "plen": state["plen"].at[slot].set(plen),
+                "gen": state["gen"].at[slot].set(1),
+                "max_gen": state["max_gen"].at[slot].set(max_gen),
+                "req": state["req"].at[slot].set(req),
+                "active": state["active"].at[slot].set(~done0),
+                "prompts": state["prompts"].at[slot].set(prompt),
+            }, {"tok": first, "done": done0}
+
+        self._prefill[lb] = admitp
+        return admitp
+
+
+@functools.lru_cache(maxsize=None)
+def _serve_fns_cached(cfg: ModelConfig, n_slots: int, max_len: int,
+                      prompt_pad: int, temperature: float, seed: int,
+                      eos_id: Optional[int]) -> _ServeFns:
+    return _ServeFns(cfg, ServeConfig(
+        n_slots=n_slots, max_len=max_len, prompt_pad=prompt_pad,
+        temperature=temperature, seed=seed, eos_id=eos_id))
+
+
+def _serve_fns(cfg: ModelConfig, sc: ServeConfig) -> _ServeFns:
+    """One kernel set per (model config, engine *shape+sampling*) key.
+
+    ``admit`` and ``scheduler`` are host-side policy — they pick which
+    compiled callables run, never what they compute — so they are
+    deliberately NOT part of the key: the static-batching baseline and
+    a prefill-admission engine reuse the continuous engine's decode
+    executable (the bench's one-compile row counts across all lanes).
+    """
+    return _serve_fns_cached(cfg, sc.n_slots, sc.max_len, sc.prompt_pad,
+                             sc.temperature, sc.seed, sc.eos_id)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class ServeEngine:
+    """The host-side scheduler over the compiled kernel set: admits
+    arrived requests into free slots, runs one decode tick for the
+    whole pool, reads back (token, emit, done) flags, retires finished
+    slots, and swaps parameters between ticks."""
+
+    def __init__(self, cfg: ModelConfig, params: Any,
+                 serve_cfg: ServeConfig = ServeConfig(), *,
+                 param_version: int = 0, watcher: Any = None):
+        if cfg.family == ArchFamily.AUDIO:
+            raise ValueError(
+                "ServeEngine serves token prompts; AUDIO archs need "
+                "encoder features per request (use launch/serve.py)")
+        if serve_cfg.admit == "prefill" \
+                and cfg.family not in _PREFILL_FAMILIES:
+            raise ValueError(
+                f"prefill admission needs a populated model.prefill "
+                f"cache; {cfg.family.name} is recurrent — use "
+                f"admit='inline'")
+        self.cfg = cfg
+        self.sc = serve_cfg
+        self.params = params
+        self.param_version = int(param_version)
+        self.watcher = watcher
+        self.fns = _serve_fns(cfg, serve_cfg)
+        self._state = self._init_state()
+        self._slot_req: List[Optional[int]] = [None] * serve_cfg.n_slots
+
+    def _init_state(self) -> Dict[str, jax.Array]:
+        sc = self.sc
+        n = sc.n_slots
+        return {
+            "cache": M.init_cache(self.cfg, n, sc.max_len),
+            "tokens": jnp.zeros((n,), jnp.int32),
+            "pos": jnp.zeros((n,), jnp.int32),
+            "plen": jnp.ones((n,), jnp.int32),
+            "gen": jnp.zeros((n,), jnp.int32),
+            "max_gen": jnp.ones((n,), jnp.int32),
+            "req": jnp.zeros((n,), jnp.int32),
+            "active": jnp.zeros((n,), bool),
+            "prompts": jnp.zeros((n, sc.prompt_pad), jnp.int32),
+        }
+
+    # -- parameter swap --
+
+    def swap(self, params: Any, version: int) -> None:
+        """Install a new parameter tree between ticks. Nothing in slot
+        state references the old params, so in-flight requests simply
+        continue under the new ones at their next decode tick."""
+        rec = obs.get_recorder()
+        with rec.span("serve.swap", version=int(version)):
+            self.params = jax.tree.map(jnp.asarray, params)
+        self.param_version = int(version)
+        obs.COUNTERS.inc("serve.swaps")
+
+    def _poll_watcher(self) -> None:
+        upd = self.watcher.poll()
+        if upd is not None and upd.version != self.param_version:
+            self.swap(upd.params, upd.version)
+
+    # -- admission --
+
+    def _validate(self, r: Request) -> None:
+        sc = self.sc
+        cap = (sc.prefill_buckets[-1] if sc.admit == "prefill"
+               else sc.prompt_pad)
+        if not (1 <= r.prompt_len <= cap):
+            raise ValueError(
+                f"request {r.req_id}: prompt length {r.prompt_len} "
+                f"outside [1, {cap}]")
+        if r.prompt_len >= sc.max_len:
+            raise ValueError(
+                f"request {r.req_id}: prompt length {r.prompt_len} "
+                f"leaves no room to generate within max_len="
+                f"{sc.max_len}")
+
+    def _admit_one(self, r: Request, slot: int, t: int,
+                   records: Dict[int, RequestRecord]) -> int:
+        """Admit one request into a free slot; returns 1 if it finished
+        at admission (prefill hit EOS/budget on the first token)."""
+        rec = obs.get_recorder()
+        sc = self.sc
+        plen = r.prompt_len
+        eff_gen = min(r.max_gen, sc.max_len - plen)
+        prompt = np.zeros((sc.prompt_pad,), np.int32)
+        prompt[:plen] = r.prompt
+        row = RequestRecord(req_id=r.req_id, arrival=r.arrival,
+                            admit_tick=t, slot=slot,
+                            param_version_admit=self.param_version)
+        records[r.req_id] = row
+        obs.COUNTERS.inc("serve.admissions")
+        if sc.admit == "prefill":
+            lb = next(b for b in sc.prefill_buckets if b >= plen)
+            with rec.span("serve.prefill", req=r.req_id, bucket=lb):
+                self._state, out = self.fns.admit_prefill_for(lb)(
+                    self.params, self._state, slot, prompt, plen,
+                    eff_gen, r.req_id)
+                out = jax.device_get(out)
+            row.tokens.append(int(out["tok"]))
+            row.first_token_tick = t
+            obs.COUNTERS.inc("serve.tokens")
+            if bool(out["done"]):
+                row.finish_tick = t
+                obs.COUNTERS.inc("serve.retired")
+                return 1
+        else:
+            with rec.span("serve.admit", req=r.req_id):
+                self._state = self.fns.admit(
+                    self._state, slot, prompt, plen, eff_gen, r.req_id)
+        self._slot_req[slot] = r.req_id
+        return 0
+
+    def _admit_arrived(self, queue: deque, t: int,
+                       records: Dict[int, RequestRecord]) -> int:
+        """Fill free slots from the arrived queue; returns the number
+        of requests that finished at admission. The static scheduler
+        only admits into an EMPTY pool (the whole batch completes
+        together — the baseline continuous batching beats)."""
+        free = [i for i, s in enumerate(self._slot_req) if s is None]
+        if self.sc.scheduler == "static" \
+                and len(free) < self.sc.n_slots:
+            return 0
+        finished = 0
+        for slot in free:
+            if not queue or queue[0].arrival > t:
+                break
+            finished += self._admit_one(queue.popleft(), slot, t,
+                                        records)
+        return finished
+
+    # -- the run loop --
+
+    def run(self, requests: Sequence[Request], *,
+            max_ticks: int = 100_000,
+            on_tick: Optional[Callable[["ServeEngine", int], None]] = None
+            ) -> ServeReport:
+        """Serve ``requests`` to completion (or ``max_ticks``). One
+        tick = optional watcher poll + admissions + one pooled decode
+        step + retirement readback. Deterministic: equal (requests,
+        config, params) give bit-identical reports, traced or not."""
+        for r in requests:
+            self._validate(r)
+        rec = obs.get_recorder()
+        queue = deque(sorted(requests,
+                             key=lambda r: (r.arrival, r.req_id)))
+        records: Dict[int, RequestRecord] = {}
+        remaining = len(queue)
+        swaps0 = obs.COUNTERS.get("serve.swaps")
+        occupancy_ticks = 0
+        t = 0
+        while remaining > 0 and t < max_ticks:
+            if on_tick is not None:
+                on_tick(self, t)
+            if self.watcher is not None:
+                self._poll_watcher()
+            remaining -= self._admit_arrived(queue, t, records)
+            n_active = sum(s is not None for s in self._slot_req)
+            emitted = 0
+            if n_active:
+                with rec.span("serve.decode", tick=t):
+                    self._state, out = self.fns.step(self.params,
+                                                     self._state)
+                    out = jax.device_get(out)
+                emitted, retired = self._collect(out, t, records)
+                remaining -= retired
+            occupancy_ticks += n_active
+            obs.COUNTERS.inc("serve.ticks")
+            obs.COUNTERS.inc("serve.slot_occupancy_ticks", n_active)
+            if rec.enabled:
+                rec.step(kind_detail="serve", tick=t, active=n_active,
+                         emitted=emitted,
+                         param_version=self.param_version)
+            t += 1
+        # prefill-admitted tokens are counted at admission, not decode
+        total_tokens = sum(len(r.tokens) for r in records.values())
+        return self._report(records, len(requests), t, total_tokens,
+                            occupancy_ticks,
+                            obs.COUNTERS.get("serve.swaps") - swaps0)
+
+    def _collect(self, out: Dict[str, np.ndarray], t: int,
+                 records: Dict[int, RequestRecord]) -> Tuple[int, int]:
+        rec = obs.get_recorder()
+        tok, emit, done = out["tok"], out["emit"], out["done"]
+        emitted = retired = 0
+        for slot, rid in enumerate(self._slot_req):
+            if rid is None:
+                continue
+            row = records[rid]
+            if emit[slot]:
+                if row.first_token_tick < 0:
+                    row.first_token_tick = t
+                row.tokens.append(int(tok[slot]))
+                emitted += 1
+            if done[slot]:
+                with rec.span("serve.retire", req=rid, tick=t):
+                    row.finish_tick = t
+                    self._slot_req[slot] = None
+                retired += 1
+                obs.COUNTERS.inc("serve.retired")
+        obs.COUNTERS.inc("serve.tokens", emitted)
+        return emitted, retired
+
+    def _report(self, records, n_requests, ticks, total_tokens,
+                occupancy_ticks, swaps) -> ServeReport:
+        fin = [r for r in records.values() if r.finished]
+        lat = [r.latency for r in fin]
+        tpots = [(r.finish_tick - r.first_token_tick)
+                 / (len(r.tokens) - 1)
+                 for r in fin if len(r.tokens) > 1]
+        denom = max(ticks, 1)
+        return ServeReport(
+            ticks=ticks,
+            n_requests=n_requests,
+            completed=len(fin),
+            dropped=n_requests - len(fin),
+            total_tokens=total_tokens,
+            goodput_tokens_per_tick=total_tokens / denom,
+            ttft_p50=_percentile([r.ttft for r in fin], 50),
+            latency_p50=_percentile(lat, 50),
+            latency_p95=_percentile(lat, 95),
+            latency_p99=_percentile(lat, 99),
+            tpot_mean=(sum(tpots) / len(tpots)) if tpots else 0.0,
+            occupancy_mean=occupancy_ticks
+            / (denom * self.sc.n_slots),
+            swaps=swaps,
+            records=records,
+        )

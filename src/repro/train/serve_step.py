@@ -93,6 +93,49 @@ def make_decode_step(cfg: ModelConfig):
     return step
 
 
+def make_cache_rehome(cfg: ModelConfig, batch: int, max_len: int):
+    """One jitted re-home of a prefill cache into a fresh ``max_len``
+    cache, keyed on leaf kind by *shape*, not by name:
+
+    * leaves already at the target shape (recurrent ``ssm``/``conv``
+      state, audio cross K/V) pass through untouched — a prompt-length
+      SSM state IS the decode state;
+    * seq-carrying leaves (attention K/V and their int8 scales) are
+      copied into the zero-initialised full-length buffer at the
+      origin, in one compiled program for the whole tree.
+
+    Replaces the old host loop in ``launch/serve.py`` that assumed the
+    attention layout for every leaf (and skipped recurrent caches
+    entirely behind a ``"k" in cache`` gate). A leaf that EXCEEDS the
+    target shape on any dim is a caller error and raises at trace time.
+    """
+    full_abs = jax.eval_shape(lambda: M.init_cache(cfg, batch, max_len))
+
+    @jax.jit
+    def rehome(cache):
+        if set(cache) != set(full_abs):
+            raise ValueError(
+                f"cache structure mismatch: got {sorted(cache)}, "
+                f"serving cache has {sorted(full_abs)}")
+        full = M.init_cache(cfg, batch, max_len)
+        out = {}
+        for k, dst in full.items():
+            src = cache[k].astype(dst.dtype)
+            if src.shape == dst.shape:
+                out[k] = src
+                continue
+            if src.ndim != dst.ndim or any(
+                    s > d for s, d in zip(src.shape, dst.shape)):
+                raise ValueError(
+                    f"cache leaf {k!r} {src.shape} does not fit the "
+                    f"max_len={max_len} serving cache {dst.shape}")
+            out[k] = jax.lax.dynamic_update_slice(
+                dst, src, (0,) * dst.ndim)
+        return out
+
+    return rehome
+
+
 def make_prefill(cfg: ModelConfig, cache_shardings_=None):
     # out_shardings pin the produced cache to its serving layout (batch
     # over data, heads-or-seq over model) — otherwise XLA leaves the scan

@@ -1,0 +1,183 @@
+"""Serving-step coverage: the family-aware cache sharding specs
+(`cache_leaf_spec`/`batch_entry`), the manual-spec stripper, and the
+jitted prefill->decode cache re-home (`make_cache_rehome`)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config, reduced_config
+from repro.models import model as M
+from repro.train.serve_step import (_strip_to_manual, batch_entry,
+                                    cache_leaf_spec, make_cache_rehome)
+
+
+# ---------------------------------------------------------------------------
+# batch_entry
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,sizes,want", [
+    (16, {"pod": 2, "data": 4, "model": 4}, ("pod", "data")),
+    (8, {"data": 4, "model": 4}, "data"),
+    # pod*data does not divide -> falls back to data alone
+    (4, {"pod": 2, "data": 4, "model": 4}, "data"),
+    # nothing divides -> replicate over batch
+    (3, {"data": 4, "model": 4}, None),
+    (1, {"data": 4, "model": 4}, None),
+    # data axis of size 1 never claims the dim
+    (8, {"data": 1, "model": 4}, None),
+])
+def test_batch_entry(b, sizes, want):
+    assert batch_entry(b, sizes) == want
+
+
+# ---------------------------------------------------------------------------
+# cache_leaf_spec: one case per leaf family + fallbacks
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,shape,sizes,want", [
+    # attention K/V (L,B,S,K,hd): heads over model when divisible
+    ("k", (4, 8, 128, 8, 64), {"data": 2, "model": 4},
+     P(None, "data", None, "model", None)),
+    ("attn_v", (4, 8, 128, 8, 64), {"data": 2, "model": 4},
+     P(None, "data", None, "model", None)),
+    # heads not divisible -> sequence over model
+    ("v", (4, 8, 128, 3, 64), {"data": 2, "model": 4},
+     P(None, "data", "model", None, None)),
+    # batch=1 long context: sequence jointly over (data, model)
+    ("k", (4, 1, 1024, 3, 64), {"data": 2, "model": 4},
+     P(None, None, ("data", "model"), None, None)),
+    # batch=1 but sequence not divisible by data*model -> nothing fits
+    ("k", (4, 1, 129, 3, 64), {"data": 2, "model": 4},
+     P(None, None, None, None, None)),
+    # int8 scale leaves (L,B,S,K) mirror the K/V placement
+    ("k_scale", (4, 8, 128, 8), {"data": 2, "model": 4},
+     P(None, "data", None, "model")),
+    ("v_scale", (4, 8, 128, 3), {"data": 2, "model": 4},
+     P(None, "data", "model", None)),
+    ("k_scale", (4, 1, 1024, 3), {"data": 2, "model": 4},
+     P(None, None, ("data", "model"), None)),
+    # SSM state (L,B,H,P,N): heads over model
+    ("ssm", (4, 8, 16, 64, 32), {"data": 2, "model": 4},
+     P(None, "data", "model", None, None)),
+    ("ssm", (4, 8, 6, 64, 32), {"data": 2, "model": 4},
+     P(None, "data", None, None, None)),
+    # conv state (L,B,W-1,CD): channels over model
+    ("conv", (4, 8, 3, 256), {"data": 2, "model": 4},
+     P(None, "data", None, "model")),
+    ("conv", (4, 8, 3, 254), {"data": 2, "model": 4},
+     P(None, "data", None, None)),
+    # unknown leaves replicate
+    ("mystery", (4, 8), {"data": 2, "model": 4}, P()),
+])
+def test_cache_leaf_spec(name, shape, sizes, want):
+    assert cache_leaf_spec(name, shape, sizes) == want
+
+
+# ---------------------------------------------------------------------------
+# _strip_to_manual
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec,manual,want", [
+    (P("data", "model"), ("data",), P("data", None)),
+    (P(("pod", "data"), "model"), ("pod", "data"), P(("pod", "data"), None)),
+    # tuple entries keep only the manual members
+    (P(("data", "model"), None), ("data",), P(("data",), None)),
+    # a tuple with no manual member collapses to None
+    (P(("model",), "data"), ("data",), P(None, "data")),
+    (P(None, "model"), ("data",), P(None, None)),
+])
+def test_strip_to_manual(spec, manual, want):
+    assert _strip_to_manual(spec, manual) == want
+
+
+# ---------------------------------------------------------------------------
+# make_cache_rehome
+# ---------------------------------------------------------------------------
+
+
+def _old_rehome(cfg, cache, batch, max_len):
+    """The seed launch/serve.py host loop (attention-layout assumption
+    and all) — the behaviour the jitted re-home must reproduce on
+    transformer caches."""
+    cache_full = M.init_cache(cfg, batch, max_len)
+    for kk in cache:
+        cache_full[kk] = jax.lax.dynamic_update_slice(
+            cache_full[kk], cache[kk].astype(cache_full[kk].dtype),
+            (0,) * cache_full[kk].ndim)
+    return cache_full
+
+
+def test_rehome_matches_eager_loop_transformer():
+    cfg = reduced_config(get_config("glm4-9b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = M.make_batch(cfg, 2, 8, jax.random.PRNGKey(1))
+    _, cache = M.prefill(cfg, params, batch)
+    got = make_cache_rehome(cfg, 2, 16)(cache)
+    want = _old_rehome(cfg, cache, 2, 16)
+    assert set(got) == set(want)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(want[k]))
+        assert got[k].shape[2] == 16  # seq dim re-homed
+
+
+def test_rehome_passthrough_recurrent():
+    cfg = reduced_config(get_config("mamba2-2.7b"))
+    # SSM state shapes carry no seq dim: the prompt-length state IS the
+    # decode state and must pass through bit-identically (the old loop's
+    # '"k" in cache' gate skipped these entirely)
+    cache = M.init_cache(cfg, 2, 8)
+    cache = {k: jnp.asarray(np.random.default_rng(0).normal(
+        size=v.shape).astype(v.dtype)) for k, v in cache.items()}
+    out = make_cache_rehome(cfg, 2, 32)(cache)
+    for k in cache:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(cache[k]))
+
+
+def test_rehome_rejects_oversize():
+    cfg = reduced_config(get_config("glm4-9b"))
+    cache = M.init_cache(cfg, 2, 32)
+    with pytest.raises(ValueError, match="does not fit"):
+        make_cache_rehome(cfg, 2, 16)(cache)
+
+
+def test_rehome_rejects_structure_mismatch():
+    cfg = reduced_config(get_config("glm4-9b"))
+    cache = M.init_cache(cfg, 2, 8)
+    cache["bogus"] = jnp.zeros((1,))
+    with pytest.raises(ValueError, match="structure mismatch"):
+        make_cache_rehome(cfg, 2, 16)(cache)
+
+
+def test_rehome_decode_continues_correctly():
+    """Decoding from a re-homed cache == decoding from a cache that was
+    prefilled directly at full length (same tokens, same logits)."""
+    cfg = reduced_config(get_config("glm4-9b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = M.make_batch(cfg, 2, 8, jax.random.PRNGKey(1))
+    plen, max_len = 8, 16
+    logits, cache = M.prefill(cfg, params, batch)
+    cache = make_cache_rehome(cfg, 2, max_len)(cache)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+    # oracle: token-by-token through a natively max_len cache
+    oc = M.init_cache(cfg, 2, max_len)
+    otok = batch["tokens"][:, :1]
+    for i in range(plen):
+        ologits, oc = M.decode_step(cfg, params, otok, oc, jnp.int32(i))
+        otok = (batch["tokens"][:, i + 1:i + 2] if i + 1 < plen
+                else jnp.argmax(ologits, axis=-1
+                                ).astype(jnp.int32)[:, None])
+    np.testing.assert_array_equal(np.asarray(otok), np.asarray(tok))
+    for i in range(plen, max_len):
+        lg, cache = M.decode_step(cfg, params, tok, cache, jnp.int32(i))
+        olg, oc = M.decode_step(cfg, params, otok, oc, jnp.int32(i))
+        tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
+        otok = jnp.argmax(olg, axis=-1).astype(jnp.int32)[:, None]
+        np.testing.assert_array_equal(np.asarray(tok), np.asarray(otok))
