@@ -1,0 +1,19 @@
+"""Adaptive-attack breaking points: measured vs the Theorem 2 bound.
+
+Thin ``benchmarks.run`` adapter over
+:mod:`repro.core.attacks.breaking_point` — every attack class's
+adversary-fraction -> loss-drop curve with the oblivious failure-bound
+overlay, plus the defense-aware degradation gate. The identity asserts
+(mesh==virtual, chunk invariance) need the 8-virtual-device platform
+and are skipped when the host has fewer devices; the CI lane
+(``bench_robustness --breaking-point``) always forces the devices and
+runs them.
+"""
+from __future__ import annotations
+
+
+def rows():
+    import jax
+
+    from repro.core.attacks import breaking_point as bp
+    return bp.breaking_point_rows(with_identity=len(jax.devices()) >= 8)

@@ -12,11 +12,18 @@
 * ``--scenario-smoke`` — the CI lane: 3 scenarios x 2 strategies on the
   8-virtual-device host platform, each run on BOTH backends and asserted
   bit-identical (mesh collectives == virtual mesh), in well under 60 s.
+* ``--breaking-point`` — the adaptive-attack lane (DESIGN.md §15):
+  every attack class's measured breaking-point curve (adversary
+  fraction -> loss drop) overlaid with the oblivious Theorem 2 failure
+  bound, the defense-aware-vs-oblivious degradation gate, and the
+  mesh==virtual / chunk-invariance identity asserts, written to
+  ``BENCH_robustness.json`` (gated by scripts/perf_gate.py).
 
 Usage:
-    python -m benchmarks.bench_robustness                  # train sweep
-    python -m benchmarks.bench_robustness --scenario-grid  # Fig. 4 grid
-    python -m benchmarks.bench_robustness --scenario-smoke # CI smoke
+    python -m benchmarks.bench_robustness                   # train sweep
+    python -m benchmarks.bench_robustness --scenario-grid   # Fig. 4 grid
+    python -m benchmarks.bench_robustness --scenario-smoke  # CI smoke
+    python -m benchmarks.bench_robustness --breaking-point  # attack lane
 """
 from __future__ import annotations
 
@@ -29,6 +36,8 @@ import textwrap
 
 _CONFIG = os.path.join(os.path.dirname(__file__), "configs",
                        "fig4_grid.json")
+_BP_JSON = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_robustness.json")
 
 _WORKER = textwrap.dedent("""
     import os
@@ -159,6 +168,9 @@ def main() -> None:
     ap.add_argument("--scenario-smoke", action="store_true",
                     help="CI smoke: 3 scenarios x 2 strategies, "
                          "mesh-vs-virtual bit-identity on 8 devices")
+    ap.add_argument("--breaking-point", action="store_true",
+                    help="adaptive-attack breaking-point curves vs the "
+                         "Thm 2 bound; writes BENCH_robustness.json")
     ap.add_argument("--config", default=_CONFIG,
                     help="scenario config file (default: "
                          "benchmarks/configs/fig4_grid.json)")
@@ -171,13 +183,27 @@ def main() -> None:
     obs.add_trace_arg(ap)
     args = ap.parse_args()
 
-    if args.scenario_smoke and args.scenario_grid:
-        ap.error("--scenario-smoke and --scenario-grid are exclusive")
+    if sum((args.scenario_smoke, args.scenario_grid,
+            args.breaking_point)) > 1:
+        ap.error("--scenario-smoke/--scenario-grid/--breaking-point are "
+                 "exclusive")
     if not args.scenario_grid and (args.json_out or args.config != _CONFIG
                                    or args.backend != "virtual"):
         ap.error("--json/--config/--backend apply to --scenario-grid only")
 
-    if args.scenario_smoke:
+    if args.breaking_point:
+        # identity rows replay every adaptive mode on the mesh backend:
+        # force the 8-virtual-device platform before jax initialises,
+        # APPENDING so a caller's unrelated XLA_FLAGS survive
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count=8").strip()
+        rec = obs.activate_trace(args)
+        from repro.core.attacks import breaking_point as bp
+        rs = bp.breaking_point_rows()
+        obs.emit_bench_json(rs, os.path.normpath(_BP_JSON))
+    elif args.scenario_smoke:
         # the smoke lane *is* the 8-virtual-device platform; force the
         # device count before jax initialises, APPENDING so a caller's
         # unrelated XLA_FLAGS (dump dirs etc.) survive

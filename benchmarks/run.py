@@ -5,6 +5,8 @@ Prints ``name,value,derived`` CSV rows:
   fig2  gradient-noise unimodality/symmetry on an LM  (bench_noise)
   fig3  SNR vs the critical line                      (bench_noise)
   fig4  Byzantine training robustness sweep           (bench_robustness)
+  attacks  adaptive-attack breaking points vs the
+           Theorem 2 bound, defense-aware degradation (bench_attacks)
   fig5  communication volume/time vs dense all-reduce (bench_comm)
   fig6  end-to-end step-time speedup model            (bench_speedup)
   codecs  codec frontier: convergence vs bits/param   (bench_codecs)
@@ -34,7 +36,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module keys "
-                         "(fig1..fig6,codecs,vote_plan,federated,"
+                         "(fig1..fig6,attacks,codecs,vote_plan,federated,"
                          "serving,roofline)")
     ap.add_argument("--list", action="store_true",
                     help="enumerate the registered suites (key, module, "
@@ -45,14 +47,15 @@ def main() -> None:
     args = ap.parse_args()
     rec = obs.activate_trace(args)
 
-    from benchmarks import (bench_codecs, bench_comm, bench_convergence,
-                            bench_federated, bench_noise, bench_robustness,
-                            bench_serving, bench_speedup, bench_vote_plan,
-                            roofline)
+    from benchmarks import (bench_attacks, bench_codecs, bench_comm,
+                            bench_convergence, bench_federated, bench_noise,
+                            bench_robustness, bench_serving, bench_speedup,
+                            bench_vote_plan, roofline)
     suites = {
         "fig1": bench_convergence, "fig2": bench_noise, "fig3": bench_noise,
         "fig4": bench_robustness, "fig5": bench_comm, "fig6": bench_speedup,
-        "codecs": bench_codecs, "vote_plan": bench_vote_plan,
+        "attacks": bench_attacks, "codecs": bench_codecs,
+        "vote_plan": bench_vote_plan,
         "federated": bench_federated, "serving": bench_serving,
         "roofline": roofline,
     }

@@ -27,6 +27,10 @@ def main():
         note = ""
         if adv.fraction > 0.5:
             note = "  <- >50% adversarial: vote rightly fails"
+        elif adv.schedule:
+            note = "  <- time-varying coalition (AttackPhase schedule)"
+        elif adv.adaptive:
+            note = f"  <- adaptive: observes the {adv.observe!r} channel"
         elif spec.elastic:
             note = "  <- voter set rescaled mid-run"
         print(f"{spec.name:<28s} {spec.strategy.value:<15s} "

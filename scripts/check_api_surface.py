@@ -8,6 +8,13 @@ exercise the shims (that is what keeps them honest); production code
 must build a :class:`repro.core.vote_api.VoteRequest` and call a
 backend's ``execute``.
 
+Also asserts that no caller outside ``src/repro/core/`` constructs a
+:class:`ByzantineConfig` with arguments — the validated factories
+``repro.core.attacks.build_config`` / ``coalition_config`` are the one
+way to spell an adversary (they collapse honest configs to the
+canonical rest state and size coalitions with the exact-``Fraction``
+rule). Bare ``ByzantineConfig()`` defaults stay legal everywhere.
+
 Exit 0 when the surface is clean, 1 with a file:line listing otherwise.
 """
 import pathlib
@@ -40,6 +47,14 @@ VOTE_CALL = re.compile(r"(\w+)\.vote\(")
 PATTERNS = ([re.compile(rf"\b{n}\(") for n in FUNCTIONS]
             + [re.compile(rf"\.{m}\(") for m in METHODS])
 
+#: ByzantineConfig with an argument on the call line (bare
+#: ``ByzantineConfig()`` is the legal all-defaults rest state); only
+#: ``core/`` — where the attacks factories live — may construct one
+#: directly.  Line-based like every other check here: splitting the
+#: call across lines to dodge the grep would not survive review.
+BYZ_CALL = re.compile(r"\bByzantineConfig\(\s*[^)\s]")
+BYZ_ALLOWED = ROOT / "repro" / "core"
+
 
 def main() -> int:
     offenders = []
@@ -60,6 +75,11 @@ def main() -> int:
                     offenders.append(
                         f"{path.relative_to(ROOT.parent)}:{lineno}: "
                         f"{line.strip()}  (VoteEngine.vote?)")
+            if (BYZ_CALL.search(line)
+                    and BYZ_ALLOWED not in path.parents):
+                offenders.append(
+                    f"{path.relative_to(ROOT.parent)}:{lineno}: "
+                    f"{line.strip()}  (use attacks.build_config)")
     if offenders:
         print("deprecated vote entry points still called inside src/ "
               "(migrate to vote_api.VoteRequest + execute):",
@@ -69,7 +89,8 @@ def main() -> int:
         return 1
     print(f"api-surface OK: no internal callers of "
           f"{len(FUNCTIONS) + len(METHODS) + 1} deprecated vote entry "
-          "points under src/")
+          "points under src/; no arg-bearing ByzantineConfig() outside "
+          "core/")
     return 0
 
 

@@ -16,8 +16,11 @@
 # (continuous-batching serve engine: continuous vs static goodput,
 # prefill==inline and traced==untraced bit-identity, hot-swap
 # zero-dropped + fresh-oracle gates, one decode-step compile across
-# all lanes, BENCH_serving.json baseline written, <10 s), and the
-# perf gate
+# all lanes, BENCH_serving.json baseline written, <10 s), the attack
+# smoke (adaptive/scheduled/defense-aware adversaries: measured
+# breaking-point curves vs the Theorem 2 bound, the defense-aware
+# weight gate, mesh==virtual + chunk-invariance asserts,
+# BENCH_robustness.json baseline written, ~15 s), and the perf gate
 # (scripts/perf_gate.py: fresh smoke JSONs vs the committed
 # BENCH_*.json baselines — >15% timing regression or any bit-identity
 # row change fails), and the obs smoke (telemetry layer end to end:
@@ -58,7 +61,7 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 PERF_BASE="$(mktemp -d)"
 trap 'rm -rf "$PERF_BASE"' EXIT
 cp BENCH_codecs.json BENCH_vote_plan.json BENCH_federated.json \
-   BENCH_serving.json "$PERF_BASE/"
+   BENCH_serving.json BENCH_robustness.json "$PERF_BASE/"
 
 echo "== codec smoke (8-virtual-device platform; writes BENCH_codecs.json) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -81,6 +84,13 @@ echo "== federated smoke (streamed population engine; writes BENCH_federated.jso
 # materialized sign rows <= chunk size, never O(M)); <10 s
 python -m benchmarks.bench_federated --smoke
 
+echo "== attack smoke (adaptive breaking points; writes BENCH_robustness.json) =="
+# every attack class's measured breaking-point curve vs the Theorem 2
+# bound, the defense-aware-vs-oblivious weight gate, and the asserted
+# identity rows (scheduled reputation attack mesh==virtual on the
+# 8-virtual-device platform; adaptive population chunk-invariant); ~15 s
+python -m benchmarks.bench_robustness --breaking-point
+
 echo "== serving smoke (continuous-batching engine; writes BENCH_serving.json) =="
 # continuous vs static goodput at equal offered load, prefill==inline
 # and traced==untraced bit-identity, the hot-swap zero-dropped +
@@ -100,6 +110,8 @@ python scripts/perf_gate.py \
   --baseline "$PERF_BASE/BENCH_federated.json" --fresh BENCH_federated.json
 python scripts/perf_gate.py \
   --baseline "$PERF_BASE/BENCH_serving.json" --fresh BENCH_serving.json
+python scripts/perf_gate.py \
+  --baseline "$PERF_BASE/BENCH_robustness.json" --fresh BENCH_robustness.json
 
 echo "== obs smoke (telemetry layer: traced drill -> JSONL -> report) =="
 # 5-step traced bucketed-overlap scenario; asserts the golden digest is

@@ -361,12 +361,21 @@ class ByzantineConfig:
     models; ``colluding`` (all adversaries push one shared target
     direction) and ``blind`` (per-step per-coordinate flip probability)
     are the successor-paper models exercised by ``repro.sim``
-    (DESIGN.md §7)."""
+    (DESIGN.md §7). The adaptive modes (``adaptive_flip`` /
+    ``low_margin`` / ``reputation``, DESIGN.md §15) live in
+    ``repro.core.attacks`` and additionally consume an observation
+    channel threaded as ``VoteRequest.attack_obs``.
 
-    mode: str = "none"    # none | sign_flip | random | zero | colluding | blind
+    Construct with arguments only through the ``repro.core.attacks``
+    factories (``build_config`` / ``coalition_config``) — enforced
+    outside ``core/`` by ``scripts/check_api_surface.py``."""
+
+    mode: str = "none"    # byzantine.MODES | attacks.ATTACK_MODES
     num_adversaries: int = 0      # data-parallel replicas acting adversarially
     seed: int = 0
     flip_prob: float = 0.5        # blind mode: P(flip) per coordinate, per step
+    target_fraction: float = 0.25  # low_margin: fraction of coords struck
+    strike_below: float = 0.1     # reputation: strike while own EMA < this
 
 
 @dataclasses.dataclass(frozen=True)

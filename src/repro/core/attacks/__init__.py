@@ -1,0 +1,29 @@
+"""Adaptive / scheduled / defense-aware adversaries (DESIGN.md §15).
+
+The adversary surface as a subsystem with its own state discipline:
+:mod:`~repro.core.attacks.engine` holds the adaptive sign transforms,
+the :class:`AttackState` observation memory, and the sanctioned
+``ByzantineConfig`` factories; :mod:`~repro.core.attacks.schedule`
+holds the step-keyed time-varying coalition. ``breaking_point`` (the
+measured-vs-predicted fraction sweep) imports the Scenario Lab and is
+deliberately NOT imported here — ``core.byzantine`` lazily dispatches
+into this package from inside the vote, and pulling ``sim`` in at that
+point would be a cycle.
+"""
+from repro.core.attacks.engine import (ATTACK_MODES, CHANNEL_KEYS,
+                                       MODE_CHANNEL, OBSERVE_CHANNELS,
+                                       AttackState, adaptive_evil_signs,
+                                       build_config, coalition_config,
+                                       required_channel,
+                                       update_attack_state,
+                                       update_attack_state_population)
+from repro.core.attacks.schedule import (AttackPhase, modes_used,
+                                         phase_at, validate_schedule)
+
+__all__ = [
+    "ATTACK_MODES", "CHANNEL_KEYS", "MODE_CHANNEL", "OBSERVE_CHANNELS",
+    "AttackPhase", "AttackState", "adaptive_evil_signs", "build_config",
+    "coalition_config", "modes_used", "phase_at", "required_channel",
+    "update_attack_state", "update_attack_state_population",
+    "validate_schedule",
+]

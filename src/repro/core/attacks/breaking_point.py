@@ -1,0 +1,290 @@
+"""Measured vs. predicted breaking points (DESIGN.md §15).
+
+Theorem 2 guarantees convergence while the per-coordinate vote failure
+bound (``core.theory.vote_failure_bound``) stays below 1/2 — the bound
+blows up as the adversarial fraction approaches 1/2, and it is proved
+for *blind* adversaries. This module measures where each attack class
+ACTUALLY breaks the drill and overlays the oblivious-theory line, which
+makes the adaptive-attack headline quantitative: an observation channel
+lets a coalition cross below the blind-adversary breaking point the
+paper's analysis prices in.
+
+``sweep`` runs one attack class over an adversary-fraction grid through
+the Scenario Lab (same drill, same seeds — only the coalition varies)
+and reports, per fraction, the measured loss drop next to the predicted
+failure bound ``min(1, 1/((1-2a) sqrt(M) S))`` at the drill's initial
+SNR. The *measured* breaking fraction is the smallest grid fraction at
+which the drill makes no meaningful progress (loss drop <= 5% of the
+honest drop); the *predicted* one is the smallest fraction at which the
+oblivious bound goes vacuous (>= 1/2, i.e. no better than a coin flip).
+
+Deliberately NOT imported from ``repro.core.attacks`` — this module
+imports the Scenario Lab, and ``core.byzantine`` dispatches into the
+attacks package from inside the jitted vote; pulling ``sim`` into that
+import path would be a cycle. Import it explicitly::
+
+    from repro.core.attacks import breaking_point
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import theory
+from repro.distributed.fault_tolerance import count_for_fraction
+
+#: the adversary-fraction grid every curve walks (0 anchors the honest
+#: drop the breaking criterion is relative to; 0.5 is the theory wall)
+FRACTIONS = (0.0, 0.25, 0.375, 0.5)
+
+#: "no meaningful progress": loss drop <= this share of the honest drop
+BREAK_REL_TOL = 0.05
+
+#: the attack classes the bench sweeps — label -> AdversarySpec axes.
+#: ``sleeper`` builds its coalition as a mid-run schedule (the base spec
+#: is honest), so its curve measures the *time-varying* breaking point.
+ATTACK_CLASSES: Tuple[Dict[str, Any], ...] = (
+    dict(label="colluding", mode="colluding", observe="none"),
+    dict(label="adaptive_flip", mode="adaptive_flip", observe="vote"),
+    dict(label="low_margin", mode="low_margin", observe="margin"),
+    dict(label="sleeper", mode="none", observe="none", sleeper=True),
+    dict(label="reputation", mode="reputation", observe="reputation",
+         codec="weighted_vote"),
+)
+
+
+def predicted_failure_bound(snr: float, m_workers: int, alpha: float
+                            ) -> float:
+    """``min(1, vote_failure_bound)`` — clamped because the Thm 2 bound
+    is a probability; vacuous (1.0) at and beyond ``alpha = 1/2``."""
+    if alpha >= 0.5:
+        return 1.0
+    return float(min(1.0, theory.vote_failure_bound(
+        np.asarray(snr), m_workers, alpha)))
+
+
+def _make_spec(cls: Dict[str, Any], fraction: float, *, n_workers: int,
+               dim: int, n_steps: int, seed: int):
+    from repro.configs.base import VoteStrategy
+    from repro.core.attacks import AttackPhase
+    from repro.sim.scenario import AdversarySpec, ScenarioSpec
+    codec = cls.get("codec", "sign1bit")
+    kw: Dict[str, Any] = dict(codec=codec)
+    if codec == "weighted_vote":
+        kw["strategy"] = VoteStrategy.ALLGATHER_1BIT
+    if cls.get("sleeper") and fraction > 0:
+        # honest base spec, the coalition wakes mid-run
+        adv = AdversarySpec(
+            mode="none", fraction=0.0,
+            schedule=(AttackPhase(step=max(1, n_steps // 3),
+                                  mode="sign_flip", fraction=fraction),))
+    else:
+        adv = AdversarySpec(mode=cls["mode"] if fraction > 0 else "none",
+                            fraction=fraction,
+                            observe=(cls["observe"] if fraction > 0
+                                     else "none"))
+    # ONE name (-> one salt -> one x0 / noise stream) per codec family:
+    # every point on every curve replays the SAME drill, so a curve
+    # measures the attack, not the noise realization — and the honest
+    # f=0 anchor is literally the same run for every class
+    return ScenarioSpec(
+        name=f"bp/{codec}", n_workers=n_workers,
+        dim=dim, n_steps=n_steps, seed=seed, **kw, adversary=adv)
+
+
+def sweep(cls: Dict[str, Any], *, fractions: Sequence[float] = FRACTIONS,
+          n_workers: int = 15, dim: int = 48, n_steps: int = 6,
+          seed: int = 0, backend: str = "virtual",
+          _anchors: Optional[Dict[str, Dict[str, Any]]] = None
+          ) -> Dict[str, Any]:
+    """One attack class's measured-vs-predicted breaking-point curve.
+
+    ``_anchors`` (codec -> f=0 summary) lets ``breaking_point_rows``
+    share the honest anchor run across classes — with per-family names
+    the anchor is the same drill for every class, so re-running it per
+    class would only burn compile time."""
+    from repro.sim.runner import ScenarioRunner, _init_x
+    points: List[Dict[str, Any]] = []
+    snr = None
+    for f in fractions:
+        spec = _make_spec(cls, f, n_workers=n_workers, dim=dim,
+                          n_steps=n_steps, seed=seed)
+        if snr is None:
+            # the drill's gradient is x + noise_scale*N(0,1): initial
+            # per-coordinate SNR is |x0|/sigma, averaged for the overlay
+            snr = float(np.mean(np.abs(np.asarray(_init_x(spec))))
+                        / max(spec.noise_scale, 1e-30))
+        codec = spec.codec
+        if f == 0 and _anchors is not None and codec in _anchors:
+            s = _anchors[codec]
+        else:
+            s = ScenarioRunner(spec, backend=backend).run().summary()
+            if f == 0 and _anchors is not None:
+                _anchors[codec] = s
+        alpha = count_for_fraction(f, n_workers) / n_workers
+        points.append(dict(
+            fraction=f, alpha=alpha,
+            loss_drop=s["loss_drop"], final_loss=s["final_loss"],
+            mean_flip=s["mean_flip_fraction"],
+            predicted_bound=predicted_failure_bound(snr, n_workers, alpha)))
+    honest_drop = points[0]["loss_drop"]
+    measured = next((p["fraction"] for p in points
+                     if p["loss_drop"] <= BREAK_REL_TOL * honest_drop), 1.0)
+    predicted = next((p["fraction"] for p in points
+                      if p["predicted_bound"] >= 0.5), 1.0)
+    return dict(label=cls["label"], snr=snr, n_workers=n_workers,
+                points=points, measured_breaking_fraction=measured,
+                predicted_breaking_fraction=predicted)
+
+
+def curve_rows(curve: Dict[str, Any]) -> List[Tuple[str, float, str]]:
+    """A sweep result as ``(name, value, derived)`` bench rows."""
+    label = curve["label"]
+    out = []
+    for p in curve["points"]:
+        out.append((
+            f"breaking/{label}/loss_drop_f{p['fraction']:g}",
+            p["loss_drop"],
+            f"final={p['final_loss']:.4f} flip={p['mean_flip']:.3f} "
+            f"alpha={p['alpha']:.3f} "
+            f"pred_bound={p['predicted_bound']:.3f}"))
+    out.append((
+        f"breaking/{label}/measured_breaking_fraction",
+        curve["measured_breaking_fraction"],
+        f"theory(oblivious)={curve['predicted_breaking_fraction']:g} "
+        f"snr={curve['snr']:.3f} M={curve['n_workers']} "
+        f"(measured < theory means the observation channel beats the "
+        f"blind-adversary analysis)"))
+    return out
+
+
+def defense_degradation(*, fraction: float = 0.3, n_workers: int = 15,
+                        dim: int = 48, n_steps: int = 10, seed: int = 0,
+                        backend: str = "virtual") -> Tuple[str, float, str]:
+    """How much a defense-AWARE attacker degrades the weighted vote's
+    identification signal vs. an oblivious colluding coalition of the
+    same size. Both drills run the weighted_vote codec; the metric is
+    the mean Chair–Varshney reliability weight the defense assigns the
+    ADVERSARIES at the end of the run (read off the final flip-EMA
+    server state). An oblivious coalition disagrees with the decode
+    every round, so its EMA saturates and its weight collapses to ~0 —
+    the defense works. The reputation attacker strikes only while its
+    own EMA (which it replays exactly — public bookkeeping) is below
+    ``strike_below``, holding itself inside the defense's blind spot:
+    it keeps near-honest weight WHILE still flipping votes. Positive
+    value = the aware attacker retains weight the oblivious one loses,
+    i.e. the EMA defense is measurably degraded."""
+    from repro.core.codecs.weighted import reliability_weights
+    from repro.sim.runner import ScenarioRunner
+    n_adv = count_for_fraction(fraction, n_workers)
+    weights, flips = {}, {}
+    for label, cls in (("oblivious", dict(label="obl", mode="colluding",
+                                          observe="none",
+                                          codec="weighted_vote")),
+                       ("aware", dict(label="aware", mode="reputation",
+                                      observe="reputation",
+                                      codec="weighted_vote"))):
+        spec = _make_spec(cls, fraction, n_workers=n_workers, dim=dim,
+                          n_steps=n_steps, seed=seed)
+        trace = ScenarioRunner(spec, backend=backend).run()
+        ema = np.asarray(trace.final_server_state["flip_ema"])
+        weights[label] = float(np.mean(
+            np.asarray(reliability_weights(ema))[:n_adv]))
+        # damage the attacker still does late in the run, after the
+        # defense has had time to learn its labelling
+        flips[label] = float(np.mean(
+            [s.flip_fraction for s in trace.steps[n_steps // 2:]]))
+    return ("breaking/defense_aware_degradation",
+            weights["aware"] - weights["oblivious"],
+            f"weighted_vote f={fraction:g}: mean adversary weight "
+            f"aware={weights['aware']:.3f} vs oblivious"
+            f"={weights['oblivious']:.3f}; late-run flip fraction "
+            f"aware={flips['aware']:.3f} vs oblivious"
+            f"={flips['oblivious']:.3f} (positive = the aware attacker "
+            f"keeps the weight the flip-EMA strips from the oblivious "
+            f"one)")
+
+
+def identity_rows(*, dim: int = 32, n_steps: int = 5, seed: int = 0
+                  ) -> List[Tuple[str, float, str]]:
+    """The §15 equivalence gates as bench rows (asserted, not just
+    reported): every adaptive mode replays bit-identically mesh vs
+    virtual (needs >= 8 devices — the bench forces the 8-virtual-device
+    platform), and a streamed adaptive population is chunk-invariant."""
+    import jax
+
+    from repro.configs.base import VoteStrategy
+    from repro.core.attacks import AttackPhase
+    from repro.sim.runner import ScenarioRunner
+    from repro.sim.scenario import (AdversarySpec, PopulationSpec,
+                                    ScenarioSpec)
+    out: List[Tuple[str, float, str]] = []
+    m = 8
+    if len(jax.devices()) < m:
+        raise RuntimeError(
+            f"identity_rows needs >= {m} devices (run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={m})")
+    # one mesh drill composing ALL the new axes — a mid-run schedule
+    # flipping an observation-driven coalition on, against the weighted
+    # defense — keeps the bench fast; the full mode x backend matrix
+    # lives in tests/test_attack_properties.py
+    drills = [
+        ("scheduled_reputation",
+         AdversarySpec("none", 0.0, observe="reputation",
+                       schedule=(AttackPhase(step=2, mode="reputation",
+                                             fraction=0.375),)),
+         dict(codec="weighted_vote",
+              strategy=VoteStrategy.ALLGATHER_1BIT)),
+    ]
+    for label, adv, kw in drills:
+        spec = ScenarioSpec(name=f"bp-id/{label}", n_workers=m, dim=dim,
+                            n_steps=n_steps, seed=seed, adversary=adv,
+                            **kw)
+        tv = ScenarioRunner(spec, backend="virtual").run()
+        tm = ScenarioRunner(spec, backend="mesh").run()
+        assert tv.digest == tm.digest, (
+            f"{label}: adaptive attack diverged across backends "
+            f"({tv.digest[:12]} != {tm.digest[:12]})")
+        out.append((f"breaking/identity/{label}_mesh_eq_virtual", 1.0,
+                    f"digest {tv.digest[:12]}"))
+    digests = []
+    for chunk in (3, 7, 24):
+        spec = ScenarioSpec(
+            name="bp-id/pop", n_workers=m, dim=dim, n_steps=n_steps,
+            seed=seed, momentum=0.0,
+            population=PopulationSpec(n_clients=24, sample_fraction=0.5,
+                                      chunk_size=chunk),
+            adversary=AdversarySpec("low_margin", 0.375,
+                                    observe="margin"))
+        digests.append(ScenarioRunner(spec, backend="virtual").run().digest)
+    assert len(set(digests)) == 1, (
+        f"adaptive population vote depends on chunk size: {digests}")
+    out.append(("breaking/identity/population_chunk_invariant", 1.0,
+                f"chunks (3,7,24) digest {digests[0][:12]}"))
+    return out
+
+
+def breaking_point_rows(*, fractions: Sequence[float] = FRACTIONS,
+                        n_workers: int = 15, dim: int = 48,
+                        n_steps: int = 6, seed: int = 0,
+                        backend: str = "virtual",
+                        with_identity: bool = True
+                        ) -> List[Tuple[str, float, str]]:
+    """The full bench: every attack class's curve, the defense-aware
+    degradation gate, and (when the platform has the devices) the
+    mesh==virtual / chunk-invariance identity rows. This is what
+    ``benchmarks.bench_robustness --breaking-point`` commits to
+    ``BENCH_robustness.json``."""
+    rows: List[Tuple[str, float, str]] = []
+    anchors: Dict[str, Dict[str, Any]] = {}
+    for cls in ATTACK_CLASSES:
+        rows.extend(curve_rows(sweep(
+            cls, fractions=fractions, n_workers=n_workers, dim=dim,
+            n_steps=n_steps, seed=seed, backend=backend,
+            _anchors=anchors)))
+    rows.append(defense_degradation(n_workers=n_workers, dim=dim,
+                                    seed=seed, backend=backend))
+    if with_identity:
+        rows.extend(identity_rows(seed=seed))
+    return rows

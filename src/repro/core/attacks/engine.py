@@ -1,0 +1,299 @@
+"""The stateful attack engine (DESIGN.md §15).
+
+``core/byzantine.py`` models adversaries as stateless per-step sign
+transforms — a pure function of (honest signs, replica id, step, salt).
+That covers the paper's Fig. 4 threat model but not the regime Mengoli
+et al. 2025 call out: adversaries that *observe* the protocol and adapt.
+This module adds that observation loop without forking the vote path:
+
+* an adaptive adversary is still a :class:`~repro.configs.base.
+  ByzantineConfig` mode, dispatched from :func:`repro.core.byzantine.
+  evil_signs` like every oblivious mode — same predicate (``id <
+  num_adversaries``), same stale-then-adversary ordering (§7);
+* what is new is the **observation channel**: a small dict of arrays
+  (previous round's vote / |tally| counts / the defense's reputation
+  EMA) threaded through ``VoteRequest.attack_obs`` and consumed inside
+  the jitted vote as *traced* inputs. The channel is produced by
+  :class:`AttackState` — the attacker's memory, carried beside the
+  server state by the Scenario Lab and updated once per round from the
+  published :class:`~repro.core.vote_api.VoteOutcome`.
+
+Everything the attacker observes is public protocol output (the
+broadcast vote, its tally magnitudes, the weights the server would
+assign next round). The reputation channel deserves a note: the
+weighted_vote flip-EMA is a deterministic public function of each
+voter's *own* sent signs and the published vote, so a defense-aware
+attacker reconstructs the server's opinion of itself exactly — no
+side channel is assumed.
+
+Adaptive modes
+  adaptive_flip — replay the negation of the previous round's vote
+                  (channel ``vote``). The strongest 1-round-delayed
+                  oracle flipper: where the vote is persistent this is
+                  exactly anti-vote; honest at step 0.
+  low_margin    — flip only the ``target_fraction`` of coordinates with
+                  the smallest previous |tally| (channel ``margin``) —
+                  concentrating the coalition's budget where the vote is
+                  nearly tied, the Mengoli et al. observation that
+                  per-coordinate margins, not dimension counts, set the
+                  breaking point.
+  reputation    — game the weighted_vote flip-EMA (channel
+                  ``reputation``): vote honestly while own reputation is
+                  damaged (EMA >= ``strike_below``), strike (negate)
+                  while trusted. The on-off oscillation holds the EMA in
+                  the codec's blind spot instead of saturating it.
+
+All three are deterministic given the observation — no PRNG — so
+mesh == virtual bit-identity reduces to feeding both backends the same
+``attack_obs``, which the Scenario Lab does by construction.
+
+:func:`build_config` / :func:`coalition_config` are the sanctioned
+``ByzantineConfig`` constructors (``scripts/check_api_surface.py``
+forbids direct construction with arguments outside ``core/``): they
+validate the mode against *both* mode tables and count coalition
+members through the exact-``Fraction`` ``count_for_fraction`` rule, so
+the dense, population, and scheduled paths can never round a boundary
+fraction differently.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ByzantineConfig
+from repro.core.codecs import weighted as _weighted
+
+#: adaptive modes, dispatched from byzantine.evil_signs (mode tables are
+#: disjoint: an adaptive mode never shadows an oblivious one)
+ATTACK_MODES = ("adaptive_flip", "low_margin", "reputation")
+
+#: the observation channel each adaptive mode consumes
+MODE_CHANNEL = {"adaptive_flip": "vote",
+                "low_margin": "margin",
+                "reputation": "reputation"}
+
+#: legal values of AdversarySpec.observe / AttackState.observation
+OBSERVE_CHANNELS = ("none", "vote", "margin", "reputation")
+
+#: exactly the arrays each channel exposes to the attacker (the
+#: VoteRequest validates attack_obs against this table — an attacker
+#: never sees more of the AttackState than its channel grants)
+CHANNEL_KEYS = {"none": (),
+                "vote": ("prev_vote",),
+                "margin": ("prev_vote", "prev_abs_counts"),
+                "reputation": ("rep",)}
+
+
+def required_channel(modes: Iterable[str]) -> str:
+    """The single observation channel a set of (scheduled) modes needs,
+    or ``"none"``. More than one distinct channel is an error: one
+    AttackState observation is built per round, and a schedule that
+    hops channels would need the union — reject it at build time."""
+    chans = sorted({MODE_CHANNEL[m] for m in modes if m in MODE_CHANNEL})
+    if len(chans) > 1:
+        raise ValueError(
+            f"attack schedule mixes observation channels {chans}; "
+            "a schedule may hop fraction and mode but all adaptive "
+            "modes in it must share one channel")
+    return chans[0] if chans else "none"
+
+
+def adaptive_evil_signs(signs: jax.Array, cfg: ByzantineConfig,
+                        idx: jax.Array, obs: Optional[Dict[str, Any]], *,
+                        step: Optional[jax.Array] = None,
+                        salt: int = 0) -> jax.Array:
+    """What adaptive replica ``idx`` sends, given the observation.
+
+    Deterministic in (signs, cfg, idx, obs) — adaptive modes draw no
+    PRNG, so cross-backend bit-identity needs no key discipline beyond
+    feeding both backends the same ``obs``. ``step``/``salt`` are
+    accepted for signature parity with the oblivious modes.
+    """
+    del step, salt
+    if obs is None:
+        raise ValueError(
+            f"adaptive mode {cfg.mode!r} needs its observation channel "
+            f"({MODE_CHANNEL.get(cfg.mode)!r}) threaded as "
+            "VoteRequest.attack_obs — build it with "
+            "AttackState.observation()")
+    if cfg.mode == "adaptive_flip":
+        # negate last round's broadcast vote; coords the vote abstained
+        # on (0, incl. the pre-first-round state) are sent honestly
+        pv = obs["prev_vote"].astype(signs.dtype)
+        return jnp.where(pv == 0, signs, (-pv).astype(signs.dtype))
+    if cfg.mode == "low_margin":
+        # flip AGAINST the previous vote on the target_fraction of
+        # coordinates with the smallest previous |tally|; honest
+        # elsewhere (and everywhere at step 0, when all counts are 0
+        # but so is prev_vote)
+        pv = obs["prev_vote"].astype(signs.dtype)
+        counts = obs["prev_abs_counts"]
+        n = counts.shape[-1]
+        k = max(1, min(n, int(round(cfg.target_fraction * n))))
+        thresh = jnp.sort(counts)[k - 1]
+        struck = (counts <= thresh) & (pv != 0)
+        return jnp.where(struck, (-pv).astype(signs.dtype), signs)
+    if cfg.mode == "reputation":
+        # strike while trusted, rebuild while burnt: the flip-EMA
+        # starts at 0 (fully trusted), so the attacker strikes round 0,
+        # gets caught, votes honestly until the EMA decays back under
+        # strike_below, then strikes again
+        strike = obs["rep"][idx] < cfg.strike_below
+        return jnp.where(strike, -signs, signs)
+    raise ValueError(f"unknown adaptive attack mode {cfg.mode!r}; "
+                     f"have {ATTACK_MODES}")
+
+
+# ---------------------------------------------------------------------------
+# the attacker's memory
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackState:
+    """The attacker's memory, one instance per scenario run.
+
+    Carried beside the server state with the same discipline (§15): the
+    runner owns it, updates it exactly once per round from the published
+    outcome, refits its voter axis on elastic rescale / churn exactly
+    like the reliability EMA, and hands attackers only the slice their
+    channel grants via :meth:`observation`.
+
+    ``prev_vote`` (n,) int8 and ``prev_abs_counts`` (n,) int32 describe
+    the *previous* round's broadcast; both start at zero, which encodes
+    "no round yet" (adaptive modes read that as: act honest).
+    ``rep`` (M,) float32 mirrors the weighted_vote flip-EMA over the
+    logical population (zeros when the codec is not in play — a
+    reputation attacker then strikes every round, degenerating to
+    sign_flip, which is exactly what no-defense means).
+    """
+
+    prev_vote: Any
+    prev_abs_counts: Any
+    rep: Any
+
+    @classmethod
+    def init(cls, n_coords: int, n_voters: int) -> "AttackState":
+        return cls(prev_vote=jnp.zeros((n_coords,), jnp.int8),
+                   prev_abs_counts=jnp.zeros((n_coords,), jnp.int32),
+                   rep=jnp.zeros((n_voters,), jnp.float32))
+
+    def observation(self, channel: str) -> Optional[Dict[str, Any]]:
+        """The dict an attacker on ``channel`` may see (None for
+        ``"none"``) — exactly :data:`CHANNEL_KEYS`, nothing more."""
+        if channel not in OBSERVE_CHANNELS:
+            raise ValueError(f"unknown observation channel {channel!r}; "
+                             f"have {OBSERVE_CHANNELS}")
+        keys = CHANNEL_KEYS[channel]
+        if not keys:
+            return None
+        return {k: getattr(self, k) for k in keys}
+
+    def refit(self, n_voters: int) -> "AttackState":
+        """Elastic-rescale / churn refit: the per-voter reputation axis
+        truncates or zero-pads by the checkpoint rule (new voters enter
+        fully trusted, like a fresh flip-EMA row); the per-coordinate
+        arrays are untouched."""
+        from repro.checkpoint.checkpoint import refit_leading_axis
+        rep = jnp.asarray(refit_leading_axis(
+            np.asarray(self.rep), (n_voters,)))
+        return dataclasses.replace(self, rep=rep)
+
+
+@jax.jit
+def _update(prev_rep, vote, counts, eff):
+    wire = jnp.where(eff >= 0, jnp.int8(1), jnp.int8(-1))
+    v = jnp.where(vote >= 0, jnp.int8(1), jnp.int8(-1))
+    mis = jnp.mean((wire != v[None, :]).astype(jnp.float32), axis=-1)
+    rep = (1.0 - _weighted.RHO) * prev_rep + _weighted.RHO * mis
+    return (jnp.sign(vote).astype(jnp.int8),
+            jnp.abs(counts).astype(jnp.int32), rep)
+
+
+def update_attack_state(state: AttackState, vote, counts,
+                        eff) -> AttackState:
+    """One round's observation: the published vote, its per-coordinate
+    signed tally, and the (M, n) effective signs that reached the wire.
+
+    ``rep`` replays the weighted_vote flip-EMA *exactly* — same
+    binarized wire signs (pack/unpack maps abstentions to +1), same
+    ``(1-RHO)*ema + RHO*mismatch/n`` expression — because that EMA is a
+    public deterministic function of public data; an attacker tracking
+    it is not guessing, it is bookkeeping.
+    """
+    pv, pc, rep = _update(state.rep, jnp.asarray(vote),
+                          jnp.asarray(counts), jnp.asarray(eff))
+    return AttackState(prev_vote=pv, prev_abs_counts=pc, rep=rep)
+
+
+@jax.jit
+def _rep_update_at(rep, ids, mis_frac):
+    upd = (1.0 - _weighted.RHO) * rep[ids] + _weighted.RHO * mis_frac
+    return rep.at[ids].set(upd)
+
+
+def update_attack_state_population(state: AttackState, vote, counts,
+                                   ids, mis_frac) -> AttackState:
+    """The population-path round update: the EMA touches only the
+    sampled logical ids (mirroring the codec's own streamed update);
+    ``mis_frac`` is each sampled voter's mismatch fraction vs the vote,
+    assembled chunk-by-chunk by the runner."""
+    vote = jnp.asarray(vote)
+    counts = jnp.asarray(counts)
+    rep = _rep_update_at(state.rep, jnp.asarray(ids, dtype=jnp.int32),
+                         jnp.asarray(mis_frac, dtype=jnp.float32))
+    return AttackState(prev_vote=jnp.sign(vote).astype(jnp.int8),
+                       prev_abs_counts=jnp.abs(counts).astype(jnp.int32),
+                       rep=rep)
+
+
+# ---------------------------------------------------------------------------
+# the sanctioned ByzantineConfig constructors
+# ---------------------------------------------------------------------------
+
+
+def build_config(mode: str, num_adversaries: int = 0, *, seed: int = 0,
+                 flip_prob: float = 0.5, target_fraction: float = 0.25,
+                 strike_below: float = 0.1) -> ByzantineConfig:
+    """Validated :class:`ByzantineConfig` for an absolute adversary
+    count — the one constructor all callers outside ``core/`` use
+    (enforced by ``scripts/check_api_surface.py``)."""
+    from repro.core import byzantine
+    if mode not in byzantine.MODES and mode not in ATTACK_MODES:
+        raise ValueError(f"unknown adversary mode {mode!r}; have "
+                         f"{byzantine.MODES} plus adaptive {ATTACK_MODES}")
+    if num_adversaries < 0:
+        raise ValueError(f"num_adversaries must be >= 0, got "
+                         f"{num_adversaries}")
+    if mode == "none" or num_adversaries == 0:
+        # honest collapses to the canonical rest state so config
+        # equality (segment/jit cache keys) never splits on a knob that
+        # cannot matter
+        mode, num_adversaries = "none", 0
+    return ByzantineConfig(mode=mode, num_adversaries=num_adversaries,
+                           seed=seed, flip_prob=flip_prob,
+                           target_fraction=target_fraction,
+                           strike_below=strike_below)
+
+
+def coalition_config(mode: str, fraction: float, n_workers: int, *,
+                     seed: int = 0, flip_prob: float = 0.5,
+                     target_fraction: float = 0.25,
+                     strike_below: float = 0.1) -> ByzantineConfig:
+    """:func:`build_config` with the coalition sized from a fraction by
+    the exact-``Fraction`` half-up rule (``distributed.fault_tolerance.
+    count_for_fraction``) — the single rounding used by the dense,
+    population, and scheduled paths alike, so boundary fractions such
+    as 7/15 can never round differently between backends."""
+    from repro.distributed.fault_tolerance import count_for_fraction
+    if not 0.0 <= fraction <= 1.0:
+        raise ValueError(f"adversary fraction must be in [0, 1], got "
+                         f"{fraction}")
+    return build_config(mode, count_for_fraction(fraction, n_workers),
+                        seed=seed, flip_prob=flip_prob,
+                        target_fraction=target_fraction,
+                        strike_below=strike_below)

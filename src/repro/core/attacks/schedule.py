@@ -1,0 +1,97 @@
+"""Time-varying coalitions: the adversary fraction/mode as a step
+schedule (DESIGN.md §15).
+
+An :class:`AttackPhase` is a step-keyed override in the style of the
+Scenario Lab's ``ElasticEvent`` / ``ChurnEvent``: *at* ``step`` the
+coalition's ``fraction`` and/or ``mode`` change, and stay changed until
+a later phase overrides them again. Fields left ``None`` inherit —
+a phase may grow the coalition without touching the mode, or swap a
+sleeper coalition from ``"none"`` to ``"sign_flip"`` without restating
+the fraction. Phases are JSON-round-trippable (plain dicts via
+:func:`dataclasses.asdict`) so scheduled scenarios serialize through
+``ScenarioSpec.to_dict``/``from_dict`` like every other axis.
+
+Because the coalition is re-counted at each phase boundary through the
+same exact-``Fraction`` rule as the base spec (``coalition_config``),
+and because phase resolution is a pure function of the step, a schedule
+composes freely with elastic rescale (the fraction re-applies to the
+new M) and client churn (logical ids keep their adversary predicate).
+
+``step`` must be >= 1: the pre-run coalition is the spec's own
+``mode``/``fraction``, not a phase — a "phase at 0" would silently
+shadow the base spec, so it is rejected instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+from repro.core.attacks.engine import ATTACK_MODES
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackPhase:
+    """At ``step``, override the coalition's ``fraction`` and/or
+    ``mode`` (``None`` inherits the value in force)."""
+
+    step: int
+    fraction: Optional[float] = None
+    mode: Optional[str] = None
+
+    def __post_init__(self):
+        from repro.core import byzantine
+        if self.step < 1:
+            raise ValueError(
+                f"AttackPhase.step must be >= 1 (got {self.step}); the "
+                "pre-run coalition is the AdversarySpec's own "
+                "mode/fraction, not a phase")
+        if self.fraction is None and self.mode is None:
+            raise ValueError(
+                f"AttackPhase(step={self.step}) overrides nothing — "
+                "set fraction and/or mode")
+        if self.fraction is not None and not 0.0 <= self.fraction <= 1.0:
+            raise ValueError(f"AttackPhase.fraction must be in [0, 1], "
+                             f"got {self.fraction}")
+        if (self.mode is not None and self.mode not in byzantine.MODES
+                and self.mode not in ATTACK_MODES):
+            raise ValueError(
+                f"unknown AttackPhase.mode {self.mode!r}; have "
+                f"{byzantine.MODES} plus adaptive {ATTACK_MODES}")
+
+
+def validate_schedule(schedule: Sequence[AttackPhase]) -> None:
+    """Reject non-phase entries and non-strictly-increasing steps (two
+    phases at one step would make "the value in force" order-dependent)."""
+    prev = 0
+    for p in schedule:
+        if not isinstance(p, AttackPhase):
+            raise ValueError(f"schedule entries must be AttackPhase, "
+                             f"got {type(p).__name__}")
+        if p.step <= prev:
+            raise ValueError(
+                f"AttackPhase steps must be strictly increasing, got "
+                f"step {p.step} after {prev}")
+        prev = p.step
+
+
+def phase_at(schedule: Sequence[AttackPhase], base_mode: str,
+             base_fraction: float, step: int) -> Tuple[str, float]:
+    """The (mode, fraction) in force at ``step``: the base values with
+    every phase whose ``step`` <= the query applied in order."""
+    mode, fraction = base_mode, base_fraction
+    for p in schedule:
+        if p.step > step:
+            break
+        if p.mode is not None:
+            mode = p.mode
+        if p.fraction is not None:
+            fraction = p.fraction
+    return mode, fraction
+
+
+def modes_used(schedule: Sequence[AttackPhase],
+               base_mode: str) -> Tuple[str, ...]:
+    """Every mode the run can be in (base + overrides), for channel
+    resolution at build time."""
+    modes = [base_mode] + [p.mode for p in schedule if p.mode is not None]
+    return tuple(dict.fromkeys(modes))

@@ -79,12 +79,21 @@ def adversary_key(cfg: ByzantineConfig, idx: Optional[jax.Array] = None, *,
 
 
 def evil_signs(signs: jax.Array, cfg: ByzantineConfig, idx: jax.Array, *,
-               step: Optional[jax.Array] = None, salt: int = 0) -> jax.Array:
+               step: Optional[jax.Array] = None, salt: int = 0,
+               obs=None) -> jax.Array:
     """What replica `idx` would send if it were adversarial.
 
     `signs` is the replica's honest int8 sign tensor; the result has the
-    same shape/dtype. Pure function of (signs, cfg, idx, step, salt).
+    same shape/dtype. Pure function of (signs, cfg, idx, step, salt) —
+    plus, for the adaptive modes dispatched to ``repro.core.attacks``,
+    the observation dict ``obs`` (DESIGN.md §15).
     """
+    if cfg.mode in ("adaptive_flip", "low_margin", "reputation"):
+        # lazy: evil_signs is called at trace time only, and attacks
+        # imports this module at top level
+        from repro.core.attacks import engine as _attacks
+        return _attacks.adaptive_evil_signs(signs, cfg, idx, obs,
+                                            step=step, salt=salt)
     if cfg.mode == "sign_flip":
         return -signs
     if cfg.mode == "zero":
@@ -114,7 +123,7 @@ def evil_signs(signs: jax.Array, cfg: ByzantineConfig, idx: jax.Array, *,
 def apply_adversary(signs: jax.Array, cfg: ByzantineConfig,
                     axis_names: Sequence[str], *,
                     step: jax.Array | None = None,
-                    salt: int = 0) -> jax.Array:
+                    salt: int = 0, obs=None) -> jax.Array:
     """Transform this replica's int8 sign tensor per the adversary model
     (mesh path: the replica index comes from the vote axes).
 
@@ -125,14 +134,15 @@ def apply_adversary(signs: jax.Array, cfg: ByzantineConfig,
     if cfg.mode == "none" or cfg.num_adversaries == 0:
         return signs
     idx = replica_index(axis_names, like=signs)
-    evil = evil_signs(signs, cfg, idx, step=step, salt=salt)
+    evil = evil_signs(signs, cfg, idx, step=step, salt=salt, obs=obs)
     return jnp.where(idx < cfg.num_adversaries, evil, signs)
 
 
 def apply_adversary_stacked(stacked: jax.Array, cfg: ByzantineConfig, *,
                             step: Optional[jax.Array] = None,
                             salt: int = 0,
-                            ids: Optional[jax.Array] = None) -> jax.Array:
+                            ids: Optional[jax.Array] = None,
+                            obs=None) -> jax.Array:
     """The same transform over a stacked (M, ...) voter tensor (virtual
     mesh path: replica index = position along the leading dim).
     Bit-identical to `apply_adversary` run on M mesh replicas (asserted
@@ -153,7 +163,8 @@ def apply_adversary_stacked(stacked: jax.Array, cfg: ByzantineConfig, *,
     idx = (jnp.arange(m, dtype=jnp.int32) if ids is None
            else jnp.asarray(ids).astype(jnp.int32))
     evil = jax.vmap(
-        lambda s, i: evil_signs(s, cfg, i, step=step, salt=salt))(stacked, idx)
+        lambda s, i: evil_signs(s, cfg, i, step=step, salt=salt,
+                                obs=obs))(stacked, idx)
     is_adv = (idx < cfg.num_adversaries).reshape(
         (m,) + (1,) * (stacked.ndim - 1))
     return jnp.where(is_adv, evil, stacked)

@@ -123,13 +123,16 @@ _CODECS = ("sign1bit", "ef_sign", "ternary2bit", "weighted_vote")
 
 
 @functools.partial(jax.jit, static_argnames=("n_stale", "byz"))
-def _chunk_eff(values, prev, ids, step, salt, *, n_stale, byz):
+def _chunk_eff(values, prev, ids, step, salt, obs, *, n_stale, byz):
     """Chunk values -> the (k, n) int8 signs that reach the wire, with
     failure predicates and adversary PRNG keyed by the LOGICAL ids.
     `salt` is traced (it only offsets a PRNG seed), so two scenarios
-    that differ only in name share one compilation per chunk shape."""
+    that differ only in name share one compilation per chunk shape.
+    `obs` (traced, possibly None) is the adaptive adversary's
+    observation dict — per-chunk rows see the SAME full observation, so
+    chunking cannot change an adaptive adversary's behaviour."""
     return va.effective_stacked_signs(values, prev, n_stale, byz, step,
-                                      salt, ids=ids)
+                                      salt, ids=ids, obs=obs)
 
 
 @jax.jit
@@ -231,7 +234,7 @@ def _chunks(stream, chunk_size: int):
         yield lo, ids_all[lo:lo + chunk_size]
 
 
-def _chunk_signs(stream, ids_np, step, n_stale, byz, salt):
+def _chunk_signs(stream, ids_np, step, n_stale, byz, salt, obs=None):
     """Materialize ONE chunk's effective wire signs ((k, n) int8)."""
     k, n = len(ids_np), stream.n_coords
     ids = jnp.asarray(ids_np, dtype=jnp.int32)
@@ -247,7 +250,7 @@ def _chunk_signs(stream, ids_np, step, n_stale, byz, salt):
             raise ValueError(f"stream.prev returned shape "
                              f"{tuple(prev.shape)} for a {k}-id chunk, "
                              f"want ({k}, {n})")
-    return _chunk_eff(vals, prev, ids, step, jnp.int32(salt),
+    return _chunk_eff(vals, prev, ids, step, jnp.int32(salt), obs,
                       n_stale=n_stale, byz=byz)
 
 
@@ -256,15 +259,23 @@ def streamed_vote(stream, *, strategy: VoteStrategy, codec: str,
                   byz: Optional[ByzantineConfig] = None,
                   step=None, salt: int = 0,
                   server_state: Optional[Dict[str, Any]] = None,
-                  chunk_size: int = DEFAULT_CHUNK
-                  ) -> Tuple[jax.Array, Dict[str, Any], float]:
+                  chunk_size: int = DEFAULT_CHUNK,
+                  attack_obs: Optional[Dict[str, Any]] = None
+                  ) -> Tuple[jax.Array, Dict[str, Any], float,
+                             np.ndarray]:
     """Run one majority vote over a :class:`~repro.core.vote_api.
     PopulationStream` in voter-chunks.
 
-    Returns ``(votes, new_server_state, margin)`` — votes (n,) int8,
-    bit-identical to the dense stacked path on the same request; margin
-    is the mean |tally| normalized by the total vote weight (measured
-    on the wire signs, the §7 diagnostic at population scale)."""
+    Returns ``(votes, new_server_state, margin, counts)`` — votes (n,)
+    int8, bit-identical to the dense stacked path on the same request;
+    margin is the mean |tally| normalized by the total vote weight
+    (measured on the wire signs, the §7 diagnostic at population
+    scale); counts is the per-coordinate signed tally ((n,) int64, at
+    the wire's own weight scale) — the attack engine's ``margin``
+    observation channel, returned because the stack is never
+    materialized and no caller could recompute it. ``attack_obs`` is
+    the adaptive adversary's observation dict (DESIGN.md §15), fed
+    whole to every chunk so chunking cannot change adaptive behaviour."""
     _validate(stream, strategy, codec, chunk_size, server_state)
     state = dict(server_state) if server_state else {}
     m, n = stream.n_voters, stream.n_coords
@@ -275,13 +286,14 @@ def streamed_vote(stream, *, strategy: VoteStrategy, codec: str,
     def eff_of(ids_np):
         stats["peak_rows"] = max(stats["peak_rows"], len(ids_np))
         stats["n_chunks"] += 1
-        return _chunk_signs(stream, ids_np, step, n_stale, byz, salt)
+        return _chunk_signs(stream, ids_np, step, n_stale, byz, salt,
+                            obs=attack_obs)
 
     if codec == "weighted_vote":
-        votes, state, margin = _weighted_codec_vote(
+        votes, state, margin, counts = _weighted_codec_vote(
             stream, weights, state, chunk_size, eff_of, stats)
     elif weights is not None:
-        votes, margin = _data_weighted_vote(
+        votes, margin, counts = _data_weighted_vote(
             stream, strategy, codec, weights, chunk_size, eff_of)
     elif (strategy == VoteStrategy.PSUM_INT8 or codec == "ternary2bit"):
         # count wires: psum sums ternary counts directly; the 2-bit
@@ -292,6 +304,7 @@ def streamed_vote(stream, *, strategy: VoteStrategy, codec: str,
                               dtype=np.int64)
         votes = jnp.sign(jnp.asarray(acc)).astype(jnp.int8)
         margin = float(np.mean(np.abs(acc)) / m)
+        counts = acc
     else:
         # gathered 1-bit wire: accumulate per-bit-position counts, then
         # apply the dense tally's majority threshold once
@@ -300,18 +313,18 @@ def streamed_vote(stream, *, strategy: VoteStrategy, codec: str,
         for lo, ids_np in _chunks(stream, chunk_size):
             acc += np.asarray(_partial_bit_counts(eff_of(ids_np)),
                               dtype=np.int64)
-        counts = jnp.asarray(acc).astype(jnp.int32)           # (w, 32)
-        maj = (2 * counts >= m).astype(jnp.uint32)
+        bcounts = jnp.asarray(acc).astype(jnp.int32)          # (w, 32)
+        maj = (2 * bcounts >= m).astype(jnp.uint32)
         packed = jnp.zeros(maj.shape[:-1], jnp.uint32)
         for j in range(sc.PACK):   # unrolled OR (same as the dense tally)
             packed = packed | (maj[..., j] << jnp.uint32(j))
         votes = sc.unpack_signs(packed, jnp.int8)[..., :n]
         # +1-count c -> signed count 2c - M, over the true n coords
-        signed = 2 * acc.reshape(-1)[:n] - m
-        margin = float(np.mean(np.abs(signed)) / m)
+        counts = 2 * acc.reshape(-1)[:n] - m
+        margin = float(np.mean(np.abs(counts)) / m)
 
     _publish_stats(stats)
-    return votes, state, margin
+    return votes, state, margin, counts
 
 
 def _data_weighted_vote(stream, strategy, codec, weights, chunk_size,
@@ -333,7 +346,7 @@ def _data_weighted_vote(stream, strategy, codec, weights, chunk_size,
     else:
         votes = jnp.sign(jnp.asarray(acc)).astype(jnp.int8)
     margin = float(np.mean(np.abs(acc)) / float(np.sum(weights)))
-    return votes, margin
+    return votes, margin, acc
 
 
 def _weighted_codec_vote(stream, weights, state, chunk_size, eff_of,
@@ -373,7 +386,7 @@ def _weighted_codec_vote(stream, weights, state, chunk_size, eff_of,
            + weighted.RHO * jnp.asarray(mis) / n)
     new_ema = ema.at[idx].set(upd)
     margin = float(np.mean(np.abs(acc)) / max(wtot, 1))
-    return vote, {**state, "flip_ema": new_ema}, margin
+    return vote, {**state, "flip_ema": new_ema}, margin, acc
 
 
 __all__ = ["DEFAULT_CHUNK", "LAST_STATS", "W256_CAP", "streamed_vote"]

@@ -131,16 +131,26 @@ class FailureSpec:
     byz: Optional[ByzantineConfig] = None
 
     def __post_init__(self):
+        from repro.core.attacks.engine import ATTACK_MODES
         if self.n_stale < 0:
             raise ValueError(f"n_stale must be >= 0, got {self.n_stale}")
-        if self.byz is not None and self.byz.mode not in byzantine.MODES:
+        if (self.byz is not None and self.byz.mode not in byzantine.MODES
+                and self.byz.mode not in ATTACK_MODES):
             raise ValueError(f"unknown adversary mode {self.byz.mode!r}; "
-                             f"have {byzantine.MODES}")
+                             f"have {byzantine.MODES} plus adaptive "
+                             f"{ATTACK_MODES}")
 
     @property
     def active(self) -> bool:
         return self.n_stale > 0 or (self.byz is not None
                                     and self.byz.mode != "none")
+
+    @property
+    def adaptive(self) -> bool:
+        """True when the adversary is one of the ``repro.core.attacks``
+        modes, which additionally consume ``VoteRequest.attack_obs``."""
+        from repro.core.attacks.engine import ATTACK_MODES
+        return self.byz is not None and self.byz.mode in ATTACK_MODES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,12 +184,20 @@ class VoteOutcome:
     the failure composition (and re-drawing the adversary PRNG) outside
     ``execute()``. ``None`` on the mesh path (the stack never exists on
     one host), the fused-kernel path (the kernel consumes raw values),
-    and the streamed path (never materialized by design)."""
+    and the streamed path (never materialized by design).
+
+    ``counts`` is the per-coordinate signed tally ((n,) integer array,
+    at the wire's own weight scale) — populated by the streamed path,
+    where it feeds the attack engine's ``margin`` observation channel
+    (DESIGN.md §15) without re-walking the stream; the stack never
+    being materialized means no caller can recompute it after the
+    fact. ``None`` elsewhere (dense callers tally ``wire_signs``)."""
 
     votes: Any
     server_state: Dict[str, Any]
     wire: WireReport
     wire_signs: Any = None
+    counts: Any = None
 
 
 @dataclasses.dataclass(frozen=True, eq=False, repr=False)
@@ -295,7 +313,14 @@ class VoteRequest:
     voter identities / integer dataset-size vote multiplicities — the
     dense twin of the streamed form's :class:`PopulationStream` axes
     (VirtualBackend only; the mesh's voters are physical replicas). A
-    streamed request carries both on the stream instead."""
+    streamed request carries both on the stream instead.
+
+    `attack_obs` is the adaptive adversary's observation dict
+    (DESIGN.md §15): required exactly when ``failures.byz`` is one of
+    the ``repro.core.attacks`` modes, validated against the mode's
+    channel (``attacks.CHANNEL_KEYS``) so an attacker never sees more
+    of the :class:`~repro.core.attacks.AttackState` than its channel
+    grants. Build it with ``AttackState.observation(channel)``."""
 
     payload: Any
     form: str = "leaf"
@@ -311,6 +336,7 @@ class VoteRequest:
     overlap: bool = False
     voter_ids: Any = None
     weights: Any = None
+    attack_obs: Any = None
 
     # ---- build-time validation -----------------------------------------
 
@@ -353,6 +379,7 @@ class VoteRequest:
                     + (" / PopulationStream.prev"
                        if self.form == "streamed" else "") + ")")
         self._validate_voter_axes()
+        self._validate_attack_obs()
         self._validate_plan()
         # a stacked request always decodes through the codec (even M=1),
         # so missing server state is a build-time error there; leaf/tree
@@ -444,6 +471,62 @@ class VoteRequest:
                 raise ValueError(
                     "weights must be >= 1 (a zero-data client does not "
                     "vote; drop it from the sample instead)")
+
+    def _validate_attack_obs(self):
+        from repro.core.attacks import engine as attacks
+        if not self.failures.adaptive:
+            if self.attack_obs is not None:
+                raise ValueError(
+                    "attack_obs carries an adaptive adversary's "
+                    "observation channel, but the request's adversary "
+                    "mode is oblivious or absent — drop attack_obs or "
+                    f"use one of the adaptive modes {attacks.ATTACK_MODES}")
+            return
+        byz = self.failures.byz
+        if self.form not in ("stacked", "streamed"):
+            raise ValueError(
+                f"adaptive adversary mode {byz.mode!r} observes the "
+                "previous round's flat broadcast vote; the "
+                f"{self.form!r} form has no such observation channel "
+                "(use the stacked or streamed form)")
+        channel = attacks.MODE_CHANNEL[byz.mode]
+        keys = attacks.CHANNEL_KEYS[channel]
+        if (not isinstance(self.attack_obs, dict)
+                or set(self.attack_obs) != set(keys)):
+            got = (sorted(self.attack_obs) if isinstance(self.attack_obs,
+                                                         dict)
+                   else type(self.attack_obs).__name__)
+            raise ValueError(
+                f"adaptive mode {byz.mode!r} observes the {channel!r} "
+                f"channel: attack_obs must be a dict with exactly the "
+                f"keys {sorted(keys)} (AttackState.observation builds "
+                f"it), got {got}")
+        n = (self.payload.n_coords if self.form == "streamed"
+             else self.payload.shape[1])
+        for k in ("prev_vote", "prev_abs_counts"):
+            if k in self.attack_obs:
+                shape = tuple(np.shape(self.attack_obs[k]))
+                if shape != (n,):
+                    raise ValueError(
+                        f"attack_obs[{k!r}] must have shape ({n},) "
+                        f"aligned to the vote coordinates, got {shape}")
+        if "rep" in self.attack_obs:
+            shape = tuple(np.shape(self.attack_obs["rep"]))
+            if self.form == "streamed":
+                ids = self.payload.row_ids()
+                need = int(ids[-1]) + 1 if ids.size else 1
+            elif self.voter_ids is not None:
+                ids = np.asarray(self.voter_ids)
+                need = int(ids[-1]) + 1 if ids.size else 1
+            else:
+                need = self.payload.shape[0]
+            if len(shape) != 1 or shape[0] < need:
+                raise ValueError(
+                    "attack_obs['rep'] must be a 1-D per-voter array "
+                    f"covering every logical voter id (need >= {need} "
+                    f"entries, got shape {shape}) — refit it on "
+                    "rescale/churn like the flip-EMA "
+                    "(AttackState.refit)")
 
     def _validate_plan(self):
         if self.plan is None:
@@ -578,7 +661,8 @@ def _plan_walk(plan, flat_signs: jax.Array, axes: Tuple[str, ...],
 def _leaf_execute(values: jax.Array, axes: Tuple[str, ...],
                   strategy: VoteStrategy, codec_name: str, plan,
                   byz: Optional[ByzantineConfig], salt: int, n_stale: int,
-                  prev, step, server_state, overlap: bool = False):
+                  prev, step, server_state, overlap: bool = False,
+                  obs=None):
     """One replica-local vote inside the manual region, with the full
     failure composition in the pinned order: stale substitution on the
     RAW payload (a straggling adversary corrupts its stale vector), sign
@@ -594,14 +678,15 @@ def _leaf_execute(values: jax.Array, axes: Tuple[str, ...],
         signs = sc.sign_ternary(values)
         if byz is not None and axes:
             signs = byzantine.apply_adversary(signs, byz, axes, step=step,
-                                              salt=salt)
+                                              salt=salt, obs=obs)
         vote, new_state = _plan_walk(plan, signs, axes, server_state,
                                      overlap)
         return vote.astype(values.dtype), new_state
     shape = values.shape
     s = sc.sign_ternary(values if values.ndim else values.reshape(1))
     if byz is not None and axes:
-        s = byzantine.apply_adversary(s, byz, axes, step=step, salt=salt)
+        s = byzantine.apply_adversary(s, byz, axes, step=step, salt=salt,
+                                      obs=obs)
     vote, new_state = _wire_vote_signs(s, axes, strategy, codec_name,
                                        server_state)
     return vote.reshape(shape).astype(values.dtype), new_state
@@ -749,7 +834,7 @@ def _tree_execute(tree, axes: Tuple[str, ...], strategy: VoteStrategy,
 def effective_stacked_signs(values: jax.Array, prev=None, n_stale: int = 0,
                             byz: Optional[ByzantineConfig] = None,
                             step=None, salt: int = 0,
-                            ids=None) -> jax.Array:
+                            ids=None, obs=None) -> jax.Array:
     """The (M, n) int8 sign tensor that actually reaches the wire: sign
     extraction -> stale substitution (voter index < n_stale) -> adversary
     perturbation, in the pinned §7 order.
@@ -770,7 +855,8 @@ def effective_stacked_signs(values: jax.Array, prev=None, n_stale: int = 0,
         signs = simulate_stragglers(signs, prev.astype(signs.dtype), mask)
     if byz is not None:
         signs = byzantine.apply_adversary_stacked(signs, byz, step=step,
-                                                  salt=salt, ids=idx)
+                                                  salt=salt, ids=idx,
+                                                  obs=obs)
     return signs
 
 
@@ -869,9 +955,12 @@ def _virtual_plan_walk(signs: jax.Array, plan, server_state,
 @functools.partial(jax.jit, static_argnames=("strategy", "codec", "plan",
                                              "n_stale", "byz", "salt",
                                              "overlap"))
-def _virtual_execute(values, prev, step, server_state, *, strategy,
-                     codec, plan, n_stale, byz, salt, overlap):
-    eff = effective_stacked_signs(values, prev, n_stale, byz, step, salt)
+def _virtual_execute(values, prev, step, server_state, attack_obs, *,
+                     strategy, codec, plan, n_stale, byz, salt, overlap):
+    # attack_obs is TRACED (the adaptive observation changes every
+    # round; baking it static would recompile per step)
+    eff = effective_stacked_signs(values, prev, n_stale, byz, step, salt,
+                                  obs=attack_obs)
     if plan is not None:
         votes, state = _virtual_plan_walk(eff, plan, server_state, overlap)
     else:
@@ -1067,25 +1156,30 @@ class MeshBackend(VoteBackend):
         manual = {"data"}
         axes = ("data",)
 
-        def body(vals, prev, step, cstate):
+        # the adaptive observation dict rides as one more (replicated,
+        # P()-spec) input — an empty dict for oblivious requests, so the
+        # arity is uniform and jit's pytree structure separates the two
+        def body(vals, prev, step, cstate, aobs):
             out, new_state = _leaf_execute(
                 vals[0], axes, strategy, codec, plan, byz, salt, n_stale,
                 prev[0] if has_prev else None,
-                step if has_step else None, cstate, overlap)
+                step if has_step else None, cstate, overlap,
+                obs=aobs if aobs else None)
             return out[None], new_state
 
         # arity/specs vary with the static request shape; every variant
         # funnels into the same `body`
         if stateful:
-            def f(vals, prev, step, cstate):
-                return body(vals, prev, step, cstate)
+            def f(vals, prev, step, cstate, aobs):
+                return body(vals, prev, step, cstate, aobs)
             in_specs = (P("data"), P("data") if has_prev else P(),
-                        P(), P())
+                        P(), P(), P())
             out_specs = (P("data"), P())
         else:
-            def f(vals, prev, step):
-                return body(vals, prev, step, {})[0]
-            in_specs = (P("data"), P("data") if has_prev else P(), P())
+            def f(vals, prev, step, aobs):
+                return body(vals, prev, step, {}, aobs)[0]
+            in_specs = (P("data"), P("data") if has_prev else P(), P(),
+                        P())
             out_specs = P("data")
         sh = compat.shard_map(f, mesh=mesh, in_specs=in_specs,
                               out_specs=out_specs, axis_names=manual,
@@ -1111,14 +1205,17 @@ class MeshBackend(VoteBackend):
         prev = np.asarray(req.prev) if has_prev else np.zeros((), np.int8)
         step = (np.asarray(req.step) if has_step
                 else np.zeros((), np.int32))
+        aobs = ({} if req.attack_obs is None else
+                {k: np.asarray(a) for k, a in req.attack_obs.items()})
         if stateful:
             out, new_state = fn(vals, prev, step,
                                 {k: np.asarray(a)
-                                 for k, a in req.server_state.items()})
+                                 for k, a in req.server_state.items()},
+                                aobs)
             state = {k: jnp.asarray(np.asarray(a))
                      for k, a in new_state.items()}
         else:
-            out = fn(vals, prev, step)
+            out = fn(vals, prev, step, aobs)
             state = dict(req.server_state or {})
         votes = jnp.asarray(np.asarray(out)[0].astype(np.int8))
         resolved = (None if req.plan is not None else
@@ -1218,6 +1315,7 @@ class VirtualBackend(VoteBackend):
             f = req.failures
             votes, state, eff = _virtual_execute(
                 req.payload, req.prev, req.step, req.server_state,
+                req.attack_obs,
                 strategy=resolved, codec=req.codec, plan=req.plan,
                 n_stale=f.n_stale, byz=f.byz, salt=req.salt,
                 overlap=req.overlap)
@@ -1258,7 +1356,8 @@ class VirtualBackend(VoteBackend):
         # definition — the streamed form exists for the large-M case)
         f = req.failures
         eff = population._chunk_signs(stream, ids_np, req.step,
-                                      f.n_stale, f.byz, req.salt)
+                                      f.n_stale, f.byz, req.salt,
+                                      obs=req.attack_obs)
         return dataclasses.replace(out, wire_signs=eff)
 
     def _execute_streamed(self, req: VoteRequest) -> VoteOutcome:
@@ -1273,13 +1372,15 @@ class VirtualBackend(VoteBackend):
         resolved = ve.resolve_strategy(req.strategy, n, m, 1,
                                        codec=req.codec)
         f = req.failures
-        votes, state, margin = population.streamed_vote(
+        votes, state, margin, counts = population.streamed_vote(
             stream, strategy=resolved, codec=req.codec,
             n_stale=f.n_stale, byz=f.byz, step=req.step, salt=req.salt,
-            server_state=req.server_state, chunk_size=chunk_size)
+            server_state=req.server_state, chunk_size=chunk_size,
+            attack_obs=req.attack_obs)
         wire = _static_wire(req.plan, req.codec, resolved, n, 1, m)
         wire = dataclasses.replace(wire, margin=margin)
-        return VoteOutcome(votes=votes, server_state=state, wire=wire)
+        return VoteOutcome(votes=votes, server_state=state, wire=wire,
+                           counts=counts)
 
 
 __all__ = [

@@ -21,9 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpoint import AsyncCheckpointer, latest_step_dir, restore
-from repro.configs.base import (SHAPES, ByzantineConfig, OptimizerConfig,
-                                ShapeCell, TrainConfig, get_config,
-                                reduced_config)
+from repro.configs.base import (SHAPES, OptimizerConfig, ShapeCell,
+                                TrainConfig, get_config, reduced_config)
+from repro.core import attacks
 from repro.configs.presets import default_train_config
 from repro.data.pipeline import SyntheticLMPipeline
 from repro.distributed.fault_tolerance import Watchdog
@@ -42,7 +42,7 @@ def build(arch: str, *, reduced: bool, batch: int, seq: int,
     tcfg = TrainConfig(
         global_batch=batch, seq_len=seq, microbatches=microbatches,
         optimizer=opt,
-        byzantine=ByzantineConfig(mode=byz_mode, num_adversaries=byz_n))
+        byzantine=attacks.build_config(byz_mode, byz_n))
     return cfg, tcfg
 
 

@@ -8,6 +8,7 @@ VoteEngine wire path (DESIGN.md §7).
     trace = ScenarioRunner(spec).run()
     print(trace.summary())
 """
+from repro.core.attacks import AttackPhase, AttackState
 from repro.sim.scenario import (AdversarySpec, ChurnEvent, ElasticEvent,
                                 PlanSpec, PopulationSpec, ScenarioSpec,
                                 expand_grid, fig4_grid, load_scenarios,
@@ -18,7 +19,8 @@ from repro.sim.virtual_mesh import (VirtualVoteEngine, virtual_plan_vote,
                                     virtual_vote, virtual_vote_codec)
 
 __all__ = [
-    "AdversarySpec", "BACKENDS", "ChurnEvent", "ElasticEvent", "PlanSpec",
+    "AdversarySpec", "AttackPhase", "AttackState",
+    "BACKENDS", "ChurnEvent", "ElasticEvent", "PlanSpec",
     "PopulationSpec", "ScenarioRunner", "ScenarioSpec", "ScenarioTrace",
     "StepTrace",
     "VirtualVoteEngine", "expand_grid", "fig4_grid", "load_scenarios",

@@ -39,6 +39,7 @@ import numpy as np
 from repro.checkpoint.checkpoint import (refit_leading_axis,
                                          refit_tree_leading_axis)
 from repro.configs.base import VoteStrategy
+from repro.core import attacks
 from repro.core import codecs as codecs_mod
 from repro.core import sign_compress as sc
 from repro.core import vote_api as va
@@ -84,6 +85,11 @@ class ScenarioTrace:
     backend: str
     steps: Tuple[StepTrace, ...]
     digest: str            # sha256 over every step's raw vote bytes + x
+    #: the codec server state after the last step (e.g. the weighted
+    #: vote's flip-EMA) — observability for defense-vs-attacker analysis
+    #: (attacks/breaking_point.py reads the final reliability weights);
+    #: not part of to_dict(), the JSON surface is unchanged
+    final_server_state: Any = None
 
     def summary(self) -> Dict[str, Any]:
         impl = STRATEGIES[self.spec.strategy]
@@ -301,10 +307,9 @@ class ScenarioRunner:
 
     # ---- per-segment compiled pieces (rebuilt at elastic boundaries) ----
 
-    def _segment(self, m: int):
+    def _segment(self, m: int, byz_cfg):
         spec = self.spec
         codec = codecs_mod.get_codec(spec.codec)
-        byz_cfg = spec.adversary.byz_config(m, spec.seed)
         byz = byz_cfg if byz_cfg.mode != "none" else None
         n_stale = count_for_fraction(spec.straggler_fraction, m)
         beta = spec.momentum
@@ -315,7 +320,7 @@ class ScenarioRunner:
         oracle_backend = va.VirtualBackend()
 
         @jax.jit
-        def prepare(x, v, err, prev, cstate, noise, step):
+        def prepare(x, v, err, prev, cstate, noise, step, aobs):
             g = x[None, :] + spec.noise_scale * noise
             v2 = beta * v + (1.0 - beta) * g if beta > 0 else g
             # codec encode: fold the EF residual into the vote input (§8);
@@ -324,7 +329,7 @@ class ScenarioRunner:
             t = err + v2 if has_ef else v2
             fresh = sc.sign_ternary(t)
             eff = va.effective_stacked_signs(t, prev, n_stale, byz, step,
-                                             spec.salt)
+                                             spec.salt, obs=aobs)
             # honest-majority oracle through the SAME codec decode (and
             # the same bucket schedule when the plan axis is on): a
             # failure-free VoteRequest on the virtual backend; state is
@@ -335,7 +340,7 @@ class ScenarioRunner:
                 codec=spec.codec, plan=plan, server_state=cstate)).votes
             counts = jnp.sum(eff.astype(jnp.int32), axis=0)
             margin = jnp.mean(jnp.abs(counts).astype(jnp.float32)) / m
-            return v2, t, fresh, eff, oracle, margin
+            return v2, t, fresh, eff, oracle, counts, margin
 
         @jax.jit
         def finish(x, applied, vote, oracle):
@@ -355,7 +360,7 @@ class ScenarioRunner:
             scale = jnp.mean(jnp.abs(t), axis=1, keepdims=True)
             return t - scale * vote[None, :].astype(t.dtype)
 
-        return prepare, finish, ef_feedback, byz_cfg, n_stale, plan
+        return prepare, finish, ef_feedback, n_stale, plan
 
     # ---- telemetry (DESIGN.md §13) ----
 
@@ -401,8 +406,27 @@ class ScenarioRunner:
         # it; zeros at step 0 -> the first update is a no-op, matching
         # the trainer's weight-decay-only first step
         pending = jnp.zeros((spec.dim,), jnp.int8)
-        prepare, finish, ef_feedback, byz_cfg, n_stale, plan = \
-            self._segment(m)
+        att = spec.adversary
+        # the attacker's memory (§15): carried beside the server state,
+        # updated once per round from the published outcome, refit on
+        # elastic rescale like the reliability EMA
+        astate = (attacks.AttackState.init(spec.dim, m) if att.adaptive
+                  else None)
+        # segments cache per (m, byz_cfg): an attack schedule swaps the
+        # adversary config between steps, and re-jitting the whole
+        # prepare/finish pipeline at every phase flip would dwarf the
+        # step; config equality is exact because build_config collapses
+        # honest phases to the canonical rest state
+        segs: Dict = {}
+
+        def segment(m_, cfg):
+            key = (m_, cfg)
+            if key not in segs:
+                segs[key] = self._segment(m_, cfg)
+            return segs[key]
+
+        byz_cfg = att.byz_config_at(0, m, spec.seed)
+        prepare, finish, ef_feedback, n_stale, plan = segment(m, byz_cfg)
         # codec server state: replicated decode memory (reliability EMA);
         # under a plan the schedule's codec set decides what exists
         if plan is not None:
@@ -432,8 +456,20 @@ class ScenarioRunner:
                         cstate, {k: (m_now,) + tuple(a.shape[1:])
                                  for k, a in cstate.items()}))
                 m = m_now
-                prepare, finish, ef_feedback, byz_cfg, n_stale, plan = \
-                    self._segment(m)
+                if astate is not None:
+                    astate = astate.refit(m)
+            # schedule resolution: the config in force THIS step (equal
+            # to the base config when the schedule is empty, so
+            # schedule-free runs reuse one cached segment and keep their
+            # historical digests)
+            byz_cfg = att.byz_config_at(step, m, spec.seed)
+            prepare, finish, ef_feedback, n_stale, plan = segment(m, byz_cfg)
+            # the observation the current phase's adversary may see —
+            # None unless the phase's mode is adaptive, so oblivious
+            # phases trace exactly the legacy signature
+            aobs = (astate.observation(att.observe)
+                    if astate is not None
+                    and byz_cfg.mode in attacks.ATTACK_MODES else None)
             noise = _noise(spec, step, m)
             step_t = jnp.int32(step)
             # tracing never touches a traced value — the spans time host
@@ -442,9 +478,8 @@ class ScenarioRunner:
             # so the run digest is bit-identical with the recorder on
             # (regression-tested by tests/test_obs.py)
             with rec.span("scenario.prepare", step=step) as sp_prep:
-                v, t, fresh, eff, oracle, margin = prepare(x, v, err, prev,
-                                                           cstate, noise,
-                                                           step_t)
+                v, t, fresh, eff, oracle, counts, margin = prepare(
+                    x, v, err, prev, cstate, noise, step_t, aobs)
                 if rec.enabled:
                     jax.block_until_ready(oracle)
             # ONE declarative request per step, identical on both
@@ -465,7 +500,8 @@ class ScenarioRunner:
                                             if byz_cfg.mode != "none"
                                             else None),
                     prev=prev, step=step_t, salt=spec.salt,
-                    server_state=cstate, overlap=spec.plan.overlap))
+                    server_state=cstate, overlap=spec.plan.overlap,
+                    attack_obs=aobs))
                 if rec.enabled:
                     jax.block_until_ready(out.votes)
             vote, cstate = out.votes, out.server_state
@@ -480,6 +516,12 @@ class ScenarioRunner:
                 if rec.enabled:
                     jax.block_until_ready(x)
             prev = fresh
+            if astate is not None:
+                # one observation per round, from PUBLISHED outputs only:
+                # the broadcast vote, its tally, and the wire signs the
+                # reputation bookkeeping replays (all public, §15)
+                astate = attacks.update_attack_state(astate, vote, counts,
+                                                     eff)
             digest.update(np.asarray(vote).tobytes())
             trace = StepTrace(
                 step=step, n_workers=m,
@@ -493,7 +535,8 @@ class ScenarioRunner:
                     "finish": sp_fin.dur_s})
         digest.update(np.asarray(x, np.float32).tobytes())
         return ScenarioTrace(spec=spec, backend=self.backend,
-                             steps=tuple(steps), digest=digest.hexdigest())
+                             steps=tuple(steps), digest=digest.hexdigest(),
+                             final_server_state=cstate)
 
     # ---- the federated drill (population mode, DESIGN.md §12) ----
 
@@ -516,7 +559,12 @@ class ScenarioRunner:
         # weighted vote tracks every client's reliability, sampled into
         # a round or not)
         cstate = codec.init_server_state(pop) if codec.server_state else {}
-        byz_cfg = spec.adversary.byz_config(pop, spec.seed)
+        att = spec.adversary
+        # attacker memory over the LOGICAL population (ids, not rows):
+        # the reputation mirror refits on churn like the flip-EMA
+        astate = (attacks.AttackState.init(spec.dim, pop) if att.adaptive
+                  else None)
+        from repro.core import population as pop_engine
         pending = jnp.zeros((spec.dim,), jnp.int8)   # delayed-vote buffer
         digest = hashlib.sha256()
         steps: List[StepTrace] = []
@@ -535,11 +583,17 @@ class ScenarioRunner:
                             {key: (pop_now,) + tuple(np.asarray(a).shape[1:])
                              for key, a in cstate.items()}))
                 pop = pop_now
-                # adversary count is pinned to the LOGICAL population
-                # (ids < num_adversaries act evil); the realized count
-                # in a sampled round varies with the draw
-                byz_cfg = spec.adversary.byz_config(pop, spec.seed)
+                if astate is not None:
+                    astate = astate.refit(pop)
+            # adversary count is pinned to the LOGICAL population (ids <
+            # num_adversaries act evil); the realized count in a sampled
+            # round varies with the draw. byz_config_at resolves the
+            # attack schedule too — equal to byz_config when no schedule
+            byz_cfg = att.byz_config_at(step, pop, spec.seed)
             byz = byz_cfg if byz_cfg.mode != "none" else None
+            aobs = (astate.observation(att.observe)
+                    if astate is not None
+                    and byz_cfg.mode in attacks.ATTACK_MODES else None)
             k = max(1, count_for_fraction(pspec.sample_fraction, pop))
             ids = _sample_ids(spec, step, pop, k)
             step_t = jnp.int32(step)
@@ -555,8 +609,7 @@ class ScenarioRunner:
                 # honest-majority oracle for the flip trace: the same
                 # stream, failure-free, state read-only (runs FIRST so
                 # the population.last.* counters reflect the real vote)
-                from repro.core import population as pop_engine
-                oracle, _, _ = pop_engine.streamed_vote(
+                oracle, _, _, _ = pop_engine.streamed_vote(
                     stream, strategy=spec.strategy, codec=spec.codec,
                     step=step_t, salt=spec.salt, server_state=cstate,
                     chunk_size=pspec.chunk_size)
@@ -566,7 +619,8 @@ class ScenarioRunner:
                 out = self._exec.execute(va.VoteRequest(
                     payload=stream, form="streamed", strategy=spec.strategy,
                     codec=spec.codec, failures=va.FailureSpec(byz=byz),
-                    step=step_t, salt=spec.salt, server_state=cstate))
+                    step=step_t, salt=spec.salt, server_state=cstate,
+                    attack_obs=aobs))
                 if rec.enabled:
                     jax.block_until_ready(out.votes)
             vote, cstate = out.votes, out.server_state
@@ -578,6 +632,26 @@ class ScenarioRunner:
                 applied = vote
             x = x - spec.learning_rate * applied.astype(jnp.float32)
             loss = float(0.5 * jnp.mean(x * x))
+            if astate is not None:
+                if att.observe == "reputation":
+                    # replay the flip-EMA observation the codec makes:
+                    # per-sampled-voter mismatch counts vs the published
+                    # vote, assembled chunk-by-chunk over the SAME wire
+                    # signs the round produced (public bookkeeping, §15)
+                    mis = np.zeros(k, np.float32)
+                    for lo, ids_np in pop_engine._chunks(
+                            stream, pspec.chunk_size):
+                        eff_c = pop_engine._chunk_signs(
+                            stream, ids_np, step_t, 0, byz, spec.salt,
+                            obs=aobs)
+                        mis[lo:lo + len(ids_np)] = np.asarray(
+                            pop_engine._chunk_mismatch(eff_c, vote))
+                    astate = attacks.update_attack_state_population(
+                        astate, vote, out.counts, ids, mis / spec.dim)
+                else:
+                    astate = attacks.update_attack_state_population(
+                        astate, vote, out.counts,
+                        np.zeros(0, np.int32), np.zeros(0, np.float32))
             digest.update(np.asarray(vote).tobytes())
             trace = StepTrace(
                 step=step, n_workers=k,
@@ -592,7 +666,8 @@ class ScenarioRunner:
                     - chunks_before)
         digest.update(np.asarray(x, np.float32).tobytes())
         return ScenarioTrace(spec=spec, backend=self.backend,
-                             steps=tuple(steps), digest=digest.hexdigest())
+                             steps=tuple(steps), digest=digest.hexdigest(),
+                             final_server_state=cstate)
 
 
 def run_scenarios(specs, backend: str = "virtual",

@@ -41,33 +41,102 @@ def scenario_salt(name: str) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class AdversarySpec:
-    """Which adversary model, at what fraction of the current voter set."""
+    """Which adversary model, at what fraction of the current voter set.
 
-    mode: str = "none"        # core.byzantine.MODES
+    The §15 attack axes: ``mode`` may also be one of the adaptive
+    ``repro.core.attacks`` modes, in which case ``observe`` MUST name
+    the mode's observation channel (``attacks.MODE_CHANNEL``) — the
+    spec states explicitly what the adversary is allowed to see, and a
+    dangling or mismatched channel is a build error, not a silent
+    no-op. ``schedule`` is the time-varying coalition
+    (:class:`~repro.core.attacks.AttackPhase` overrides, applied at
+    their steps); all adaptive modes a schedule can reach must share
+    one channel. ``target_fraction`` (low_margin) and ``strike_below``
+    (reputation) are the adaptive modes' own knobs."""
+
+    mode: str = "none"        # byzantine.MODES | attacks.ATTACK_MODES
     fraction: float = 0.0     # of the CURRENT voter count (elastic-aware)
     flip_prob: float = 0.5    # blind mode only
+    observe: str = "none"     # attacks.OBSERVE_CHANNELS
+    schedule: Tuple[Any, ...] = ()         # attacks.AttackPhase overrides
+    target_fraction: float = 0.25          # low_margin mode only
+    strike_below: float = 0.1              # reputation mode only
 
     def __post_init__(self):
-        if self.mode not in byzantine.MODES:
+        from repro.core import attacks
+        if (self.mode not in byzantine.MODES
+                and self.mode not in attacks.ATTACK_MODES):
             raise ValueError(f"unknown adversary mode {self.mode!r}; "
-                             f"have {byzantine.MODES}")
+                             f"have {byzantine.MODES} plus adaptive "
+                             f"{attacks.ATTACK_MODES}")
         if not 0.0 <= self.fraction <= 1.0:
             raise ValueError(f"adversary fraction {self.fraction} not in "
                              "[0, 1]")
         if not 0.0 <= self.flip_prob <= 1.0:
             raise ValueError(f"flip_prob {self.flip_prob} not in [0, 1]")
+        if not 0.0 < self.target_fraction <= 1.0:
+            raise ValueError(f"target_fraction {self.target_fraction} "
+                             "not in (0, 1]")
+        if not 0.0 <= self.strike_below <= 1.0:
+            raise ValueError(f"strike_below {self.strike_below} not in "
+                             "[0, 1]")
+        if self.observe not in attacks.OBSERVE_CHANNELS:
+            raise ValueError(f"unknown observation channel "
+                             f"{self.observe!r}; have "
+                             f"{attacks.OBSERVE_CHANNELS}")
+        attacks.validate_schedule(self.schedule)
+        need = attacks.required_channel(
+            attacks.modes_used(self.schedule, self.mode))
+        if need == "none" and self.observe != "none":
+            raise ValueError(
+                f"observe={self.observe!r} grants an observation "
+                "channel but no adaptive mode consumes it (mode/"
+                "schedule are all oblivious) — drop observe or use an "
+                f"adaptive mode {attacks.ATTACK_MODES}")
+        if need != "none" and self.observe != need:
+            raise ValueError(
+                f"adaptive mode(s) here consume the {need!r} channel; "
+                f"the spec says observe={self.observe!r} — state the "
+                "channel the adversary actually sees (observe="
+                f"{need!r})")
+
+    @property
+    def adaptive(self) -> bool:
+        return self.observe != "none"
+
+    def phase_at(self, step: int) -> Tuple[str, float]:
+        """The (mode, fraction) in force at `step` under the schedule."""
+        from repro.core import attacks
+        return attacks.phase_at(self.schedule, self.mode, self.fraction,
+                                step)
 
     def byz_config(self, n_workers: int, seed: int) -> ByzantineConfig:
         """The core-layer config for a concrete voter count (the count is
-        re-derived after every elastic event)."""
-        from repro.distributed.fault_tolerance import count_for_fraction
-        honest = self.mode == "none" or self.fraction == 0.0
-        return ByzantineConfig(
-            mode="none" if honest else self.mode,
-            num_adversaries=(0 if honest
-                             else count_for_fraction(self.fraction,
-                                                     n_workers)),
-            seed=seed, flip_prob=self.flip_prob)
+        re-derived after every elastic event), ignoring the schedule —
+        the pre-run coalition."""
+        return self.byz_config_at(0, n_workers, seed)
+
+    def byz_config_at(self, step: int, n_workers: int,
+                      seed: int) -> ByzantineConfig:
+        """The config in force at `step`: schedule resolution, then the
+        exact-``Fraction`` coalition count, through the sanctioned
+        ``repro.core.attacks`` factory."""
+        from repro.core import attacks
+        mode, fraction = self.phase_at(step)
+        return attacks.coalition_config(
+            mode, fraction, n_workers, seed=seed,
+            flip_prob=self.flip_prob,
+            target_fraction=self.target_fraction,
+            strike_below=self.strike_below)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "AdversarySpec":
+        from repro.core.attacks import AttackPhase
+        d = dict(d)
+        d["schedule"] = tuple(
+            p if isinstance(p, AttackPhase) else AttackPhase(**p)
+            for p in d.get("schedule", ()))
+        return cls(**d)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -410,7 +479,7 @@ class ScenarioSpec:
         if "strategy" in d:
             d["strategy"] = VoteStrategy(d["strategy"])
         if "adversary" in d and isinstance(d["adversary"], dict):
-            d["adversary"] = AdversarySpec(**d["adversary"])
+            d["adversary"] = AdversarySpec.from_dict(d["adversary"])
         if "elastic" in d:
             d["elastic"] = tuple(
                 e if isinstance(e, ElasticEvent) else ElasticEvent(**e)
@@ -501,13 +570,24 @@ def expand_grid(grid: Dict[str, Any],
                     if name in seen:
                         continue
                     seen.add(name)
+                    adv = {"mode": eff_mode, "fraction": frac,
+                           **grid.get("adversary_extra", {})}
+                    from repro.core import attacks
+                    if eff_mode in attacks.MODE_CHANNEL:
+                        # adaptive cells state their channel explicitly
+                        # (AdversarySpec validation demands it)
+                        adv.setdefault("observe",
+                                       attacks.MODE_CHANNEL[eff_mode])
+                    elif frac == 0:
+                        # the honest anchor cell: adaptive-only knobs
+                        # from adversary_extra would dangle
+                        adv.pop("observe", None)
+                        adv.pop("schedule", None)
                     doc = {
                         **base,
                         "name": name,
                         "strategy": strategy,
-                        "adversary": {"mode": eff_mode,
-                                      "fraction": frac,
-                                      **grid.get("adversary_extra", {})},
+                        "adversary": adv,
                     }
                     if codec:
                         doc["codec"] = codec
@@ -526,7 +606,10 @@ def preset_scenarios() -> List[ScenarioSpec]:
     """Named drills covering the interesting boundary regimes: the paper's
     <50% guarantee, the exact-50% tie, >50% blind adversaries (vote
     rightly fails), colluding coalitions, straggler x adversary
-    composition, and a mid-run shrink/regrow."""
+    composition, a mid-run shrink/regrow, and the §15 adaptive
+    attackers (margin-targeting, and a sleeper coalition waking into
+    the defense-aware reputation mode against the weighted vote)."""
+    from repro.core.attacks import AttackPhase
     S = VoteStrategy
     return [
         ScenarioSpec("honest/baseline", n_workers=15, strategy=S.PSUM_INT8),
@@ -549,6 +632,16 @@ def preset_scenarios() -> List[ScenarioSpec]:
                      adversary=AdversarySpec("random", 0.25),
                      elastic=(ElasticEvent(10, 4, "pod failure"),
                               ElasticEvent(20, 6, "partial rejoin"))),
+        ScenarioSpec("adv/adaptive_low_margin", n_workers=15,
+                     strategy=S.ALLGATHER_1BIT,
+                     adversary=AdversarySpec("low_margin", 0.375,
+                                             observe="margin")),
+        ScenarioSpec("adv/sleeper_reputation", n_workers=15,
+                     strategy=S.ALLGATHER_1BIT, codec="weighted_vote",
+                     adversary=AdversarySpec(
+                         "none", 0.0, observe="reputation",
+                         schedule=(AttackPhase(step=5, mode="reputation",
+                                               fraction=1 / 3),))),
     ]
 
 

@@ -1,0 +1,75 @@
+"""Adaptive-attack multi-device harness, run in a subprocess by
+tests/test_attack_properties.py (so the main pytest session keeps one
+CPU device).
+
+On an 8-device host platform it drives every adaptive mode — plus a
+scheduled sleeper coalition — through BOTH Scenario Lab backends and
+asserts mesh == virtual bit for bit (digest equality). The adaptive
+modes are deterministic given the observation (no PRNG), so any digest
+split would mean the observation channel itself diverged between the
+backends.
+
+Run with ``virtual-only`` as argv[1] to skip the mesh half; the parent
+test diffs the printed ADIGEST lines of an 8-device run against a
+1-device run — host-count invariance of the adaptive paths, asserted.
+"""
+import os
+import sys
+
+if os.environ.get("XLA_FLAGS") is None:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+
+from repro.configs.base import VoteStrategy
+from repro.core.attacks import AttackPhase
+from repro.sim import AdversarySpec, ScenarioRunner, ScenarioSpec
+
+
+def harness_specs():
+    S = VoteStrategy
+    return [
+        ScenarioSpec("ah/adaptive_flip", n_workers=8, n_steps=5, dim=48,
+                     strategy=S.ALLGATHER_1BIT,
+                     adversary=AdversarySpec("adaptive_flip", 0.375,
+                                             observe="vote")),
+        # a second wire strategy: the observation threading must be
+        # strategy-agnostic
+        ScenarioSpec("ah/low_margin_psum", n_workers=8, n_steps=5,
+                     dim=48, strategy=S.PSUM_INT8,
+                     adversary=AdversarySpec("low_margin", 0.375,
+                                             observe="margin")),
+        ScenarioSpec("ah/reputation_weighted", n_workers=8, n_steps=6,
+                     dim=48, strategy=S.ALLGATHER_1BIT,
+                     codec="weighted_vote",
+                     adversary=AdversarySpec("reputation", 0.375,
+                                             observe="reputation")),
+        # sleeper coalition waking into an adaptive mode, then growing
+        ScenarioSpec("ah/scheduled", n_workers=8, n_steps=7, dim=48,
+                     strategy=S.ALLGATHER_1BIT,
+                     adversary=AdversarySpec(
+                         "none", 0.0, observe="vote",
+                         schedule=(AttackPhase(step=2,
+                                               mode="adaptive_flip",
+                                               fraction=0.25),
+                                   AttackPhase(step=5, fraction=0.5)))),
+    ]
+
+
+def main() -> None:
+    virtual_only = "virtual-only" in sys.argv[1:]
+    for spec in harness_specs():
+        vd = ScenarioRunner(spec, backend="virtual").run().digest
+        print(f"ADIGEST {spec.name} {vd}")
+        if not virtual_only:
+            assert len(jax.devices()) >= spec.n_workers, \
+                "harness needs the 8-device host platform"
+            md = ScenarioRunner(spec, backend="mesh").run().digest
+            assert md == vd, (
+                f"{spec.name}: mesh digest {md} != virtual {vd} — the "
+                "adaptive observation channel diverged between backends")
+    print("ALL ATTACK HARNESS CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""Property twins for the attack engine (DESIGN.md §15).
+
+The invariant under test: a randomly generated AttackSchedule either
+(a) fails AdversarySpec build-time validation — deterministically, with
+the same error on every attempt — or (b) runs, in which case the drill
+is bit-identical across repeated runs, across population chunk sizes,
+and (via the subprocess harness tests/attack_harness.py) across the
+mesh and virtual backends and across host device counts.
+
+The generator is seeded ``np.random`` (no ambient entropy), so the
+deterministic lane below always runs; an equivalent hypothesis-driven
+lane runs when hypothesis is installed (importorskip otherwise).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.base import VoteStrategy
+from repro.core import attacks
+from repro.sim import (AdversarySpec, PopulationSpec, ScenarioRunner,
+                       ScenarioSpec)
+
+HARNESS = os.path.join(os.path.dirname(__file__), "attack_harness.py")
+
+#: phase-mode pool: obliviouses, adaptives (two channels, so mixing
+#: draws are possible), inherit (None), and one invalid name
+_MODES = (None, "none", "sign_flip", "colluding", "adaptive_flip",
+          "low_margin", "reputation", "bogus_mode")
+_FRACTIONS = (None, 0.0, 0.25, 0.375, 7 / 15, 0.5, 1.5)
+
+
+def _random_phase_dicts(rng):
+    """A few random phase dicts — deliberately allowed to be invalid
+    (step 0, duplicate steps, bad fraction/mode, nothing overridden)."""
+    n = int(rng.integers(0, 4))
+    steps = rng.integers(0, 8, size=n)          # 0 and duplicates occur
+    out = []
+    for s in steps:
+        out.append(dict(step=int(s),
+                        mode=_MODES[rng.integers(len(_MODES))],
+                        fraction=_FRACTIONS[rng.integers(
+                            len(_FRACTIONS))]))
+    return out
+
+
+def _build_spec(phase_dicts, base_mode):
+    """AttackPhases -> AdversarySpec -> ScenarioSpec, letting every
+    build-time validator see the raw material; the observe channel is
+    derived the way a correct caller would."""
+    schedule = tuple(attacks.AttackPhase(**d) for d in phase_dicts)
+    observe = attacks.required_channel(
+        attacks.modes_used(schedule, base_mode))
+    adv = AdversarySpec(base_mode, 0.25, observe=observe,
+                        schedule=schedule)
+    codec = "weighted_vote" if observe == "reputation" else "sign1bit"
+    return ScenarioSpec(
+        f"prop/{base_mode}", n_workers=6, n_steps=6, dim=16,
+        strategy=VoteStrategy.ALLGATHER_1BIT, codec=codec, adversary=adv)
+
+
+def _outcome(phase_dicts, base_mode):
+    """(("error", message)) on rejection, (("digest", hex)) on a run."""
+    try:
+        spec = _build_spec(phase_dicts, base_mode)
+    except (ValueError, TypeError) as e:
+        return ("error", str(e))
+    return ("digest", ScenarioRunner(spec, backend="virtual").run().digest)
+
+
+def test_random_schedules_reject_or_run_deterministically():
+    rng = np.random.default_rng(0)
+    rejected = ran = 0
+    for _ in range(12):
+        phase_dicts = _random_phase_dicts(rng)
+        base = ("none", "sign_flip",
+                "adaptive_flip")[int(rng.integers(3))]
+        first = _outcome(phase_dicts, base)
+        second = _outcome(phase_dicts, base)
+        assert first == second, (phase_dicts, base, first, second)
+        if first[0] == "error":
+            rejected += 1
+        else:
+            ran += 1
+            # a schedule that runs also survives the JSON round trip
+            spec = _build_spec(phase_dicts, base)
+            back = ScenarioSpec.from_dict(
+                json.loads(json.dumps(spec.to_dict())))
+            assert back == spec
+    # the generator must actually exercise both arms
+    assert rejected > 0 and ran > 0, (rejected, ran)
+
+
+def test_hypothesis_schedules_reject_or_run_identically():
+    """The same invariant driven by hypothesis, when available."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    phase = st.fixed_dictionaries({
+        "step": st.integers(min_value=0, max_value=7),
+        "mode": st.sampled_from(_MODES),
+        "fraction": st.sampled_from(_FRACTIONS)})
+
+    @hyp.settings(max_examples=25, deadline=None)
+    @hyp.given(phases=st.lists(phase, max_size=3),
+               base=st.sampled_from(("none", "sign_flip",
+                                     "adaptive_flip")))
+    def run(phases, base):
+        assert _outcome(phases, base) == _outcome(phases, base)
+
+    run()
+
+
+def test_population_adaptive_chunk_invariance():
+    """The streamed adaptive path must not depend on how the sampled
+    population is chunked (chunk sizes straddling the 12-client sample:
+    smaller, coprime, and one-shot)."""
+    digests = set()
+    for chunk in (3, 7, 24):
+        spec = ScenarioSpec(
+            "prop/chunks", n_workers=8, n_steps=4, dim=24, momentum=0.0,
+            strategy=VoteStrategy.ALLGATHER_1BIT,
+            adversary=AdversarySpec("low_margin", 0.375,
+                                    observe="margin"),
+            population=PopulationSpec(n_clients=24, sample_fraction=0.5,
+                                      chunk_size=chunk))
+        digests.add(ScenarioRunner(spec, backend="virtual").run().digest)
+    assert len(digests) == 1, digests
+
+
+def _run_harness(device_count, *args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={device_count}"
+    proc = subprocess.run([sys.executable, HARNESS, *args], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "attack harness failed"
+    assert "ALL ATTACK HARNESS CHECKS PASSED" in proc.stdout
+    return {line.split()[1]: line.split()[2]
+            for line in proc.stdout.splitlines()
+            if line.startswith("ADIGEST ")}
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(1200)
+def test_attack_mesh_equals_virtual_and_host_count_invariant():
+    """Every adaptive mode + the scheduled sleeper: mesh == virtual on
+    8 devices (asserted inside the harness), and the virtual digests
+    match a 1-device replay (host-count invariance)."""
+    d8 = _run_harness(8)
+    d1 = _run_harness(1, "virtual-only")
+    assert d8 and set(d8) == set(d1)
+    for name in d8:
+        assert d8[name] == d1[name], (
+            f"{name}: adaptive digest differs between 8-device and "
+            "1-device replays")

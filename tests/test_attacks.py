@@ -1,0 +1,395 @@
+"""Unit tests for the stateful attack engine (DESIGN.md §15).
+
+Covers the sanctioned ByzantineConfig factories (honest collapse,
+exact-Fraction coalition counting shared by the dense / population /
+scheduled paths), the adaptive per-mode sign semantics, the
+AttackState memory (channel-sliced observation, elastic refit, and the
+rep EMA replaying the weighted_vote flip-EMA bit for bit), the
+time-varying schedule algebra, the AdversarySpec observe/schedule
+build-time validation, VoteRequest.attack_obs validation, and the
+defense-aware-vs-oblivious degradation gate.
+"""
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import VoteStrategy
+from repro.core import attacks
+from repro.core.attacks import breaking_point as bp
+from repro.core.codecs import weighted
+from repro.core import vote_api as va
+from repro.distributed.fault_tolerance import count_for_fraction
+from repro.sim import AdversarySpec, ScenarioRunner, ScenarioSpec
+
+
+# ---------------------------------------------------------------------------
+# the sanctioned factories
+# ---------------------------------------------------------------------------
+
+
+def test_build_config_validates_and_collapses_honest():
+    with pytest.raises(ValueError, match="unknown adversary mode"):
+        attacks.build_config("nope", 2)
+    with pytest.raises(ValueError, match=">= 0"):
+        attacks.build_config("sign_flip", -1)
+    # honest collapses to the canonical rest state either way, so
+    # config equality (the runner's segment cache key) cannot split on
+    # knobs that do not matter
+    a = attacks.build_config("sign_flip", 0)
+    b = attacks.build_config("none", 5)
+    assert (a.mode, a.num_adversaries) == ("none", 0)
+    assert a == b == attacks.build_config("none", 0)
+    cfg = attacks.build_config("adaptive_flip", 3, strike_below=0.2)
+    assert (cfg.mode, cfg.num_adversaries, cfg.strike_below) == \
+        ("adaptive_flip", 3, 0.2)
+
+
+def test_coalition_config_fraction_range():
+    with pytest.raises(ValueError, match=r"\[0, 1\]"):
+        attacks.coalition_config("sign_flip", 1.5, 8)
+
+
+@pytest.mark.parametrize("fraction,n,expect", [
+    (0.5, 16, 8),        # the DESIGN.md §7 tie boundary, half-up
+    (0.5, 15, 8),        # 7.5 rounds half-up to 8
+    (7 / 15, 15, 7),     # exact-Fraction: 7.0, no float drift
+    (0.375, 8, 3),
+    (1 / 3, 9, 3),
+    (0.0, 8, 0),
+])
+def test_coalition_counting_is_unified(fraction, n, expect):
+    """Satellite (a): dense AdversarySpec.byz_config, the factory, and
+    the schedule path all size the coalition through ONE half-up
+    exact-``Fraction`` rule — boundary fractions can never round
+    differently between backends."""
+    assert count_for_fraction(fraction, n) == expect
+    cfg = attacks.coalition_config("sign_flip", fraction, n)
+    assert cfg.num_adversaries == (0 if expect == 0 else expect)
+    spec = AdversarySpec("sign_flip", fraction)
+    assert spec.byz_config(n, seed=0).num_adversaries == \
+        cfg.num_adversaries
+    # schedule resolution at a later step uses the same rule
+    sched = AdversarySpec("none", 0.0, schedule=(
+        attacks.AttackPhase(step=2, mode="sign_flip", fraction=fraction),))
+    assert sched.byz_config_at(5, n, seed=0).num_adversaries == \
+        cfg.num_adversaries
+    assert sched.byz_config_at(1, n, seed=0).mode == "none"
+
+
+def test_required_channel_rejects_mixing():
+    assert attacks.required_channel(["sign_flip", "none"]) == "none"
+    assert attacks.required_channel(["adaptive_flip", "colluding"]) == \
+        "vote"
+    with pytest.raises(ValueError, match="mixes observation channels"):
+        attacks.required_channel(["adaptive_flip", "reputation"])
+
+
+# ---------------------------------------------------------------------------
+# adaptive sign semantics
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_evil_signs_requires_observation():
+    cfg = attacks.build_config("adaptive_flip", 2)
+    with pytest.raises(ValueError, match="observation channel"):
+        attacks.adaptive_evil_signs(jnp.ones((4,), jnp.int8), cfg,
+                                    jnp.int32(0), None)
+
+
+def test_adaptive_flip_negates_prev_vote_honest_on_abstain():
+    cfg = attacks.build_config("adaptive_flip", 1)
+    signs = jnp.asarray([1, 1, -1, -1], jnp.int8)
+    obs = {"prev_vote": jnp.asarray([1, -1, 0, 1], jnp.int8)}
+    out = np.asarray(attacks.adaptive_evil_signs(signs, cfg,
+                                                 jnp.int32(0), obs))
+    # anti-vote where the vote spoke, honest where it abstained (incl.
+    # the all-zero step-0 state => fully honest first round)
+    assert out.tolist() == [-1, 1, -1, -1]
+    zero = {"prev_vote": jnp.zeros((4,), jnp.int8)}
+    assert np.array_equal(
+        np.asarray(attacks.adaptive_evil_signs(signs, cfg, jnp.int32(0),
+                                               zero)),
+        np.asarray(signs))
+
+
+def test_low_margin_strikes_smallest_tallies_only():
+    cfg = attacks.build_config("low_margin", 1, target_fraction=0.25)
+    n = 8
+    signs = jnp.ones((n,), jnp.int8)
+    pv = jnp.asarray([1, -1, 1, -1, 1, -1, 1, -1], jnp.int8)
+    counts = jnp.asarray([7, 1, 6, 5, 3, 8, 2, 4], jnp.int32)
+    out = np.asarray(attacks.adaptive_evil_signs(
+        signs, cfg, jnp.int32(0), {"prev_vote": pv,
+                                   "prev_abs_counts": counts}))
+    # k = 0.25 * 8 = 2 smallest |tallies| (coords 1 and 6) flipped
+    # AGAINST the previous vote; everywhere else honest
+    assert out.tolist() == [1, 1, 1, 1, 1, 1, -1, 1]
+
+
+def test_reputation_strikes_while_trusted():
+    cfg = attacks.build_config("reputation", 2, strike_below=0.1)
+    signs = jnp.ones((4,), jnp.int8)
+    rep = jnp.asarray([0.0, 0.5], jnp.float32)
+    struck = np.asarray(attacks.adaptive_evil_signs(
+        signs, cfg, jnp.int32(0), {"rep": rep}))
+    honest = np.asarray(attacks.adaptive_evil_signs(
+        signs, cfg, jnp.int32(1), {"rep": rep}))
+    # id 0 is fully trusted (EMA 0 < strike_below) -> strikes; id 1 is
+    # burnt (0.5 >= strike_below) -> rebuilds by voting honestly
+    assert struck.tolist() == [-1, -1, -1, -1]
+    assert honest.tolist() == [1, 1, 1, 1]
+
+
+# ---------------------------------------------------------------------------
+# the attacker's memory
+# ---------------------------------------------------------------------------
+
+
+def test_attack_state_init_and_observation_slicing():
+    st = attacks.AttackState.init(6, 4)
+    assert st.prev_vote.shape == (6,) and st.prev_vote.dtype == jnp.int8
+    assert st.prev_abs_counts.shape == (6,)
+    assert st.rep.shape == (4,)
+    assert st.observation("none") is None
+    assert set(st.observation("vote")) == {"prev_vote"}
+    assert set(st.observation("margin")) == {"prev_vote",
+                                             "prev_abs_counts"}
+    assert set(st.observation("reputation")) == {"rep"}
+    with pytest.raises(ValueError, match="unknown observation channel"):
+        st.observation("everything")
+
+
+def test_attack_state_refit_pads_and_truncates():
+    st = attacks.AttackState.init(3, 4)
+    st = dataclasses.replace(st, rep=jnp.asarray([0.1, 0.2, 0.3, 0.4],
+                                                 jnp.float32))
+    grown = st.refit(6)
+    assert np.allclose(np.asarray(grown.rep),
+                       [0.1, 0.2, 0.3, 0.4, 0.0, 0.0])
+    shrunk = st.refit(2)
+    assert np.allclose(np.asarray(shrunk.rep), [0.1, 0.2])
+    # per-coordinate arrays untouched
+    assert grown.prev_vote.shape == (3,)
+
+
+def test_attack_state_rep_replays_weighted_flip_ema_exactly():
+    """The reputation channel is public bookkeeping: one round of
+    update_attack_state must land on the very same EMA the weighted
+    codec's decode_stacked computes from the same wire."""
+    rng = np.random.default_rng(7)
+    m, n = 5, 32
+    eff = jnp.asarray(rng.choice([-1, 1], size=(m, n)).astype(np.int8))
+    ema0 = jnp.asarray(rng.uniform(0, 0.6, size=m).astype(np.float32))
+    vote, ema1 = weighted.decode_stacked(eff, ema0)
+    st = dataclasses.replace(attacks.AttackState.init(n, m), rep=ema0)
+    st = attacks.update_attack_state(st, vote, vote.astype(jnp.int32),
+                                     eff)
+    np.testing.assert_array_equal(np.asarray(st.rep), np.asarray(ema1))
+    np.testing.assert_array_equal(np.asarray(st.prev_vote),
+                                  np.asarray(vote))
+
+
+def test_update_attack_state_population_touches_sampled_ids_only():
+    st = attacks.AttackState.init(4, 6)
+    st = dataclasses.replace(st, rep=jnp.full((6,), 0.4, jnp.float32))
+    vote = jnp.asarray([1, -1, 1, -1], jnp.int8)
+    st2 = attacks.update_attack_state_population(
+        st, vote, vote.astype(jnp.int32),
+        np.asarray([1, 4], np.int32), np.asarray([1.0, 0.0], np.float32))
+    rep = np.asarray(st2.rep)
+    # sampled ids move by the codec's (1-RHO)*ema + RHO*mis rule
+    assert np.isclose(rep[1], (1 - weighted.RHO) * 0.4 + weighted.RHO)
+    assert np.isclose(rep[4], (1 - weighted.RHO) * 0.4)
+    # unsampled ids keep their EMA (mirrors the streamed codec update)
+    assert np.allclose(rep[[0, 2, 3, 5]], 0.4)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def test_attack_phase_validation():
+    with pytest.raises(ValueError, match="must be >= 1"):
+        attacks.AttackPhase(step=0, fraction=0.5)
+    with pytest.raises(ValueError, match="overrides nothing"):
+        attacks.AttackPhase(step=3)
+    with pytest.raises(ValueError, match=r"\[0, 1\]"):
+        attacks.AttackPhase(step=3, fraction=1.5)
+    with pytest.raises(ValueError, match="unknown AttackPhase.mode"):
+        attacks.AttackPhase(step=3, mode="nope")
+
+
+def test_validate_schedule_rejects_disorder():
+    p2 = attacks.AttackPhase(step=2, fraction=0.25)
+    p5 = attacks.AttackPhase(step=5, mode="colluding")
+    attacks.validate_schedule((p2, p5))        # in order: fine
+    with pytest.raises(ValueError, match="strictly increasing"):
+        attacks.validate_schedule((p5, p2))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        attacks.validate_schedule((p2, attacks.AttackPhase(
+            step=2, mode="zero")))
+    with pytest.raises(ValueError, match="must be AttackPhase"):
+        attacks.validate_schedule(({"step": 2, "fraction": 0.5},))
+
+
+def test_phase_at_inherits_unset_fields():
+    sched = (attacks.AttackPhase(step=2, fraction=0.25),
+             attacks.AttackPhase(step=4, mode="colluding"),
+             attacks.AttackPhase(step=6, fraction=0.5, mode="none"))
+    assert attacks.phase_at(sched, "sign_flip", 0.0, 1) == \
+        ("sign_flip", 0.0)
+    assert attacks.phase_at(sched, "sign_flip", 0.0, 2) == \
+        ("sign_flip", 0.25)   # fraction overridden, mode inherited
+    assert attacks.phase_at(sched, "sign_flip", 0.0, 5) == \
+        ("colluding", 0.25)   # mode overridden, fraction carried over
+    assert attacks.phase_at(sched, "sign_flip", 0.0, 99) == \
+        ("none", 0.5)
+    assert attacks.modes_used(sched, "sign_flip") == \
+        ("sign_flip", "colluding", "none")
+
+
+# ---------------------------------------------------------------------------
+# AdversarySpec build-time validation + JSON round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_adversary_spec_channel_must_match_mode():
+    with pytest.raises(ValueError, match="consume the 'vote' channel"):
+        AdversarySpec("adaptive_flip", 0.25)            # observe unset
+    with pytest.raises(ValueError, match="consume the 'margin'"):
+        AdversarySpec("low_margin", 0.25, observe="vote")
+    with pytest.raises(ValueError, match="no adaptive mode consumes"):
+        AdversarySpec("sign_flip", 0.25, observe="vote")
+    ok = AdversarySpec("reputation", 0.25, observe="reputation")
+    assert ok.adaptive
+    assert not AdversarySpec("colluding", 0.25).adaptive
+
+
+def test_adversary_spec_schedule_channel_resolution():
+    # a sleeper schedule reaching an adaptive mode needs its channel,
+    # even though the base mode is oblivious
+    with pytest.raises(ValueError, match="consume the 'vote' channel"):
+        AdversarySpec("none", 0.0, schedule=(
+            attacks.AttackPhase(step=3, mode="adaptive_flip",
+                                fraction=0.375),))
+    spec = AdversarySpec("none", 0.0, observe="vote", schedule=(
+        attacks.AttackPhase(step=3, mode="adaptive_flip",
+                            fraction=0.375),))
+    assert spec.phase_at(2) == ("none", 0.0)
+    assert spec.phase_at(3) == ("adaptive_flip", 0.375)
+    # two adaptive modes on different channels can never share a run
+    with pytest.raises(ValueError, match="mixes observation channels"):
+        AdversarySpec("adaptive_flip", 0.25, observe="vote", schedule=(
+            attacks.AttackPhase(step=4, mode="reputation"),))
+
+
+def test_scheduled_scenario_json_round_trip():
+    spec = ScenarioSpec(
+        "rt/sched", n_workers=8, n_steps=6, dim=32,
+        strategy=VoteStrategy.ALLGATHER_1BIT, codec="weighted_vote",
+        adversary=AdversarySpec(
+            "none", 0.0, observe="reputation",
+            schedule=(attacks.AttackPhase(step=2, mode="reputation",
+                                          fraction=0.375),
+                      attacks.AttackPhase(step=5, fraction=0.25))))
+    back = ScenarioSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert back == spec
+    assert back.adversary.schedule[0] == attacks.AttackPhase(
+        step=2, mode="reputation", fraction=0.375)
+
+
+# ---------------------------------------------------------------------------
+# VoteRequest.attack_obs validation
+# ---------------------------------------------------------------------------
+
+
+def _stacked_request(**kw):
+    payload = jnp.ones((4, 16), jnp.int8)
+    kw.setdefault("form", "stacked")
+    kw.setdefault("strategy", VoteStrategy.ALLGATHER_1BIT)
+    return va.VoteRequest(payload=payload, **kw)
+
+
+def test_attack_obs_rejected_for_oblivious_modes():
+    with pytest.raises(ValueError, match="oblivious or absent"):
+        _stacked_request(
+            failures=va.FailureSpec(byz=attacks.build_config(
+                "sign_flip", 2)),
+            attack_obs={"prev_vote": jnp.zeros((16,), jnp.int8)})
+
+
+def test_attack_obs_required_and_exact_for_adaptive_modes():
+    fails = va.FailureSpec(byz=attacks.build_config("adaptive_flip", 2))
+    with pytest.raises(ValueError, match="must be a dict"):
+        _stacked_request(failures=fails)
+    with pytest.raises(ValueError, match="exactly the keys"):
+        _stacked_request(failures=fails,
+                         attack_obs={"prev_vote": jnp.zeros((16,),
+                                                            jnp.int8),
+                                     "rep": jnp.zeros((4,))})
+    with pytest.raises(ValueError, match=r"shape \(16,\)"):
+        _stacked_request(failures=fails,
+                         attack_obs={"prev_vote": jnp.zeros((8,),
+                                                            jnp.int8)})
+    # the channel slice AttackState builds passes as-is
+    st = attacks.AttackState.init(16, 4)
+    req = _stacked_request(failures=fails, attack_obs=st.observation(
+        "vote"))
+    assert set(req.attack_obs) == {"prev_vote"}
+    # leaf form has no broadcast-vote observation channel
+    with pytest.raises(ValueError, match="stacked or streamed"):
+        va.VoteRequest(payload=jnp.ones((16,)), form="leaf",
+                       failures=fails,
+                       attack_obs=st.observation("vote"))
+
+
+def test_attack_obs_rep_covers_all_logical_voters():
+    fails = va.FailureSpec(byz=attacks.build_config("reputation", 2))
+    with pytest.raises(ValueError, match="every logical voter id"):
+        _stacked_request(failures=fails,
+                         attack_obs={"rep": jnp.zeros((2,), jnp.float32)})
+    _stacked_request(failures=fails,
+                     attack_obs={"rep": jnp.zeros((4,), jnp.float32)})
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: determinism + the defense-aware degradation gate
+# ---------------------------------------------------------------------------
+
+
+def _adaptive_spec(name, mode, observe, **kw):
+    kw.setdefault("strategy", VoteStrategy.ALLGATHER_1BIT)
+    if kw.get("codec") == "weighted_vote":
+        pass
+    return ScenarioSpec(name, n_workers=8, n_steps=5, dim=24,
+                        adversary=AdversarySpec(mode, 0.375,
+                                                observe=observe), **kw)
+
+
+@pytest.mark.parametrize("mode,observe,codec", [
+    ("adaptive_flip", "vote", "sign1bit"),
+    ("low_margin", "margin", "sign1bit"),
+    ("reputation", "reputation", "weighted_vote"),
+])
+def test_adaptive_runs_are_deterministic(mode, observe, codec):
+    spec = _adaptive_spec(f"det/{mode}", mode, observe, codec=codec)
+    t1 = ScenarioRunner(spec, backend="virtual").run()
+    t2 = ScenarioRunner(spec, backend="virtual").run()
+    assert t1.digest == t2.digest
+    # the adversary acted at SOME step (reputation oscillates honest/
+    # strike, so the last step alone may be in the rebuild half)
+    assert max(s.flip_fraction for s in t1.steps) > 0.0
+
+
+def test_defense_aware_attacker_degrades_weighted_vote():
+    """Acceptance gate: the reputation attacker measurably retains the
+    reliability weight the flip-EMA strips from an oblivious coalition
+    of the same size — the §15 defense-aware claim, asserted."""
+    name, value, derived = bp.defense_degradation(
+        fraction=0.3, n_workers=15, dim=48, n_steps=10)
+    assert name == "breaking/defense_aware_degradation"
+    assert value > 0.5, derived

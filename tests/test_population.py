@@ -234,7 +234,7 @@ def test_streamed_is_chunk_size_invariant():
         n_voters=m, n_coords=n, values=lambda ids, _v=vals: _v[ids])
     outs = []
     for chunk in (1, 9, 64, 65, 1000):
-        v, _, margin = population.streamed_vote(
+        v, _, margin, _ = population.streamed_vote(
             stream, strategy=VoteStrategy.ALLGATHER_1BIT,
             codec="sign1bit", chunk_size=chunk)
         outs.append((np.asarray(v), margin))

@@ -119,3 +119,37 @@ def test_momentum_signum_converges():
     """SIGNUM (beta=0.9, the paper's default) also converges."""
     traj, _ = _run_signsgd(steps=600, momentum=0.9, m_workers=3, lr=2e-2)
     assert traj[-1] < 0.05 * traj[0]
+
+
+def test_vote_failure_bound_monotone_and_limits():
+    """Thm 2 (*) bound shape: worse with alpha, better with M and SNR."""
+    # decreasing in SNR
+    b = theory.vote_failure_bound(np.asarray([0.25, 1.0, 4.0]), 9, 0.2)
+    assert np.all(np.diff(b) < 0)
+    # increasing as the coalition approaches 1/2
+    vals = [theory.vote_failure_bound(np.asarray([1.0]), 9, a)[0]
+            for a in (0.0, 0.1, 0.3, 0.45)]
+    assert np.all(np.diff(vals) > 0)
+    # exact 1/sqrt(M) scaling and the single-honest-worker pin
+    b4 = theory.vote_failure_bound(np.asarray([1.0]), 4, 0.0)[0]
+    b16 = theory.vote_failure_bound(np.asarray([1.0]), 16, 0.0)[0]
+    assert np.isclose(b4 / b16, 2.0)
+    assert theory.vote_failure_bound(np.asarray([1.0]), 1, 0.0)[0] == 1.0
+    # alpha -> 1/2: the bound blows up (vacuous past the breaking point)
+    assert theory.vote_failure_bound(np.asarray([1.0]), 9, 0.499)[0] > 100.0
+
+
+def test_lemma1_monotone_and_critical_continuity():
+    """Lemma 1 bound is non-increasing in SNR, 1/2 at zero, and the two
+    branches meet (value 1/6) at CRITICAL_SNR."""
+    p = theory.lemma1_failure_prob(np.linspace(0.0, 5.0, 401))
+    assert np.all(np.diff(p) <= 1e-12)
+    assert p[0] == 0.5
+    eps = 1e-9
+    lo = theory.lemma1_failure_prob(
+        np.asarray([theory.CRITICAL_SNR - eps]))[0]
+    hi = theory.lemma1_failure_prob(
+        np.asarray([theory.CRITICAL_SNR + eps]))[0]
+    assert abs(lo - hi) < 1e-6
+    assert np.isclose(lo, 1.0 / 6.0)
+    assert theory.lemma1_failure_prob(np.asarray([50.0]))[0] < 1e-3
